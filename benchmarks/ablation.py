@@ -1,0 +1,31 @@
+"""Paper Fig. 2 — ablation: LTFL vs no-prune / no-quant / no-power."""
+from __future__ import annotations
+
+from benchmarks.common import emit, ltfl_with, run_scheme, save_artifact, \
+    small_world
+
+VARIANTS = [
+    ("ltfl", {}),
+    ("ltfl", {"use_prune": False}),
+    ("ltfl", {"use_quant": False}),
+    ("ltfl", {"use_power": False}),
+]
+
+
+def run(rounds: int = 8, devices: int = 8) -> list:
+    ltfl = ltfl_with(devices=devices)
+    model, train, test = small_world()
+    results = []
+    for name, kw in VARIANTS:
+        r = run_scheme(name, rounds, ltfl=ltfl, model=model, train=train,
+                       test=test, scheme_kwargs=kw)
+        results.append(r)
+        emit(f"fig2_ablation/{r['scheme']}", r["us_per_round"],
+             f"acc={r['best_acc']:.3f} delay={r['cum_delay']:.0f}s "
+             f"energy={r['cum_energy']:.1f}J")
+    save_artifact("fig2_ablation", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Paper Fig. 4-6 — channel-quality sweep: fading scale
+varpi in {0.01 (poor), 0.02 (normal), 0.03 (good)} x schemes."""
+from __future__ import annotations
+
+from benchmarks.common import emit, ltfl_with, run_scheme, save_artifact, \
+    small_world
+
+CHANNELS = {"poor": 0.01, "normal": 0.02, "good": 0.03}
+SCHEMES = ["ltfl", "fedsgd", "stc"]
+
+
+def run(rounds: int = 6, devices: int = 8, schemes=None) -> list:
+    model, train, test = small_world()
+    results = []
+    for label, scale in CHANNELS.items():
+        ltfl = ltfl_with(alpha_fading=scale, devices=devices)
+        for s in (schemes or SCHEMES):
+            r = run_scheme(s, rounds, ltfl=ltfl, model=model, train=train,
+                           test=test)
+            r["channel"] = label
+            results.append(r)
+            emit(f"fig4-6_channel/{label}/{s}", r["us_per_round"],
+                 f"acc={r['best_acc']:.3f} delay={r['cum_delay']:.0f}s "
+                 f"energy={r['cum_energy']:.1f}J")
+    save_artifact("fig4-6_channel", results)
+    return results
+
+
+if __name__ == "__main__":
+    run(rounds=20)

@@ -1,0 +1,63 @@
+"""Perf-pass profiling helper: list the top collectives (by ring-wire
+bytes) in a pair's compiled HLO — the 'profile' the hypothesis loop reads,
+since the container has no real TPU timers."""
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+
+def probe(arch: str, shape: str, variant=None, multi_pod=False, top=12):
+    from repro import configs
+    from repro.launch import dryrun_lib, hlo_analysis as ha
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.common import logical_rule_scope
+
+    variant = variant or {}
+    shp = configs.get_shape(shape)
+    arch_cfg = configs.arch_for_shape(configs.get_arch(arch), shp)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    builder = {"train": dryrun_lib.build_train,
+               "prefill": dryrun_lib.build_prefill,
+               "decode": dryrun_lib.build_decode}[shp.mode]
+    with mesh:
+        jf, args, rules, _ = builder(arch_cfg, shp, mesh, variant)
+        with logical_rule_scope(rules, mesh):
+            compiled = jf.lower(*args).compile()
+    txt = compiled.as_text()
+    comps = ha._split_computations(txt)
+    mult = ha._multipliers(comps)
+    ex = ha._executed_computations(comps, mult, txt)
+    rows = []
+    for name, m in ex.items():
+        comp = comps[name]
+        table = {n: ha._shape_bytes(t) for n, t, _, _ in comp.instrs}
+        for n, t, op, rest in comp.instrs:
+            kind = next((c for c in ha._COLLECTIVES
+                         if op == c or op.startswith(c + ".")), None)
+            if kind is None:
+                continue
+            ob = sum(table.get(r, 0) for r in
+                     re.findall(r"%([\w\.\-]+)", rest.split(")")[0])) \
+                or ha._shape_bytes(t)
+            g = ha._group_size(rest)
+            wire = ob * ha._wire_factor(kind, g) * m
+            meta = re.search(r'op_name="([^"]*)"', rest)
+            rows.append((wire, m, kind, t[:40],
+                         (meta.group(1) if meta else "")[-70:]))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total wire GB: {total/1e9:.2f}  -> t_coll {total/50e9*1e3:.0f}ms")
+    for r in rows[:top]:
+        print(f"  {r[0]/1e9:8.2f}GB x{r[1]:5d} {r[2]:18s} {r[3]:40s} {r[4]}")
+    return rows
+
+
+if __name__ == "__main__":
+    import os
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+    arch, shape = sys.argv[1], sys.argv[2]
+    variant = json.loads(sys.argv[3]) if len(sys.argv) > 3 else {}
+    probe(arch, shape, variant)

@@ -1,0 +1,95 @@
+"""Shared harness for the paper-figure benchmarks.
+
+Each benchmark module reproduces one paper table/figure by running the
+edge-mode federated loop (repro.fed) under controlled settings and
+emitting ``name,us_per_call,derived`` CSV rows (plus JSON artifacts under
+artifacts/bench/ for EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.configs.base import LTFLConfig, WirelessConfig
+from repro.configs.ltfl_paper import ResNetConfig
+from repro.data import ArrayDataset, synthetic_cifar
+from repro.fed import ALL_SCHEMES, FedRunner
+from repro.models.resnet import ResNet
+
+ART_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "artifacts", "bench")
+
+
+def small_world(num_train=6000, num_test=1500, width=24):
+    imgs, labels = synthetic_cifar(num_train, seed=0)
+    timgs, tlabels = synthetic_cifar(num_test, seed=1)
+    train = ArrayDataset({"images": imgs, "labels": labels})
+    test = ArrayDataset({"images": timgs, "labels": tlabels})
+    model = ResNet(ResNetConfig(stem_channels=width,
+                                group_channels=(width, width * 2,
+                                                width * 4, width * 4)))
+    return model, train, test
+
+
+def run_scheme(scheme_name: str, rounds: int, *, ltfl: LTFLConfig,
+               model=None, train=None, test=None, non_iid_alpha=0.0,
+               batch_size=48, seed=0, scheme_kwargs=None) -> Dict:
+    if model is None:
+        model, train, test = small_world()
+    params = model.init(jax.random.PRNGKey(seed))
+    scheme = ALL_SCHEMES[scheme_name](**(scheme_kwargs or {}))
+    t0 = time.time()
+    runner = FedRunner(model, params, ltfl, train, test, scheme,
+                       batch_size=batch_size, non_iid_alpha=non_iid_alpha,
+                       seed=seed)
+    hist = runner.run(rounds)
+    wall = time.time() - t0
+    return {
+        "scheme": scheme.name,
+        "rounds": rounds,
+        "wall_seconds": wall,
+        "us_per_round": wall / max(rounds, 1) * 1e6,
+        "history": runner.history_dict(),
+        "final_acc": hist[-1].test_acc,
+        "best_acc": max(h.test_acc for h in hist),
+        "cum_delay": hist[-1].cum_delay,
+        "cum_energy": hist[-1].cum_energy,
+    }
+
+
+def delay_energy_to_acc(history: List[Dict], target_acc: float):
+    """Paper Fig. 3b/3c metric: cumulative delay/energy when the scheme
+    first reaches target accuracy (inf if never)."""
+    for rec in history:
+        if rec["test_acc"] >= target_acc:
+            return rec["cum_delay"], rec["cum_energy"]
+    return float("inf"), float("inf")
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_artifact(name: str, payload) -> str:
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return path
+
+
+def ltfl_with(alpha_fading: Optional[float] = None, devices: int = 10,
+              **kw) -> LTFLConfig:
+    wl = WirelessConfig(**({"fading_scale": alpha_fading}
+                           if alpha_fading else {}))
+    # lr above the paper's 0.05: CPU budget allows few rounds, and all
+    # schemes share the same lr so comparisons are unaffected
+    return LTFLConfig(num_devices=devices, wireless=wl,
+                      learning_rate=kw.pop("learning_rate", 0.15),
+                      bo_iters=kw.pop("bo_iters", 8),
+                      alt_max_iters=kw.pop("alt_max_iters", 3), **kw)

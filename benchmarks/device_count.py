@@ -1,0 +1,30 @@
+"""Paper Fig. 7 — training cost vs number of devices U in {10, 15, 20}."""
+from __future__ import annotations
+
+from benchmarks.common import emit, ltfl_with, run_scheme, save_artifact, \
+    small_world
+
+COUNTS = [10, 15, 20]
+SCHEMES = ["ltfl", "fedsgd"]
+
+
+def run(rounds: int = 5, schemes=None) -> list:
+    # U=20 x ~600 samples needs a larger pool than the default world
+    model, train, test = small_world(num_train=14000)
+    results = []
+    for u in COUNTS:
+        ltfl = ltfl_with(devices=u)
+        for s in (schemes or SCHEMES):
+            r = run_scheme(s, rounds, ltfl=ltfl, model=model, train=train,
+                           test=test)
+            r["devices"] = u
+            results.append(r)
+            emit(f"fig7_devices/U{u}/{s}", r["us_per_round"],
+                 f"acc={r['best_acc']:.3f} delay={r['cum_delay']:.0f}s "
+                 f"energy={r['cum_energy']:.1f}J")
+    save_artifact("fig7_devices", results)
+    return results
+
+
+if __name__ == "__main__":
+    run(rounds=20)

@@ -1,0 +1,68 @@
+"""Roofline table (deliverable (g)): read artifacts/dryrun/*.json and print
+per (arch x shape x mesh) the three roofline terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs usefulness, and memory fit. The dry-run must have
+been run first (python -m repro.launch.dryrun --all [--multi-pod])."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+from benchmarks.common import emit, save_artifact
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "artifacts", "dryrun")
+
+
+def load_records(pattern: str = "*") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR,
+                                              f"{pattern}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def markdown_table(recs: List[Dict], baseline_only: bool = True) -> str:
+    lines = [
+        "| arch | shape | mesh | fits | mem GB | t_comp ms | t_mem ms "
+        "| t_coll ms | dominant | useful |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if baseline_only and r.get("variant"):
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {'Y' if r['fits_hbm'] else 'N'} "
+            f"| {r['bytes_per_device']/1e9:.1f} "
+            f"| {r['t_compute']*1e3:.1f} | {r['t_memory']*1e3:.1f} "
+            f"| {r['t_collective']*1e3:.1f} | {r['bottleneck']} "
+            f"| {r['useful_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def run() -> List[Dict]:
+    recs = load_records()
+    if not recs:
+        print("roofline: no dry-run artifacts found "
+              "(run python -m repro.launch.dryrun --all first)",
+              file=sys.stderr)
+        return []
+    base = [r for r in recs if not r.get("variant")]
+    for r in base:
+        dom_ms = max(r["t_compute"], r["t_memory"], r["t_collective"]) * 1e3
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+             dom_ms * 1e3,
+             f"dom={r['bottleneck']} fits={r['fits_hbm']} "
+             f"useful={r['useful_ratio']:.2f}")
+    save_artifact("roofline_table", {"records": recs,
+                                     "markdown": markdown_table(recs)})
+    print(markdown_table(recs))
+    return recs
+
+
+if __name__ == "__main__":
+    run()

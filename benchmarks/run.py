@@ -1,0 +1,53 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Default budget is CPU-friendly
+(few rounds per figure); pass --full for the EXPERIMENTS.md-scale runs.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="EXPERIMENTS.md-scale rounds (slow on CPU)")
+    ap.add_argument("--only", default="",
+                    help="comma list: ablation,schemes,channel,devices,"
+                         "noniid,controller,kernels,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    rounds = 24 if args.full else 10
+
+    from benchmarks import (
+        ablation,
+        channel_sweep,
+        controller_bench,
+        device_count,
+        kernels_bench,
+        non_iid,
+        roofline,
+        schemes,
+    )
+
+    print("name,us_per_call,derived")
+    if only is None or "kernels" in only:
+        kernels_bench.run()
+    if only is None or "controller" in only:
+        controller_bench.run(devices=30 if args.full else 10)
+    if only is None or "ablation" in only:
+        ablation.run(rounds=rounds)
+    if only is None or "schemes" in only:
+        schemes.run(rounds=rounds)
+    if only is None or "channel" in only:
+        channel_sweep.run(rounds=max(rounds // 2, 3))
+    if only is None or "devices" in only:
+        device_count.run(rounds=max(rounds // 2, 3))
+    if only is None or "noniid" in only:
+        non_iid.run(rounds=max(rounds // 2, 3))
+    if only is None or "roofline" in only:
+        roofline.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Fig. 3 — scheme comparison: convergence / delay / energy for
+LTFL vs FedSGD, SignSGD, FedMP, STC."""
+from __future__ import annotations
+
+from benchmarks.common import (
+    delay_energy_to_acc,
+    emit,
+    ltfl_with,
+    run_scheme,
+    save_artifact,
+    small_world,
+)
+
+SCHEMES = ["ltfl", "fedsgd", "signsgd", "fedmp", "stc"]
+
+
+def run(rounds: int = 8, devices: int = 8, target_acc: float = 0.5) -> list:
+    ltfl = ltfl_with(devices=devices)
+    model, train, test = small_world()
+    results = []
+    for s in SCHEMES:
+        r = run_scheme(s, rounds, ltfl=ltfl, model=model, train=train,
+                       test=test)
+        d2a, e2a = delay_energy_to_acc(r["history"], target_acc)
+        r["delay_to_target"] = d2a
+        r["energy_to_target"] = e2a
+        results.append(r)
+        emit(f"fig3_schemes/{s}", r["us_per_round"],
+             f"acc={r['best_acc']:.3f} cum_delay={r['cum_delay']:.0f}s "
+             f"cum_energy={r['cum_energy']:.1f}J "
+             f"delay_to_{target_acc}={d2a:.0f}s")
+    save_artifact("fig3_schemes", results)
+    return results
+
+
+if __name__ == "__main__":
+    run(rounds=30)

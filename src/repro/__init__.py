@@ -1,0 +1,17 @@
+"""repro — Lightweight Federated Learning (LTFL) over wireless edge networks,
+rebuilt as a production-grade multi-pod JAX framework.
+
+Subpackages:
+  core       the paper's contribution (pruning, quantization, channel,
+             convergence gap, two-stage controller)
+  models     the 10 assigned architectures + the paper's ResNet
+  data       synthetic datasets + federated partitioning
+  optim      SGD / momentum / AdamW
+  checkpoint npz pytree checkpoints
+  fed        federated round engine + baselines (FedSGD/SignSGD/FedMP/STC)
+  kernels    Pallas TPU kernels (quant / prune / block-sparse matmul)
+  launch     production meshes, sharding rules, AOT dry-run, train/serve
+  configs    architecture & shape registry
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,86 @@
+"""npz-based pytree checkpoints.
+
+Each checkpoint is ``<dir>/step_<N>.npz`` holding every leaf under its
+key-path name plus a JSON manifest (treedef + dtypes + metadata). Restore
+rebuilds the exact pytree; with a ``sharding_tree`` it device_puts each
+leaf to its target sharding (multi-host restores reuse the same layout
+metadata the launcher derives from the logical-axis rules).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten_with_names(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = [_SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    if len(set(names)) != len(names):
+        raise ValueError("duplicate key paths in pytree")
+    return names, leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: PyTree,
+         metadata: Optional[Dict[str, Any]] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    names, leaves, _ = _flatten_with_names(tree)
+    # bf16 isn't a native numpy dtype: store as f32, restore() re-casts
+    arrays = {
+        n: (np.asarray(l, dtype=np.float32)
+            if "bfloat16" in str(getattr(l, "dtype", "")) else np.asarray(l))
+        for n, l in zip(names, leaves)
+    }
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **arrays)
+    os.replace(tmp, path)
+    manifest = {
+        "step": step,
+        "names": names,
+        "dtypes": [str(a.dtype) for a in arrays.values()],
+        "metadata": metadata or {},
+    }
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.fullmatch(r"step_(\d+)\.npz", f))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, target: PyTree, step: Optional[int] = None,
+            sharding_tree: Optional[PyTree] = None) -> PyTree:
+    """Restore into the structure of ``target`` (values ignored)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    data = np.load(path)
+    names, leaves, treedef = _flatten_with_names(target)
+    out = []
+    shard_leaves = (jax.tree_util.tree_leaves(sharding_tree)
+                    if sharding_tree is not None else [None] * len(leaves))
+    for name, ref_leaf, shard in zip(names, leaves, shard_leaves):
+        if name not in data:
+            raise KeyError(f"checkpoint missing leaf {name!r}")
+        arr = data[name]
+        if hasattr(ref_leaf, "dtype"):
+            arr = arr.astype(ref_leaf.dtype)
+        out.append(jax.device_put(arr, shard) if shard is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,24 @@
+from repro.core import (
+    aggregation,
+    bayesopt,
+    channel,
+    controller,
+    convergence,
+    delay_energy,
+    pruning,
+    quantization,
+)
+from repro.core.ltfl_step import make_fl_train_step, make_plain_train_step
+
+__all__ = [
+    "aggregation",
+    "bayesopt",
+    "channel",
+    "controller",
+    "convergence",
+    "delay_energy",
+    "pruning",
+    "quantization",
+    "make_fl_train_step",
+    "make_plain_train_step",
+]

@@ -1,0 +1,32 @@
+"""Gradient aggregation under packet loss (paper Eq. 9/14/19).
+
+g^n = sum_u N_u alpha_u Q(g_u) / sum_u N_u alpha_u
+
+If every packet drops (sum alpha = 0) the round contributes a zero update
+(the server keeps the current model), matching the paper's semantics of a
+wasted round.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def aggregate(client_grads: PyTree, weights: jax.Array,
+              alpha: jax.Array) -> PyTree:
+    """client_grads: pytree with leading client axis C on every leaf;
+    weights (C,) = N_u; alpha (C,) in {0, 1} (float ok)."""
+    w = (weights * alpha).astype(jnp.float32)
+    denom = jnp.sum(w)
+    safe = jnp.maximum(denom, 1e-12)
+
+    def leaf(g):
+        wg = jnp.tensordot(w.astype(g.dtype), g, axes=([0], [0]))
+        out = wg / safe.astype(g.dtype)
+        return jnp.where(denom > 0, out, jnp.zeros_like(out))
+
+    return jax.tree_util.tree_map(leaf, client_grads)

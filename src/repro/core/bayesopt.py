@@ -1,0 +1,115 @@
+"""Bayesian optimization for transmission power control (paper Section 5.3).
+
+Gaussian-process surrogate with the paper's RBF kernel (Eq. 52,
+kappa = exp(-||p - p'||^2 / 2) on normalized inputs) and the
+probability-of-improvement acquisition (Eq. 53-56). Pure numpy: the
+controller runs on the edge server, outside the jitted training path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+import numpy as np
+
+
+def _rbf(a: np.ndarray, b: np.ndarray, lengthscale: float) -> np.ndarray:
+    """kappa(x, x') = exp(-||x - x'||^2 / (2 l^2)); paper uses l = 1."""
+    d2 = np.sum(a * a, -1)[:, None] + np.sum(b * b, -1)[None, :] \
+        - 2.0 * a @ b.T
+    return np.exp(-np.maximum(d2, 0.0) / (2.0 * lengthscale ** 2))
+
+
+class GaussianProcess:
+    """Zero-mean GP posterior (Eq. 48-51)."""
+
+    def __init__(self, lengthscale: float = 1.0, jitter: float = 1e-8):
+        self.lengthscale = lengthscale
+        self.jitter = jitter
+        self._x: Optional[np.ndarray] = None
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> None:
+        self._x = np.asarray(x, np.float64)
+        self._y = np.asarray(y, np.float64)
+        k = _rbf(self._x, self._x, self.lengthscale)
+        k[np.diag_indices_from(k)] += self.jitter
+        self._chol = np.linalg.cholesky(k)
+        self._alpha = np.linalg.solve(
+            self._chol.T, np.linalg.solve(self._chol, self._y))
+
+    def predict(self, xq: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Posterior mean (Eq. 50) and variance (Eq. 51) at query points."""
+        kq = _rbf(self._x, np.asarray(xq, np.float64), self.lengthscale)
+        mu = kq.T @ self._alpha
+        v = np.linalg.solve(self._chol, kq)
+        var = np.maximum(1.0 - np.sum(v * v, axis=0), 1e-12)
+        return mu, var
+
+
+def _norm_cdf(x: np.ndarray) -> np.ndarray:
+    """Phi(x) (Eq. 55) via erf; vectorized, no scipy dependency."""
+    from math import erf
+    return np.vectorize(lambda t: 0.5 * (1.0 + erf(t / np.sqrt(2.0))))(x)
+
+
+@dataclass
+class BOResult:
+    x_best: np.ndarray
+    y_best: float
+    history: np.ndarray     # (M,) best-so-far trace
+
+
+def minimize(objective: Callable[[np.ndarray], float],
+             bounds: np.ndarray,
+             iters: int,
+             rng: np.random.Generator,
+             xi: float = 0.01,
+             n_candidates: int = 512,
+             lengthscale: float = 1.0,
+             init_points: int = 4) -> BOResult:
+    """Minimize ``objective`` over a box via GP + PI (Algorithm 1's inner loop).
+
+    bounds: (D, 2) array of [low, high]. Inputs are normalized to [0, 1]^D
+    before entering the kernel; observations are standardized.
+    """
+    bounds = np.asarray(bounds, np.float64)
+    lo, hi = bounds[:, 0], bounds[:, 1]
+    span = np.maximum(hi - lo, 1e-12)
+    d = len(lo)
+
+    def denorm(u):
+        return lo + u * span
+
+    xs = [rng.uniform(0.0, 1.0, size=d) for _ in range(max(init_points, 1))]
+    ys = [float(objective(denorm(u))) for u in xs]
+    gp = GaussianProcess(lengthscale=lengthscale)
+    trace = [min(ys)]
+
+    for _ in range(iters):
+        x_arr = np.stack(xs)
+        y_arr = np.asarray(ys)
+        mu_y, sd_y = float(np.mean(y_arr)), float(np.std(y_arr)) or 1.0
+        gp.fit(x_arr, (y_arr - mu_y) / sd_y)
+
+        best_idx = int(np.argmin(y_arr))
+        y_star = (y_arr[best_idx] - mu_y) / sd_y
+
+        # candidates: global uniform + local perturbations of the incumbent
+        cand = rng.uniform(0.0, 1.0, size=(n_candidates, d))
+        local = np.clip(x_arr[best_idx]
+                        + rng.normal(0.0, 0.1, size=(n_candidates // 4, d)),
+                        0.0, 1.0)
+        cand = np.concatenate([cand, local], axis=0)
+
+        mu, var = gp.predict(cand)
+        sd = np.sqrt(var)
+        # Eq. 53: P(f <= y* + xi) = 1 - Phi((mu - y* - xi)/sd)
+        acq = 1.0 - _norm_cdf((mu - y_star - xi) / sd)
+        x_next = cand[int(np.argmax(acq))]              # Eq. 56
+        xs.append(x_next)
+        ys.append(float(objective(denorm(x_next))))
+        trace.append(min(ys))
+
+    best = int(np.argmin(ys))
+    return BOResult(x_best=denorm(xs[best]), y_best=float(ys[best]),
+                    history=np.asarray(trace))

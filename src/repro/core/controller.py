@@ -1,0 +1,170 @@
+"""Two-stage LTFL controller (paper Section 5, Algorithm 1).
+
+Stage 1 (closed form): Theorem 2 gives the optimal pruning ratio rho*
+(Eq. 40-42), Theorem 3 the optimal quantization level delta* (Eq. 44-46),
+given the current power vector. Stage 2: Bayesian optimization over the
+power vector p (problem P4). The stages alternate until the Gamma gap
+change falls below varrho (Eq. 57).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import LTFLConfig
+from repro.core import bayesopt
+from repro.core.channel import (
+    DeviceChannel,
+    expected_rate,
+    packet_error_rate,
+)
+from repro.core.convergence import gamma as gamma_fn
+from repro.core.delay_energy import (
+    device_round_delay,
+    device_round_energy,
+)
+from repro.core.quantization import payload_bits
+
+_PENALTY = 1e9
+
+
+@dataclass
+class ControlDecision:
+    rho: np.ndarray          # (U,) pruning ratios
+    delta: np.ndarray        # (U,) quantization bits (int)
+    power: np.ndarray        # (U,) transmission powers (W)
+    per: np.ndarray          # (U,) packet error rates at chosen powers
+    gamma: float             # Gamma^n at the decision
+    alternations: int        # outer iterations used
+    gamma_trace: np.ndarray  # Gamma per outer iteration
+
+
+def optimal_rho(ltfl: LTFLConfig, dev: DeviceChannel, payload: float,
+                power: float) -> float:
+    """Theorem 2 (Eq. 40-42)."""
+    w = ltfl.wireless
+    rate = float(expected_rate(w, dev, np.asarray(power)))
+    t_comp = dev.num_samples * w.cycles_per_sample / dev.cpu_hz
+    phi1 = (ltfl.t_max - ltfl.server_delay) / (t_comp + payload / rate)
+    e_comp = (w.k_eff * dev.cpu_hz ** (w.sigma_exp - 1.0)
+              * dev.num_samples * w.cycles_per_sample)
+    phi2 = ltfl.e_max / (e_comp + power * payload / rate)
+    rho = min(ltfl.rho_max, max(0.0, 1.0 - min(phi1, phi2)))
+    return rho
+
+
+def optimal_delta(ltfl: LTFLConfig, dev: DeviceChannel, rho: float,
+                  power: float, num_params: int) -> int:
+    """Theorem 3 (Eq. 44-46)."""
+    w = ltfl.wireless
+    rate = float(expected_rate(w, dev, np.asarray(power)))
+    keep = max(1.0 - rho, 1e-9)
+    t_comp = dev.num_samples * w.cycles_per_sample * keep / dev.cpu_hz
+    phi3 = (ltfl.t_max - ltfl.server_delay - t_comp) * rate / keep
+    e_comp = (w.k_eff * dev.cpu_hz ** (w.sigma_exp - 1.0)
+              * dev.num_samples * w.cycles_per_sample * keep)
+    phi4 = (ltfl.e_max - e_comp) * rate / (power * keep)
+    # Eq. 44 with delta~ = V delta + xi; floor = "min positive integer <= x"
+    v_eff = num_params * keep   # pruned grads are not uploaded (Eq. 32)
+    raw = min((phi3 - ltfl.xi_bits) / v_eff,
+              (phi4 - ltfl.xi_bits) / v_eff,
+              float(ltfl.delta_max))
+    return int(np.clip(np.floor(raw), 1, ltfl.delta_max))
+
+
+def _evaluate(ltfl: LTFLConfig, devices, range_sq_sums, rhos, deltas,
+              powers, num_params: int) -> Tuple[float, bool]:
+    """Gamma^n + feasibility of (38b)/(38c) at the given controls."""
+    w = ltfl.wireless
+    pers = [float(packet_error_rate(w, d, np.asarray(p)))
+            for d, p in zip(devices, powers)]
+    g = gamma_fn(ltfl, range_sq_sums, deltas, rhos, pers,
+                 [d.num_samples for d in devices])
+    feasible = True
+    for dev, rho, delta, p in zip(devices, rhos, deltas, powers):
+        payload = float(payload_bits(num_params, delta, ltfl.xi_bits))
+        t = device_round_delay(w, dev, payload, rho, p) + ltfl.server_delay
+        e = device_round_energy(w, dev, payload, rho, p)
+        if t > ltfl.t_max * (1 + 1e-9) or e > ltfl.e_max * (1 + 1e-9):
+            feasible = False
+            break
+    return g, feasible
+
+
+def solve(ltfl: LTFLConfig, devices: Sequence[DeviceChannel],
+          num_params: int,
+          range_sq_sums: Optional[Sequence[float]] = None,
+          rng: Optional[np.random.Generator] = None,
+          verbose: bool = False) -> ControlDecision:
+    """Algorithm 1: alternate Theorem 2 / Theorem 3 / BO until Eq. 57."""
+    rng = rng or np.random.default_rng(ltfl.seed)
+    u = len(devices)
+    if range_sq_sums is None:
+        # conservative prior for the per-device gradient range mass
+        range_sq_sums = [1e-2 * num_params] * u
+    w = ltfl.wireless
+
+    powers = np.full(u, 0.5 * (w.p_min + w.p_max))
+    deltas = np.full(u, ltfl.delta_max, dtype=np.int64)
+    prev_gamma = np.inf
+    trace = []
+
+    for k in range(ltfl.alt_max_iters):
+        # --- Stage 1a: Theorem 2 ---------------------------------------- #
+        rhos = np.array([
+            optimal_rho(ltfl, dev,
+                        float(payload_bits(num_params, deltas[i],
+                                           ltfl.xi_bits)),
+                        float(powers[i]))
+            for i, dev in enumerate(devices)])
+        # --- Stage 1b: Theorem 3 ---------------------------------------- #
+        deltas = np.array([
+            optimal_delta(ltfl, dev, float(rhos[i]), float(powers[i]),
+                          num_params)
+            for i, dev in enumerate(devices)])
+
+        # --- Stage 2: Bayesian optimization over p (problem P4) --------- #
+        def objective(p_vec: np.ndarray) -> float:
+            g, feasible = _evaluate(ltfl, devices, range_sq_sums, rhos,
+                                    deltas, p_vec, num_params)
+            return g if feasible else g + _PENALTY
+
+        bounds = np.tile([[w.p_min, w.p_max]], (u, 1))
+        res = bayesopt.minimize(objective, bounds, iters=ltfl.bo_iters,
+                                rng=rng, xi=ltfl.bo_xi)
+        powers = res.x_best
+
+        g, _ = _evaluate(ltfl, devices, range_sq_sums, rhos, deltas, powers,
+                         num_params)
+        trace.append(g)
+        if verbose:
+            print(f"[controller] k={k} gamma={g:.6g} "
+                  f"rho_mean={rhos.mean():.3f} delta_mean={deltas.mean():.2f}")
+        if abs(prev_gamma - g) <= ltfl.alt_tol:          # Eq. 57
+            prev_gamma = g
+            break
+        prev_gamma = g
+
+    # final Stage-1 pass at the chosen powers: Theorems 2/3 construct
+    # (rho*, delta*) to satisfy (38b)/(38c) GIVEN p, so re-deriving them
+    # once more guarantees the returned decision is feasible even when the
+    # loop exits right after a power update.
+    rhos = np.array([
+        optimal_rho(ltfl, dev,
+                    float(payload_bits(num_params, deltas[i], ltfl.xi_bits)),
+                    float(powers[i]))
+        for i, dev in enumerate(devices)])
+    deltas = np.array([
+        optimal_delta(ltfl, dev, float(rhos[i]), float(powers[i]),
+                      num_params)
+        for i, dev in enumerate(devices)])
+    final_gamma, _ = _evaluate(ltfl, devices, range_sq_sums, rhos, deltas,
+                               powers, num_params)
+
+    pers = np.array([float(packet_error_rate(w, d, np.asarray(p)))
+                     for d, p in zip(devices, powers)])
+    return ControlDecision(rho=rhos, delta=deltas, power=powers, per=pers,
+                           gamma=float(final_gamma), alternations=k + 1,
+                           gamma_trace=np.asarray(trace))

@@ -1,0 +1,67 @@
+"""Convergence-gap analytics (paper Theorem 1, Eq. 28-30).
+
+Gamma^n (Eq. 29) decomposes the per-round convergence gap into the
+quantization, pruning and transmission error terms; the controller
+minimizes it subject to the delay/energy constraints. ``gap_terms``
+returns the three addends separately so benchmarks and tests can attribute
+the gap to its sources.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+from repro.configs.base import LTFLConfig
+
+
+@dataclass(frozen=True)
+class GapTerms:
+    quantization: float   # 3 * sum_u range_sq / (4 (2^delta - 1)^2)
+    pruning: float        # 3 L^2 D^2 * sum_u rho_u
+    transmission: float   # 12 v1 / N * sum_u N_u q_u
+    scale: float          # 1 / (1 - 12 v2)
+
+    @property
+    def total(self) -> float:
+        return self.scale * (self.quantization + self.pruning
+                             + self.transmission)
+
+
+def gap_terms(ltfl: LTFLConfig,
+              range_sq_sums: Sequence[float],
+              deltas: Sequence[float],
+              rhos: Sequence[float],
+              pers: Sequence[float],
+              num_samples: Sequence[int]) -> GapTerms:
+    """Evaluate Eq. 29 for one round.
+
+    range_sq_sums[u] = sum_v (g_max - g_min)^2 for device u's gradient.
+    """
+    deltas = np.asarray(deltas, dtype=np.float64)
+    steps = np.maximum(2.0 ** deltas - 1.0, 1e-12)
+    quant = 3.0 * float(np.sum(np.asarray(range_sq_sums)
+                               / (4.0 * steps * steps)))
+    prune = 3.0 * ltfl.lipschitz ** 2 * ltfl.d_sq * float(np.sum(rhos))
+    n_total = float(np.sum(num_samples))
+    trans = 12.0 * ltfl.v1 / n_total * float(
+        np.sum(np.asarray(num_samples) * np.asarray(pers)))
+    scale = 1.0 / (1.0 - 12.0 * ltfl.v2)
+    return GapTerms(quant, prune, trans, scale)
+
+
+def gamma(ltfl: LTFLConfig, range_sq_sums, deltas, rhos, pers,
+          num_samples) -> float:
+    """Gamma^n (Eq. 29)."""
+    return gap_terms(ltfl, range_sq_sums, deltas, rhos, pers,
+                     num_samples).total
+
+
+def theorem1_bound(ltfl: LTFLConfig, f0_minus_fstar: float,
+                   gammas: Sequence[float]) -> float:
+    """Eq. 28: average gradient-norm bound after len(gammas) rounds."""
+    omega_plus_1 = max(len(gammas), 1)
+    head = (2.0 * ltfl.lipschitz * f0_minus_fstar
+            / ((1.0 - 12.0 * ltfl.v2) * omega_plus_1))
+    return head + float(np.mean(gammas)) if gammas else head

@@ -1,0 +1,60 @@
+"""Per-round delay and energy models (paper Section 4.1-4.2, Eq. 31-37)."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.configs.base import LTFLConfig, WirelessConfig
+from repro.core.channel import DeviceChannel, expected_rate
+
+
+def local_train_delay(cfg: WirelessConfig, dev: DeviceChannel,
+                      rho: float) -> float:
+    """Eq. 31: T_lt = N_u c0 (1 - rho) / f_u."""
+    return dev.num_samples * cfg.cycles_per_sample * (1.0 - rho) / dev.cpu_hz
+
+
+def upload_delay(cfg: WirelessConfig, dev: DeviceChannel, payload_bits: float,
+                 rho: float, power: float) -> float:
+    """Eq. 32: T_lu = delta~ (1 - rho) / R(p)."""
+    rate = float(expected_rate(cfg, dev, np.asarray(power)))
+    return payload_bits * (1.0 - rho) / max(rate, 1e-9)
+
+
+def local_train_energy(cfg: WirelessConfig, dev: DeviceChannel,
+                       rho: float) -> float:
+    """Eq. 35: E_lt = k f^sigma T_lt = k f^(sigma-1) N c0 (1 - rho)."""
+    return (cfg.k_eff * dev.cpu_hz ** (cfg.sigma_exp - 1.0)
+            * dev.num_samples * cfg.cycles_per_sample * (1.0 - rho))
+
+
+def upload_energy(cfg: WirelessConfig, dev: DeviceChannel, payload_bits: float,
+                  rho: float, power: float) -> float:
+    """Eq. 36: E_lu = p * T_lu."""
+    return power * upload_delay(cfg, dev, payload_bits, rho, power)
+
+
+def device_round_delay(cfg: WirelessConfig, dev: DeviceChannel,
+                       payload_bits: float, rho: float,
+                       power: float) -> float:
+    return (local_train_delay(cfg, dev, rho)
+            + upload_delay(cfg, dev, payload_bits, rho, power))
+
+
+def device_round_energy(cfg: WirelessConfig, dev: DeviceChannel,
+                        payload_bits: float, rho: float,
+                        power: float) -> float:
+    """Eq. 37: E = E_lt + E_lu."""
+    return (local_train_energy(cfg, dev, rho)
+            + upload_energy(cfg, dev, payload_bits, rho, power))
+
+
+def round_delay(ltfl: LTFLConfig, devices: Sequence[DeviceChannel],
+                payload_bits: Sequence[float], rhos: Sequence[float],
+                powers: Sequence[float]) -> float:
+    """Eq. 34: T = max_u(T_lt + T_lu) + s (stragglers gate the round)."""
+    w = ltfl.wireless
+    per_dev = [device_round_delay(w, d, b, r, p)
+               for d, b, r, p in zip(devices, payload_bits, rhos, powers)]
+    return max(per_dev) + ltfl.server_delay

@@ -1,0 +1,137 @@
+"""The jit-able distributed LTFL federated train step.
+
+This is the datacenter-scale realization of the paper's round (Eq. 19-20):
+FL clients are laid out along mesh axes (DESIGN.md section 3); the batch
+carries an explicit leading client axis C; per-client gradients are
+computed with vmap(grad), pruned (block-structured, Lemma-2-compatible),
+stochastically quantized (Lemma 1), dropped per the packet-error Bernoulli
+(Eq. 4), and aggregated with sample-count weights (Eq. 19). The aggregation
+lowers to the cross-client all-reduce — the "uplink" of the TPU mapping.
+
+``controls`` come from the Algorithm-1 controller (repro.core.controller):
+    rho        (C,) pruning ratios
+    delta      (C,) quantization bit-widths
+    drop_prob  (C,) packet error rates q_u(p_u)
+    weights    (C,) sample counts N_u
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import aggregate
+from repro.core.pruning import prune_pytree
+from repro.core.quantization import (
+    dequantize_int8,
+    quantize_int8_pytree,
+    quantize_pytree,
+    range_sq_sum,
+)
+from repro.optim import Optimizer, apply_updates, global_norm
+
+PyTree = Any
+
+
+def make_fl_train_step(model, optimizer: Optimizer, n_clients: int,
+                       *, prune_block: int = 128,
+                       quantize: bool = True,
+                       prune: bool = True,
+                       simulate_drops: bool = True,
+                       param_shardings=None,
+                       int8_collective: bool = False,
+                       gather_shardings=None
+                       ) -> Callable:
+    """Build step(params, opt_state, batch, controls, key)
+    -> (params, opt_state, metrics).
+
+    batch leaves carry a leading client axis C == n_clients.
+    The quantize/prune/simulate_drops switches exist for the paper's
+    ablation (Fig. 2) and for baselines. ``param_shardings`` (a pytree of
+    NamedShardings shaped like the STACKED (n_clients, ...) grads) pins the
+    per-client gradient tree — and, via propagation, the prune/quantize
+    temporaries — to the parameter layout; without it GSPMD may replicate
+    multi-GB masks and random bits on every device.
+    """
+
+    def constrain_stacked(tree):
+        """Pin the (C, ...) per-client grad tree to its shardings — applied
+        OUTSIDE the vmap so the client axis keeps its mesh placement."""
+        if param_shardings is None:
+            return tree
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, tree, param_shardings)
+
+    def client_grad(params, cbatch, rho):
+        if prune:
+            pruned, masks = prune_pytree(params, rho, block=prune_block)
+        else:
+            pruned, masks = params, None
+        loss, g = jax.value_and_grad(model.loss)(pruned, cbatch)
+        if prune:
+            # pruned coordinates are neither trained nor uploaded (Eq. 32)
+            g = jax.tree_util.tree_map(
+                lambda gi, m: gi * m.astype(gi.dtype), g, masks)
+        rsq = range_sq_sum(g)
+        return g, loss, rsq
+
+    def step(params: PyTree, opt_state: PyTree, batch: PyTree,
+             controls: Dict[str, jax.Array], key: jax.Array
+             ) -> Tuple[PyTree, PyTree, Dict[str, jax.Array]]:
+        keys = jax.random.split(key, n_clients + 1)
+        grads, losses, rsqs = jax.vmap(
+            client_grad, in_axes=(None, 0, 0))(
+            params, batch, controls["rho"])
+        grads = constrain_stacked(grads)
+        if quantize and int8_collective:
+            # beyond-paper wire format: move int8 levels across the client
+            # axis (all-gather of 1 byte/coord) instead of letting XLA
+            # all-reduce bf16 partial sums (2 bytes/coord x 2 passes);
+            # dequant + weighted mean happen after the gather, locally.
+            levels, scales = jax.vmap(quantize_int8_pytree)(
+                grads, keys[:n_clients])
+            if gather_shardings is not None:
+                levels = jax.tree_util.tree_map(
+                    jax.lax.with_sharding_constraint, levels,
+                    gather_shardings)
+            grads = jax.tree_util.tree_map(
+                lambda lv, sc: dequantize_int8(
+                    lv, sc.reshape((n_clients,) + (1,) * (lv.ndim - 1))),
+                levels, scales)
+        elif quantize:
+            grads = jax.vmap(quantize_pytree)(grads, controls["delta"],
+                                              keys[:n_clients])
+            grads = constrain_stacked(grads)
+
+        if simulate_drops:
+            alpha = (jax.random.uniform(keys[-1], (n_clients,))
+                     >= controls["drop_prob"]).astype(jnp.float32)   # Eq. 4
+        else:
+            alpha = jnp.ones((n_clients,), jnp.float32)
+
+        g = aggregate(grads, controls["weights"], alpha)             # Eq. 19
+        updates, opt_state = optimizer.update(g, opt_state, params)
+        params = apply_updates(params, updates)                      # Eq. 20
+        metrics = {
+            "loss": jnp.mean(losses),
+            "grad_norm": global_norm(g),
+            "clients_received": jnp.sum(alpha),
+            "range_sq_mean": jnp.mean(rsqs),
+        }
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_plain_train_step(model, optimizer: Optimizer) -> Callable:
+    """Non-federated reference step (single global batch) — used by the
+    FedSGD-style baselines and as the no-LTFL control in benchmarks."""
+
+    def step(params, opt_state, batch, key):
+        loss, g = jax.value_and_grad(model.loss)(params, batch)
+        updates, opt_state = optimizer.update(g, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss, "grad_norm": global_norm(g)}
+
+    return step

@@ -1,0 +1,153 @@
+"""Model pruning (paper Eq. 11-13, Lemma 2).
+
+Two granularities:
+
+* ``magnitude_prune`` — the paper's unstructured importance I_v = |w_v|
+  (Eq. 12): zero the smallest rho-fraction of entries. This is what the
+  edge-mode (paper-scale) experiments use.
+
+* ``block_prune`` — the TPU adaptation (DESIGN.md section 3): importance is
+  the L2 norm of 128x128 parameter tiles; whole tiles are zeroed so the
+  sparsity is MXU-structured and the Pallas block-sparse matmul can skip
+  them. Lemma 2's bound ||w - w_hat||^2 <= rho ||w||^2 holds at tile
+  granularity for the same reason it holds per element (we zero the
+  smallest-norm rho-fraction of mass carriers).
+
+Both return (pruned, mask) and accept a traced rho.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+BLOCK = 128
+
+
+def importance(w: jax.Array) -> jax.Array:
+    """Eq. 12 importance: |w|."""
+    return jnp.abs(w)
+
+
+def _rank_mask(a: jax.Array, rho: jax.Array) -> jax.Array:
+    """True for entries NOT among the floor(rho * n) smallest of |a|.
+
+    Rank-based (two argsorts) so ties are broken deterministically and
+    exactly floor(rho*n) entries prune — a quantile threshold with strict
+    comparison would zero *every* entry of a constant tensor.
+    """
+    flat = a.reshape(-1)
+    n = flat.size
+    k = jnp.floor(jnp.clip(rho, 0.0, 1.0) * n).astype(jnp.int32)
+    ranks = jnp.argsort(jnp.argsort(flat))        # ascending rank of each entry
+    return (ranks >= k).reshape(a.shape)
+
+
+def magnitude_prune(w: jax.Array, rho: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Zero the smallest-|w| rho-fraction of entries (Eq. 12-13).
+    rho may be traced."""
+    mask = _rank_mask(jnp.abs(w.astype(jnp.float32)), rho)
+    return w * mask.astype(w.dtype), mask
+
+
+def magnitude_prune_pytree(w: PyTree, rho: jax.Array) -> Tuple[PyTree, PyTree]:
+    """Unstructured (paper-faithful) pruning; 1-D leaves exempt (see
+    ``prune_pytree``)."""
+    def leaf(x):
+        if x.ndim < 2:
+            return x, jnp.ones(x.shape, bool)
+        return magnitude_prune(x, rho)
+
+    pruned_and_masks = jax.tree_util.tree_map(
+        leaf, w, is_leaf=lambda x: isinstance(x, jax.Array))
+    pruned = jax.tree_util.tree_map(lambda t: t[0], pruned_and_masks,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    masks = jax.tree_util.tree_map(lambda t: t[1], pruned_and_masks,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return pruned, masks
+
+
+# --------------------------------------------------------------------------- #
+# Block-structured pruning (TPU-native)
+# --------------------------------------------------------------------------- #
+def _tile_view(w: jax.Array, block: int):
+    """Reshape the last two dims into (tiles_r, block, tiles_c, block).
+
+    Requires divisibility; callers fall back to magnitude pruning for
+    tensors whose trailing dims don't tile (biases, norms, small tables).
+    """
+    r, c = w.shape[-2], w.shape[-1]
+    lead = w.shape[:-2]
+    return w.reshape(*lead, r // block, block, c // block, block)
+
+
+def tileable(w: jax.Array, block: int = BLOCK) -> bool:
+    return (w.ndim >= 2 and w.shape[-2] % block == 0
+            and w.shape[-1] % block == 0)
+
+
+def block_importance(w: jax.Array, block: int = BLOCK) -> jax.Array:
+    """L2 norm per (block x block) tile of the last two dims."""
+    t = _tile_view(w.astype(jnp.float32), block)
+    return jnp.sqrt(jnp.sum(t * t, axis=(-3, -1)))     # (..., tr, tc)
+
+
+def block_prune(w: jax.Array, rho: jax.Array, block: int = BLOCK
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Zero the smallest-L2 rho-fraction of tiles. Returns (pruned, tile_mask).
+
+    tile_mask has shape (..., rows/block, cols/block).
+    """
+    imp = block_importance(w, block)
+    tile_mask = _rank_mask(imp, rho)                   # (..., tr, tc)
+    t = _tile_view(w, block)
+    m = tile_mask[..., :, None, :, None].astype(w.dtype)
+    pruned = (t * m).reshape(w.shape)
+    return pruned, tile_mask
+
+
+def prune_pytree(w: PyTree, rho: jax.Array, block: int = BLOCK
+                 ) -> Tuple[PyTree, PyTree]:
+    """Block-prune tileable leaves; magnitude-prune other >=2-D leaves;
+    EXEMPT 1-D leaves (norm scales, biases) — pruning them destroys the
+    network for negligible savings, and no pruning system touches them.
+
+    Returns (pruned_tree, element_mask_tree) where masks are element-level
+    (tile masks are expanded) so they can gate gradients uniformly.
+    """
+    def leaf(x):
+        if x.ndim < 2:
+            return x, jnp.ones(x.shape, bool)
+        if tileable(x, block):
+            imp = block_importance(x, block)
+            tile_mask = _rank_mask(imp, rho)
+            t = _tile_view(x, block)
+            m = tile_mask[..., :, None, :, None]
+            pruned = (t * m.astype(x.dtype)).reshape(x.shape)
+            emask = jnp.broadcast_to(m, t.shape).reshape(x.shape)
+            return pruned, emask
+        return magnitude_prune(x, rho)
+
+    out = jax.tree_util.tree_map(leaf, w)
+    pruned = jax.tree_util.tree_map(lambda t: t[0], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    masks = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return pruned, masks
+
+
+def pruning_error_bound(rho: jax.Array, d_sq: float) -> jax.Array:
+    """Lemma 2:  E||w - w_hat||^2 <= rho * D^2."""
+    return rho * d_sq
+
+
+def actual_pruning_error(w: PyTree, pruned: PyTree) -> jax.Array:
+    """||w - w_hat||^2 (used by property tests against Lemma 2)."""
+    def leaf(a, b):
+        d = (a - b).astype(jnp.float32)
+        return jnp.sum(d * d)
+    return sum(jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(leaf, w, pruned)))

@@ -1,0 +1,132 @@
+"""Stochastic gradient quantization (paper Eq. 16-18, Lemma 1).
+
+The magnitude range [g_min, g_max] of each tensor is divided uniformly into
+2^delta - 1 steps; each |g_v| rounds stochastically to a neighbouring level
+(probability proportional to proximity, Eq. 17), making the quantizer
+unbiased (Lemma 1: E[Q(g)] = g). Signs travel separately; the per-tensor
+overhead (min, max, signs) is the paper's xi bits (Eq. 18).
+
+``quantize``/``dequantize`` expose the integer-level representation (used
+by the quantized-collective optimization); ``quantize_dequantize`` is the
+fused form used inside train steps.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class QTensor(NamedTuple):
+    """Quantized tensor: integer levels + range metadata."""
+
+    levels: jax.Array      # same shape as input; integer levels in [0, 2^b-1]
+    sign: jax.Array        # bool: g >= 0
+    lo: jax.Array          # scalar f32: min |g|
+    hi: jax.Array          # scalar f32: max |g|
+    bits: jax.Array        # scalar: quantization level delta (may be traced)
+
+
+def _levels(bits: jax.Array) -> jax.Array:
+    return jnp.round(2.0 ** jnp.asarray(bits, jnp.float32)) - 1.0
+
+
+def quantize(g: jax.Array, bits: jax.Array, key: jax.Array) -> QTensor:
+    """Stochastic uniform quantization of one tensor (Eq. 16-17)."""
+    gf = g.astype(jnp.float32)
+    a = jnp.abs(gf)
+    lo = jnp.min(a)
+    hi = jnp.max(a)
+    n = _levels(bits)                                   # 2^delta - 1 steps
+    scale = (hi - lo) / n
+    scale = jnp.where(scale > 0, scale, 1.0)
+    t = (a - lo) / scale                                # continuous level
+    t_floor = jnp.floor(t)
+    frac = t - t_floor
+    up = jax.random.uniform(key, g.shape) < frac        # Eq. 17 probabilities
+    level = jnp.clip(t_floor + up.astype(jnp.float32), 0.0, n)
+    return QTensor(levels=level, sign=gf >= 0, lo=lo, hi=hi,
+                   bits=jnp.asarray(bits))
+
+
+def dequantize(q: QTensor) -> jax.Array:
+    n = _levels(q.bits)
+    scale = (q.hi - q.lo) / n
+    scale = jnp.where(scale > 0, scale, 1.0)
+    mag = q.lo + q.levels * scale
+    return jnp.where(q.sign, mag, -mag)
+
+
+def quantize_dequantize(g: jax.Array, bits: jax.Array,
+                        key: jax.Array) -> jax.Array:
+    """Fused Q(g) in the original dtype (the train-step path)."""
+    return dequantize(quantize(g, bits, key)).astype(g.dtype)
+
+
+def quantize_pytree(g: PyTree, bits: jax.Array, key: jax.Array) -> PyTree:
+    """Apply quantize_dequantize leaf-wise with independent keys."""
+    leaves, treedef = jax.tree_util.tree_flatten(g)
+    keys = jax.random.split(key, len(leaves))
+    out = [quantize_dequantize(l, bits, k) for l, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------------- #
+# Analytic quantities used by the controller / convergence gap
+# --------------------------------------------------------------------------- #
+def quant_error_bound(range_sq_sum: jax.Array, bits: jax.Array) -> jax.Array:
+    """Lemma 1 upper bound:  sum_v (hi - lo)^2 / (4 (2^delta - 1)^2)."""
+    n = _levels(bits)
+    return range_sq_sum / (4.0 * n * n)
+
+
+def payload_bits(num_params: jax.Array, bits: jax.Array,
+                 xi_bits: int) -> jax.Array:
+    """Eq. 18: total uplink bits  delta~ = V * delta + xi."""
+    return num_params * jnp.asarray(bits, jnp.float32) + xi_bits
+
+
+# --------------------------------------------------------------------------- #
+# Symmetric int8 wire format (beyond-paper: quantized collectives)
+# --------------------------------------------------------------------------- #
+def quantize_int8(g: jax.Array, key: jax.Array):
+    """Symmetric stochastic int8: q = sr(g / scale), scale = max|g|/127.
+
+    This is the wire format for the quantized cross-client all-gather: the
+    collective moves 1 byte/coordinate instead of bf16 all-reduce partials.
+    Still unbiased (stochastic rounding).
+    """
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)) / 127.0, 1e-30)
+    t = gf / scale
+    t_floor = jnp.floor(t)
+    up = jax.random.uniform(key, g.shape) < (t - t_floor)
+    lv = jnp.clip(t_floor + up.astype(jnp.float32), -127, 127)
+    return lv.astype(jnp.int8), scale
+
+
+def dequantize_int8(levels: jax.Array, scale: jax.Array,
+                    dtype=jnp.bfloat16) -> jax.Array:
+    return (levels.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantize_int8_pytree(g: PyTree, key: jax.Array):
+    leaves, treedef = jax.tree_util.tree_flatten(g)
+    keys = jax.random.split(key, len(leaves))
+    out = [quantize_int8(l, k) for l, k in zip(leaves, keys)]
+    levels = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    scales = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return levels, scales
+
+
+def range_sq_sum(g: PyTree) -> jax.Array:
+    """sum over components of (per-tensor magnitude range)^2 — the
+    Sigma_v (g_max - g_min)^2 term of Eq. (26)/(29), with per-tensor ranges."""
+    def leaf(x):
+        a = jnp.abs(x.astype(jnp.float32))
+        r = jnp.max(a) - jnp.min(a)
+        return r * r * float(x.size)   # float: leaves can exceed int32 range
+    return sum(jax.tree_util.tree_leaves(jax.tree_util.tree_map(leaf, g)))

@@ -1,0 +1,16 @@
+from repro.data.partition import (
+    class_histogram,
+    dirichlet_partition,
+    iid_partition,
+)
+from repro.data.pipeline import ArrayDataset
+from repro.data.synthetic import synthetic_cifar, synthetic_lm
+
+__all__ = [
+    "ArrayDataset",
+    "synthetic_cifar",
+    "synthetic_lm",
+    "iid_partition",
+    "dirichlet_partition",
+    "class_histogram",
+]

@@ -1,0 +1,35 @@
+"""Minimal batching pipeline for the federated loops and examples."""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+class ArrayDataset:
+    """Dict-of-arrays dataset with shuffled minibatch iteration."""
+
+    def __init__(self, arrays: Dict[str, np.ndarray]):
+        sizes = {k: len(v) for k, v in arrays.items()}
+        if len(set(sizes.values())) != 1:
+            raise ValueError(f"ragged dataset: {sizes}")
+        self.arrays = arrays
+        self.size = next(iter(sizes.values()))
+
+    def subset(self, idx: np.ndarray) -> "ArrayDataset":
+        return ArrayDataset({k: v[idx] for k, v in self.arrays.items()})
+
+    def batch(self, batch_size: int, rng: np.random.Generator
+              ) -> Dict[str, np.ndarray]:
+        """One random batch (with replacement if batch > size)."""
+        replace = batch_size > self.size
+        idx = rng.choice(self.size, size=batch_size, replace=replace)
+        return {k: v[idx] for k, v in self.arrays.items()}
+
+    def epochs(self, batch_size: int, rng: np.random.Generator
+               ) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            perm = rng.permutation(self.size)
+            for ofs in range(0, self.size - batch_size + 1, batch_size):
+                idx = perm[ofs:ofs + batch_size]
+                yield {k: v[idx] for k, v in self.arrays.items()}

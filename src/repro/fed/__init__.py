@@ -1,0 +1,29 @@
+from repro.fed.rounds import FedRunner, RoundRecord
+from repro.fed.schemes import (
+    BaseScheme,
+    FedMPScheme,
+    FedSGDScheme,
+    LTFLScheme,
+    SignSGDScheme,
+    STCScheme,
+)
+
+ALL_SCHEMES = {
+    "ltfl": LTFLScheme,
+    "fedsgd": FedSGDScheme,
+    "signsgd": SignSGDScheme,
+    "fedmp": FedMPScheme,
+    "stc": STCScheme,
+}
+
+__all__ = [
+    "FedRunner",
+    "RoundRecord",
+    "BaseScheme",
+    "LTFLScheme",
+    "FedSGDScheme",
+    "SignSGDScheme",
+    "FedMPScheme",
+    "STCScheme",
+    "ALL_SCHEMES",
+]

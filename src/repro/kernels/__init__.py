@@ -1,0 +1,13 @@
+from repro.kernels import ops, ref
+from repro.kernels.block_prune import apply_block_mask, block_norms
+from repro.kernels.block_sparse_matmul import block_sparse_matmul
+from repro.kernels.stochastic_quant import stochastic_quant
+
+__all__ = [
+    "ops",
+    "ref",
+    "stochastic_quant",
+    "block_norms",
+    "apply_block_mask",
+    "block_sparse_matmul",
+]

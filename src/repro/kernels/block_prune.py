@@ -1,0 +1,70 @@
+"""Pallas TPU kernels for block-structured pruning (DESIGN.md section 3).
+
+Two kernels:
+  * ``block_norms`` — per-tile L2 importance (the block analogue of the
+    paper's Eq. 12 |w| importance): one grid step per (bm, bn) tile,
+    reducing in VMEM and writing a single f32 per tile.
+  * ``apply_block_mask`` — streams w through VMEM multiplying each tile by
+    its {0,1} mask entry (the pruning application, Eq. 13).
+
+The global tile *ranking* (choosing which tiles die) happens outside on the
+tiny (M/bm x N/bn) norm matrix — that part is control logic, not a
+bandwidth problem.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = (128, 128)
+
+
+def _norms_kernel(w_ref, out_ref):
+    w = w_ref[...].astype(jnp.float32)
+    out_ref[0, 0] = jnp.sqrt(jnp.sum(w * w))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def block_norms(w: jax.Array, block=DEFAULT_BLOCK,
+                interpret: bool = True) -> jax.Array:
+    m, n = w.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    assert m % bm == 0 and n % bn == 0, (w.shape, block)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _norms_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(grid, jnp.float32),
+        interpret=interpret,
+    )(w)
+
+
+def _mask_kernel(w_ref, mask_ref, out_ref):
+    out_ref[...] = w_ref[...] * mask_ref[0, 0].astype(w_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def apply_block_mask(w: jax.Array, mask: jax.Array, block=DEFAULT_BLOCK,
+                     interpret: bool = True) -> jax.Array:
+    """mask (M/bm, N/bn) in {0,1}; zeroes masked tiles of w."""
+    m, n = w.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    assert m % bm == 0 and n % bn == 0
+    assert mask.shape == (m // bm, n // bn), (mask.shape, (m // bm, n // bn))
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _mask_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
+        interpret=interpret,
+    )(w, mask.astype(jnp.float32))

@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: fused stochastic quantize-dequantize (paper Eq. 16-17).
+
+The gradient tensor streams HBM -> VMEM in (block_m, block_n) tiles; the
+kernel performs the |g| -> level -> stochastic-round -> dequant chain in
+registers, writing the quantized-value tensor back. The per-tensor range
+(lo, hi) rides along as a (1, 1) block in SMEM-like fashion. Randomness is
+supplied as a uniform tensor generated outside so interpret-mode (CPU)
+execution is bit-identical to the TPU lowering fed the same bits; on real
+TPU the wrapper can swap in pltpu PRNG without touching the kernel body.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = (256, 256)
+
+
+def _quant_kernel(g_ref, rand_ref, range_ref, out_ref, *, n_levels: float):
+    g = g_ref[...].astype(jnp.float32)
+    rand = rand_ref[...].astype(jnp.float32)
+    lo = range_ref[0, 0]
+    hi = range_ref[0, 1]
+    scale = (hi - lo) / n_levels
+    scale = jnp.where(scale > 0, scale, 1.0)
+    a = jnp.abs(g)
+    t = (a - lo) / scale
+    t_floor = jnp.floor(t)
+    up = (rand < (t - t_floor)).astype(jnp.float32)
+    level = jnp.clip(t_floor + up, 0.0, n_levels)
+    mag = lo + level * scale
+    out_ref[...] = jnp.where(g >= 0, mag, -mag).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+def stochastic_quant(g: jax.Array, rand: jax.Array, lo: jax.Array,
+                     hi: jax.Array, bits: int,
+                     block=DEFAULT_BLOCK, interpret: bool = True
+                     ) -> jax.Array:
+    """g, rand: (M, N); lo/hi: scalars. Returns Q(g) in g.dtype."""
+    m, n = g.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    assert m % bm == 0 and n % bn == 0, (g.shape, block)
+    rng = jnp.stack([lo.astype(jnp.float32),
+                     hi.astype(jnp.float32)]).reshape(1, 2)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, n_levels=float(2 ** bits - 1)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), g.dtype),
+        interpret=interpret,
+    )(g, rand, rng)

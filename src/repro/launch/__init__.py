@@ -1,0 +1,13 @@
+from repro.launch.mesh import (
+    client_axes,
+    make_production_mesh,
+    make_test_mesh,
+    num_clients,
+)
+
+__all__ = [
+    "make_production_mesh",
+    "make_test_mesh",
+    "client_axes",
+    "num_clients",
+]

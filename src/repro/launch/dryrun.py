@@ -1,0 +1,72 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "REPRO_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init). REPRO_XLA_FLAGS exists only so the test
+# suite can dry-run against 8 virtual devices instead of 512.
+
+"""Multi-pod dry-run entry point (deliverable (e)).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all                 # 16x16
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod     # 2x16x16
+
+Writes one JSON per combination into artifacts/dryrun/ for the roofline
+benchmark (benchmarks/roofline.py) to consume.
+"""
+import argparse
+import json
+import sys
+import traceback
+
+
+def main() -> int:
+    from repro import configs
+    from repro.launch import dryrun_lib
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", help="architecture id (see configs.list_archs)")
+    ap.add_argument("--shape", help="input shape name",
+                    choices=sorted(configs.SHAPES))
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) pair")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="2x16x16 (pod,data,model) instead of 16x16")
+    ap.add_argument("--test-mesh", action="store_true",
+                    help="tiny mesh for CI (needs REPRO_XLA_FLAGS=8 devices)")
+    ap.add_argument("--variant", default="{}",
+                    help="JSON dict of overrides, e.g. '{\"prune\": false}'")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    variant = json.loads(args.variant)
+    pairs = []
+    if args.all:
+        for a in configs.list_archs():
+            for s in sorted(configs.SHAPES):
+                pairs.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("need --arch and --shape (or --all)")
+        pairs = [(args.arch, args.shape)]
+
+    failures = []
+    for a, s in pairs:
+        try:
+            dryrun_lib.run_pair(a, s, multi_pod=args.multi_pod,
+                                variant=variant, test_mesh=args.test_mesh,
+                                out_dir=args.out)
+        except Exception:
+            failures.append((a, s))
+            print(f"FAIL {a} x {s}:", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        print(f"{len(failures)} failures: {failures}", file=sys.stderr)
+        return 1
+    print("dry-run complete")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

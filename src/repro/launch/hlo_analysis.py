@@ -1,0 +1,341 @@
+"""Post-SPMD HLO analysis: collective-bytes accounting for the roofline.
+
+``collective_bytes`` parses ``compiled.as_text()`` (the per-device,
+partitioned module), sums the operand bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, and
+multiplies instructions that live inside while-loop bodies (scan-over-
+layers lowers to while) by the loop trip count inferred from the loop
+condition's integer constant. Without that multiplier a 96-layer scanned
+model would look 96x cheaper than it is.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"([\w\-]+)\((.*)$")
+# computation headers: "%name (args...) -> type {"; args may nest parens
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->"
+                            r".*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?condition=%?([\w\.\-]+),"
+                       r"\s*body=%?([\w\.\-]+)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples by summing)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Tuple[str, str, str, str]] = field(default_factory=list)
+    # (result_name, type_str, op, rest_of_line)
+
+
+def _split_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        # strip /*index=N*/ style comments: they contain '=' and break the
+        # instruction regex for >5-element tuple types
+        if "/*" in line:
+            line = re.sub(r"/\*.*?\*/", "", line)
+        m = None
+        if " = " not in line:      # instruction lines never start computations
+            m = _COMP_START_RE.match(line)
+        if m and "{" in line:
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(line)
+        if im:
+            cur.instrs.append((im.group(1), im.group(2).strip(),
+                               im.group(3), im.group(4)))
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Heuristic: the largest integer constant in the loop condition."""
+    best = 1
+    for _, type_str, op, rest in cond.instrs:
+        if op == "constant":
+            for m in re.findall(r"constant\((-?\d+)\)", "constant(" + rest):
+                try:
+                    best = max(best, int(m))
+                except ValueError:
+                    pass
+    return best
+
+
+def _multipliers(comps: Dict[str, Computation]) -> Dict[str, int]:
+    """comp name -> product of enclosing while trip counts."""
+    mult = defaultdict(lambda: 1)
+    # fixpoint over nesting depth (loops nest at most a few levels)
+    for _ in range(6):
+        changed = False
+        for comp in comps.values():
+            base = mult[comp.name]
+            for _, _, op, rest in comp.instrs:
+                if op != "while":
+                    continue
+                wm = _WHILE_RE.search("while(" + rest)
+                if not wm:
+                    continue
+                cond_name, body_name = wm.group(1), wm.group(2)
+                trips = _trip_count(comps[cond_name]) \
+                    if cond_name in comps else 1
+                new = base * max(trips, 1)
+                if body_name in comps and mult[body_name] != new:
+                    mult[body_name] = new
+                    changed = True
+        if not changed:
+            break
+    return dict(mult)
+
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(rest)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def _wire_factor(kind: str, group: int) -> float:
+    """Per-device ICI traffic per operand byte (ring algorithms)."""
+    g = max(group, 1)
+    if g == 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g
+    if kind == "all-gather":          # operand is the local shard
+        return float(g - 1)
+    if kind == "reduce-scatter":
+        return (g - 1) / g
+    if kind == "all-to-all":
+        return (g - 1) / g
+    if kind == "collective-permute":
+        return 1.0
+    return 1.0
+
+
+_ENTRY_RE = re.compile(r"^ENTRY\s+%?([\w\.\-]+)", re.MULTILINE)
+_CALLED_SINGLE_RE = re.compile(r"(?:body|condition|to_apply|calls)="
+                               r"%?([\w\.\-]+)")
+_CALLED_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _executed_computations(comps: Dict[str, Computation],
+                           mult: Dict[str, int], text: str
+                           ) -> Dict[str, int]:
+    """Computations actually executed at top level (ENTRY + loop bodies/conds
+    + conditional branches + calls), with their trip multipliers. Fusion and
+    reduction sub-computations are excluded — their traffic is represented
+    by the fusion/reduce instruction at the call site."""
+    m = _ENTRY_RE.search(text)
+    if not m:
+        return {}
+    entry = m.group(1)
+    executed: Dict[str, int] = {entry: 1}
+    frontier = [entry]
+    while frontier:
+        name = frontier.pop()
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        base = executed[name]
+        for _, _, op, rest in comp.instrs:
+            if op not in ("while", "conditional", "call"):
+                continue
+            subs = _CALLED_SINGLE_RE.findall(rest)
+            for grp in _CALLED_BRANCHES_RE.findall(rest):
+                subs.extend(s.strip().lstrip("%") for s in grp.split(","))
+            for sub in subs:
+                if sub not in comps:
+                    continue
+                trips = 1
+                if op == "while":
+                    wm = _WHILE_RE.search("while(" + rest)
+                    if wm and sub == wm.group(2):   # the body
+                        trips = max(_trip_count(comps[wm.group(1)]), 1) \
+                            if wm.group(1) in comps else 1
+                new = base * trips
+                if executed.get(sub, 0) < new:
+                    executed[sub] = new
+                    frontier.append(sub)
+    return executed
+
+
+def _dot_flops(type_str: str, rest: str,
+               table: Dict[str, int], shapes: Dict[str, Tuple[str, tuple]]
+               ) -> float:
+    """2 * prod(output dims) * prod(lhs contracting dim sizes)."""
+    out_dims = 1
+    mm = _SHAPE_RE.search(type_str)
+    if mm and mm.group(2):
+        for d in mm.group(2).split(","):
+            if d:
+                out_dims *= int(d)
+    cm = _CONTRACT_RE.search(rest)
+    contract = 1
+    if cm is not None:
+        refs = re.findall(r"%([\w\.\-]+)", rest.split(")")[0])
+        if refs and refs[0] in shapes:
+            _, lhs_dims = shapes[refs[0]]
+            for idx_str in cm.group(1).split(","):
+                if idx_str and int(idx_str) < len(lhs_dims):
+                    contract *= lhs_dims[int(idx_str)]
+    return 2.0 * out_dims * contract
+
+
+def _parse_dims(type_str: str) -> Tuple[str, tuple]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return ("", ())
+    dims = tuple(int(d) for d in m.group(2).split(",") if d) \
+        if m.group(2) else ()
+    return (m.group(1), dims)
+
+
+def analyze_hlo(hlo_text: str) -> Dict[str, float]:
+    """Scan-aware per-device totals from the partitioned HLO:
+
+      flops        — 2*M*N*K over every dot (+conv), x loop trips
+      hbm_bytes    — operand+result bytes of every top-level instruction in
+                     executed computations (post-fusion => real traffic),
+                     x loop trips
+      collectives  — see ``collective_bytes``
+    """
+    comps = _split_computations(hlo_text)
+    mult = _multipliers(comps)
+    executed = _executed_computations(comps, mult, hlo_text)
+
+    flops = 0.0
+    hbm = 0.0
+    for name, m in executed.items():
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        table = {n: _shape_bytes(t) for n, t, _, _ in comp.instrs}
+        shapes = {n: _parse_dims(t) for n, t, _, _ in comp.instrs}
+        for n, type_str, op, rest in comp.instrs:
+            if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast"):
+                continue
+            res_bytes = _shape_bytes(type_str)
+            refs = re.findall(r"%([\w\.\-]+)", rest.split(")")[0])
+            op_sizes = [table.get(r, 0) for r in refs]
+            operand_bytes = sum(op_sizes)
+            if op == "dynamic-slice":
+                # reads only the sliced window, not the whole operand —
+                # scan xs slicing would otherwise count the full stacked
+                # tensor once per trip (1000x overcount for time scans)
+                traffic = 2.0 * res_bytes
+            elif op == "dynamic-update-slice":
+                # in-place update: traffic = the update window (read+write);
+                # operand 1 is the update
+                upd = op_sizes[1] if len(op_sizes) > 1 else res_bytes
+                traffic = 2.0 * upd
+            elif op == "fusion" and "dynamic-update-slice" in n:
+                # fused in-place update of a large buffer: the big operand
+                # is aliased, real traffic is the update window (the small
+                # operands) twice
+                small = sum(b for b in op_sizes if b < res_bytes)
+                traffic = 2.0 * small
+            elif op == "fusion" and "dynamic-slice" in n:
+                # fused slice-read of a large buffer
+                small = sum(b for b in op_sizes if b < max(op_sizes))
+                traffic = 2.0 * res_bytes + small
+            elif op == "fusion" and m > 1:
+                # inside a loop body a fusion consuming a buffer much larger
+                # than its result is almost always a fused slice/gather; cap
+                # per-operand traffic at the result size
+                traffic = res_bytes + sum(min(b, res_bytes)
+                                          for b in op_sizes)
+            else:
+                traffic = res_bytes + operand_bytes
+            hbm += traffic * m
+            if op == "dot":
+                flops += _dot_flops(type_str, rest, table, shapes) * m
+            # no convolution accounting: every dry-run arch expresses its
+            # convs as shifts+multiplies (mamba) or stubs them (audio/vlm)
+    coll = collective_bytes(hlo_text)
+    return {"flops": flops, "hbm_bytes": hbm, **{f"coll_{k}": v
+            for k, v in coll.items()}}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Returns per-kind + total collective traffic for one device.
+
+    Two metrics per instruction, both scaled by enclosing loop trip counts:
+      * operand bytes (the raw "sum of operand sizes"),
+      * wire bytes = operand bytes x ring-traffic factor for the
+        instruction's replica-group size — the number used for the
+        roofline's collective term (so an int8 all-gather and a bf16
+        all-reduce compare fairly).
+    """
+    comps = _split_computations(hlo_text)
+    mult = _multipliers(comps)
+
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    out["total"] = 0.0
+    out["wire_total"] = 0.0
+    out["count"] = 0
+    for comp in comps.values():
+        table = {name: _shape_bytes(t) for name, t, _, _ in comp.instrs}
+        m = mult.get(comp.name, 1)
+        for name, type_str, op, rest in comp.instrs:
+            kind = next((c for c in _COLLECTIVES
+                         if op == c or op.startswith(c + ".")), None)
+            if kind is None:
+                continue
+            # operand names: %foo refs before the first ')' at paren depth 0
+            args = rest.split(")")[0]
+            operand_bytes = 0
+            for ref in re.findall(r"%([\w\.\-]+)", args):
+                operand_bytes += table.get(ref, 0)
+            if operand_bytes == 0:
+                operand_bytes = _shape_bytes(type_str)
+            group = _group_size(rest)
+            out[kind] += operand_bytes * m
+            out["total"] += operand_bytes * m
+            out["wire_total"] += operand_bytes * _wire_factor(kind, group) * m
+            out["count"] += m
+    return out

@@ -1,0 +1,159 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style rule table).
+
+Every parameter/cache/activation dimension carries a *logical* axis name
+(declared in the model's ParamSpec / cache_axes / shard_hint calls); this
+module maps those names onto the production mesh with two safety passes:
+
+  * divisibility — a dim that doesn't divide by its mesh-axis extent is
+    replicated instead of unevenly sharded (e.g. qwen's 40 heads on a
+    16-way 'model' axis: the per-head activation stays replicated while
+    the fused head*head_dim projections, 5120-wide, do shard);
+  * dedupe — a mesh axis may appear once per PartitionSpec; later logical
+    dims lose the contest (ordered by appearance).
+
+Policies:
+  baseline  — params sharded over 'model' only, replicated over 'data'
+              (clients along data need full-param replicas: DESIGN.md sec 3).
+  fsdp      — param 'embed' dims additionally sharded over 'data'
+              (nemotron-340b / mistral-123b, whose replicas cannot fit).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import ArchConfig
+from repro.models.common import logical_axes
+
+PyTree = Any
+
+MODEL = ("model",)
+DATA = ("data",)
+
+
+def base_rules(mesh: Mesh, *, fsdp: bool = False,
+               client_axes: Tuple[str, ...] = ()) -> Dict[str, tuple]:
+    """Logical-name -> mesh-axes map. Only axes present in `mesh` are kept."""
+    pod = ("pod",) if "pod" in mesh.axis_names else ()
+    rules: Dict[str, Optional[tuple]] = {
+        # data-like
+        "batch": pod + ("data",),
+        "client": client_axes,
+        "seq": None,
+        # parameter dims
+        "layers": None,
+        "vocab": MODEL,
+        "embed": DATA if fsdp else None,
+        "embed_out": MODEL,
+        "heads_fused": MODEL,
+        "kv_fused": MODEL,
+        "heads": MODEL,
+        "kv_heads": MODEL,
+        # head_dim shards over 'model' ONLY when the head count couldn't
+        # (dedupe in make_pspec): e.g. nemotron's 8 kv heads on a 16-way
+        # axis replicate, so the 192-wide head_dim takes the axis instead —
+        # without this a 2.5 TB decode cache replicates 16x per device.
+        "head_dim": MODEL,
+        "d_ff": MODEL,
+        "experts": MODEL,
+        "expert_ff": None,
+        "kv_lora": None,
+        "ssm_fused": MODEL,
+        "conv": None,
+        "state": None,
+        # activation dims: residual-stream d_model shards over 'model'
+        # (tensor-parallel activation sharding — without it every model-axis
+        # device holds a full activation replica and remat checkpoints alone
+        # exceed HBM for the train shapes). 'act_seq' is the residual
+        # stream's sequence dim: the sequence-parallel alternative shards it
+        # instead of d_model (see §Perf; enabled per-run via rules override).
+        "act_seq": None,
+        "act_embed": MODEL,
+        "act_ff": MODEL,
+        "act_expert_ff": None,
+    }
+    # drop axes not in this mesh
+    out = {}
+    for k, v in rules.items():
+        if v is None:
+            out[k] = None
+        else:
+            kept = tuple(a for a in v if a in mesh.axis_names)
+            out[k] = kept if kept else None
+    return out
+
+
+def make_pspec(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+               rules: Dict[str, tuple], mesh: Mesh) -> PartitionSpec:
+    """Resolve one tensor's logical axes to a PartitionSpec with
+    divisibility + dedupe enforcement."""
+    used = set()
+    spec = []
+    for dim, name in zip(shape, axes):
+        entry = rules.get(name) if name is not None else None
+        if not entry:
+            spec.append(None)
+            continue
+        mesh_axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        mesh_axes = tuple(a for a in mesh_axes if a not in used)
+        size = 1
+        for a in mesh_axes:
+            size *= mesh.shape[a]
+        if mesh_axes and size > 0 and dim % size == 0:
+            used.update(mesh_axes)
+            spec.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+        else:
+            spec.append(None)
+    return PartitionSpec(*spec)
+
+
+def sharding_tree(mesh: Mesh, rules: Dict[str, tuple], shapes: PyTree,
+                  axes: PyTree) -> PyTree:
+    """Build NamedShardings for a (shapes, axes) pytree pair. ``shapes``
+    leaves anything with .shape; ``axes`` leaves are tuples of names."""
+    def leaf(s, a):
+        return NamedSharding(mesh, make_pspec(tuple(s.shape), a, rules, mesh))
+    return jax.tree_util.tree_map(
+        leaf, shapes, axes, is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def param_shardings(mesh: Mesh, model, rules: Dict[str, tuple]) -> PyTree:
+    specs = model.param_specs()
+    ax = logical_axes(specs)
+    shapes = model.abstract_params()
+    return sharding_tree(mesh, rules, shapes, ax)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def batch_shardings(mesh: Mesh, rules: Dict[str, tuple], batch_struct: PyTree,
+                    leading: str = "batch") -> PyTree:
+    """Shard every batch leaf's leading dim as `leading` (batch/client),
+    rest replicated."""
+    def leaf(s):
+        ax = (leading,) + (None,) * (len(s.shape) - 1)
+        return NamedSharding(mesh, make_pspec(tuple(s.shape), ax, rules, mesh))
+    return jax.tree_util.tree_map(leaf, batch_struct,
+                                  is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def cache_shardings(mesh: Mesh, rules: Dict[str, tuple], model,
+                    cache_struct: PyTree) -> PyTree:
+    axes = model.cache_axes()
+    return {
+        k: NamedSharding(mesh, make_pspec(tuple(v.shape), axes[k], rules,
+                                          mesh))
+        for k, v in cache_struct.items()
+    }
+
+
+def policy_for(arch: ArchConfig) -> Dict[str, Any]:
+    """Per-arch sharding policy (DESIGN.md section 3)."""
+    return {
+        "fsdp": arch.fl_clients_on_pod_only,     # giants: FSDP over 'data'
+        "clients_on_pod_only": arch.fl_clients_on_pod_only,
+    }

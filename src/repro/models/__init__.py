@@ -1,0 +1,19 @@
+from repro.models.registry import (
+    build_model,
+    decode_inputs_struct,
+    make_decode_inputs,
+    make_train_batch,
+    prefill_batch_struct,
+    train_batch_struct,
+)
+from repro.models.resnet import ResNet
+
+__all__ = [
+    "build_model",
+    "decode_inputs_struct",
+    "make_decode_inputs",
+    "make_train_batch",
+    "prefill_batch_struct",
+    "train_batch_struct",
+    "ResNet",
+]

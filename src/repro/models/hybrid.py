@@ -1,0 +1,217 @@
+"""Zamba2-style hybrid LM: Mamba2 backbone + one *shared* attention+MLP
+block invoked at the start of every ``attn_every``-layer segment
+(arXiv:2411.15242). The shared block's weights are reused at every call
+site, so its gradient is the sum over call sites — relevant to the LTFL
+quantization path (weight-shared tensors are quantized once).
+
+Layers are organized as (n_segments x attn_every) two-level scans so the
+attention KV cache is allocated per *segment* (9 sites for 54 layers), not
+per layer.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import mamba2
+from repro.models.common import (
+    ParamSpec,
+    abstract_params,
+    apply_norm,
+    cross_entropy_loss,
+    init_params,
+    norm_specs,
+    rms_norm,
+    shard_hint,
+    stack_specs,
+)
+from repro.models.layers import (
+    attention_decode,
+    attention_specs,
+    attention_train,
+    embed_tokens,
+    embedding_specs,
+    lm_head,
+    mlp_apply,
+    mlp_specs,
+)
+
+PyTree = Any
+
+
+class HybridLM:
+    def __init__(self, cfg: ArchConfig, remat: bool = True):
+        assert cfg.family == "hybrid" and cfg.attn_every > 0
+        assert cfg.n_layers % cfg.attn_every == 0
+        self.cfg = cfg
+        self.remat = remat
+        self.n_segments = cfg.n_layers // cfg.attn_every
+        self.per_segment = cfg.attn_every
+
+    # ------------------------------------------------------------------ #
+    def param_specs(self) -> Dict:
+        cfg = self.cfg
+        mamba_layer = {
+            "ln": norm_specs(cfg, cfg.d_model),
+            "mamba": mamba2.mamba_specs(cfg),
+        }
+        return {
+            "embed": embedding_specs(cfg),
+            "final_norm": norm_specs(cfg, cfg.d_model),
+            "shared_block": {
+                "ln1": norm_specs(cfg, cfg.d_model),
+                "attn": attention_specs(cfg),
+                "ln2": norm_specs(cfg, cfg.d_model),
+                "mlp": mlp_specs(cfg),
+            },
+            # two-level stack: (n_segments, per_segment, ...)
+            "segments": stack_specs(
+                self.n_segments, stack_specs(self.per_segment, mamba_layer)),
+        }
+
+    def init(self, key):
+        return init_params(key, self.param_specs())
+
+    def abstract_params(self):
+        return abstract_params(self.param_specs())
+
+    # ------------------------------------------------------------------ #
+    def _shared_block_seq(self, sp, x):
+        cfg = self.cfg
+        h = apply_norm(cfg, x, sp["ln1"])
+        x = x + attention_train(cfg, sp["attn"], h)
+        h2 = apply_norm(cfg, x, sp["ln2"])
+        return x + mlp_apply(cfg, sp["mlp"], h2)
+
+    def forward(self, params, batch) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        x = embed_tokens(cfg, params["embed"], batch["tokens"])
+        B, S = x.shape[0], x.shape[1]
+        s, d_in, H, conv_dim = mamba2.mamba_dims(cfg)
+        zero_ssm = jnp.zeros((B, H, s.head_dim, s.state_dim), jnp.float32)
+        zero_conv = jnp.zeros((B, s.conv_width - 1, conv_dim), jnp.bfloat16)
+        shared = params["shared_block"]
+
+        def segment(carry, seg_p):
+            y = self._shared_block_seq(shared, carry)
+
+            def inner(c, lp):
+                h = apply_norm(cfg, c, lp["ln"])
+                out, _, _ = mamba2.mamba_seq(cfg, lp["mamba"], h,
+                                             zero_ssm, zero_conv)
+                return c + out, jnp.zeros((), jnp.float32)
+
+            y, _ = jax.lax.scan(inner, y, seg_p)
+            y = shard_hint(y, ("batch", "act_seq", "act_embed"))
+            return y, jnp.zeros((), jnp.float32)
+
+        if self.remat:
+            segment = jax.checkpoint(
+                segment, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(segment, x, params["segments"])
+        x = apply_norm(cfg, x, params["final_norm"])
+        return lm_head(cfg, params["embed"], x), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch) -> jax.Array:
+        logits, _ = self.forward(params, batch)
+        return cross_entropy_loss(logits[:, :-1, :], batch["labels"][:, 1:])
+
+    # ------------------------------------------------------------------ #
+    def cache_struct(self, batch_size: int, cache_len: int):
+        cfg = self.cfg
+        s, d_in, H, conv_dim = mamba2.mamba_dims(cfg)
+        NSEG, PER, B = self.n_segments, self.per_segment, batch_size
+        return {
+            "attn_k": ((NSEG, B, cache_len, cfg.n_kv_heads, cfg.head_dim),
+                       jnp.bfloat16),
+            "attn_v": ((NSEG, B, cache_len, cfg.n_kv_heads, cfg.head_dim),
+                       jnp.bfloat16),
+            "ssm": ((NSEG, PER, B, H, s.head_dim, s.state_dim), jnp.float32),
+            "conv": ((NSEG, PER, B, s.conv_width - 1, conv_dim),
+                     jnp.bfloat16),
+        }
+
+    def cache_axes(self):
+        kv = ("layers", "batch", "seq", "kv_heads", "head_dim")
+        return {
+            "attn_k": kv,
+            "attn_v": kv,
+            "ssm": ("layers", None, "batch", "heads", "head_dim", None),
+            "conv": ("layers", None, "batch", None, "ssm_fused"),
+        }
+
+    def init_cache(self, batch_size, cache_len):
+        return {k: jnp.zeros(sh, dt)
+                for k, (sh, dt) in self.cache_struct(batch_size,
+                                                     cache_len).items()}
+
+    def abstract_cache(self, batch_size, cache_len):
+        return {k: jax.ShapeDtypeStruct(sh, dt)
+                for k, (sh, dt) in self.cache_struct(batch_size,
+                                                     cache_len).items()}
+
+    def decode_step(self, params, token, pos, cache):
+        cfg = self.cfg
+        x = jnp.take(params["embed"]["tok"], token, axis=0)
+        shared = params["shared_block"]
+
+        def segment(carry, xs):
+            seg_p, seg_cache = xs
+            h = apply_norm(cfg, carry, shared["ln1"])
+            a, k, v = attention_decode(cfg, shared["attn"], h,
+                                       seg_cache["attn_k"],
+                                       seg_cache["attn_v"], pos)
+            y = carry + a
+            h2 = apply_norm(cfg, y, shared["ln2"])
+            y = y + mlp_apply(cfg, shared["mlp"], h2)
+
+            def inner(c, xs_in):
+                lp, ssm_st, conv_st = xs_in
+                h_in = apply_norm(cfg, c, lp["ln"])
+                out, new_ssm, new_conv = mamba2.mamba_step(
+                    cfg, lp["mamba"], h_in, ssm_st, conv_st)
+                return c + out, (new_ssm, new_conv)
+
+            y, (new_ssm, new_conv) = jax.lax.scan(
+                inner, y, (seg_p, seg_cache["ssm"], seg_cache["conv"]))
+            return y, {"attn_k": k, "attn_v": v,
+                       "ssm": new_ssm, "conv": new_conv}
+
+        x, new_cache = jax.lax.scan(segment, x,
+                                    (params["segments"], cache))
+        x = apply_norm(cfg, x, params["final_norm"])
+        return lm_head(cfg, params["embed"], x), new_cache
+
+    def prefill(self, params, batch):
+        """Prompt forward returning logits + (attention KV + SSM) caches."""
+        cfg = self.cfg
+        x = embed_tokens(cfg, params["embed"], batch["tokens"])
+        B, S = x.shape[0], x.shape[1]
+        s, d_in, H, conv_dim = mamba2.mamba_dims(cfg)
+        zero_ssm = jnp.zeros((B, H, s.head_dim, s.state_dim), jnp.float32)
+        zero_conv = jnp.zeros((B, s.conv_width - 1, conv_dim), jnp.bfloat16)
+        shared = params["shared_block"]
+
+        def segment(carry, seg_p):
+            from repro.models.layers import attention_prefill_kv
+            h = apply_norm(cfg, carry, shared["ln1"])
+            k, v = attention_prefill_kv(cfg, shared["attn"], h)
+            y = self._shared_block_seq(shared, carry)
+
+            def inner(c, lp):
+                h_in = apply_norm(cfg, c, lp["ln"])
+                out, ssm_st, conv_st = mamba2.mamba_seq(
+                    cfg, lp["mamba"], h_in, zero_ssm, zero_conv)
+                return c + out, (ssm_st, conv_st)
+
+            y, (ssm_states, conv_states) = jax.lax.scan(inner, y, seg_p)
+            return y, {"attn_k": k.astype(jnp.bfloat16),
+                       "attn_v": v.astype(jnp.bfloat16),
+                       "ssm": ssm_states, "conv": conv_states}
+
+        x, cache = jax.lax.scan(segment, x, params["segments"])
+        x = apply_norm(cfg, x, params["final_norm"])
+        return lm_head(cfg, params["embed"], x), cache

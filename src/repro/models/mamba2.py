@@ -1,0 +1,211 @@
+"""Mamba2 (SSD) block — selective state-space with scalar per-head decay.
+
+Recurrence per head (state h in R^{P x N}, P=head_dim, N=state_dim):
+
+    a_t = exp(dt_t * A)            A = -exp(A_log) < 0
+    h_t = a_t * h_{t-1} + (dt_t * x_t) B_t^T
+    y_t = h_t C_t + D * x_t
+
+x/B/C pass through a short causal depthwise conv (width 4). B/C are shared
+across heads within a group (n_groups=1 here). Decode state is O(1) in
+sequence length.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models.common import ParamSpec, rms_norm, shard_hint
+
+
+def mamba_dims(cfg: ArchConfig):
+    s = cfg.ssm or SSMConfig()
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.state_dim
+    return s, d_in, n_heads, conv_dim
+
+
+def mamba_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    s, d_in, n_heads, conv_dim = mamba_dims(cfg)
+    proj_out = 2 * d_in + 2 * s.n_groups * s.state_dim + n_heads  # z,x,B,C,dt
+    return {
+        "in_proj": ParamSpec((d, proj_out), ("embed", "ssm_fused"), "normal"),
+        "conv_w": ParamSpec((s.conv_width, conv_dim), ("conv", "ssm_fused"),
+                            "normal", scale=1.0),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_fused",), "zeros"),
+        "a_log": ParamSpec((n_heads,), ("heads",), "zeros"),
+        "dt_bias": ParamSpec((n_heads,), ("heads",), "zeros"),
+        "d_skip": ParamSpec((n_heads,), ("heads",), "ones"),
+        "out_norm": ParamSpec((d_in,), ("ssm_fused",), "ones"),
+        "out_proj": ParamSpec((d_in, d), ("ssm_fused", "embed"), "normal"),
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj: jax.Array):
+    s, d_in, n_heads, _ = mamba_dims(cfg)
+    gn = s.n_groups * s.state_dim
+    z = proj[..., :d_in]
+    x = proj[..., d_in:2 * d_in]
+    B = proj[..., 2 * d_in:2 * d_in + gn]
+    C = proj[..., 2 * d_in + gn:2 * d_in + 2 * gn]
+    dt = proj[..., 2 * d_in + 2 * gn:]
+    return z, x, B, C, dt
+
+
+def _causal_conv_seq(w: jax.Array, b: jax.Array, x: jax.Array,
+                     init_state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x (B,S,C); w (K,C); init_state (B,K-1,C).
+
+    Returns (y (B,S,C), new_state (B,K-1,C) = last K-1 inputs).
+    """
+    K = w.shape[0]
+    xp = jnp.concatenate([init_state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else init_state
+    return y + b, new_state
+
+
+def _causal_conv_step(w: jax.Array, b: jax.Array, x: jax.Array,
+                      state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x (B,C); state (B,K-1,C) holds previous inputs."""
+    K = w.shape[0]
+    xs = jnp.concatenate([state.astype(x.dtype), x[:, None, :]], axis=1)
+    y = jnp.einsum("bkc,kc->bc", xs, w) + b
+    return y, xs[:, -(K - 1):, :] if K > 1 else state
+
+
+
+# when > 0, mamba_seq uses the chunk-parallel SSD form with this intra-chunk
+# length (same rationale as rwkv6.CHUNK — the sequential time scan is
+# memory-bound; Mamba2's scalar-per-head decay makes chunking exact).
+CHUNK = 0
+
+
+def _chunked_ssd(xdt, Bc, Cc, a, ssm_state):
+    """Chunk-parallel Mamba2 (SSD) recurrence — exact algebra of
+    h_t = a_t h_{t-1} + (dt_t x_t) B_t^T ; y_t = h_t C_t.
+
+    xdt (B,S,H,P) = x*dt; Bc/Cc (B,S,N); a (B,S,H) in (0,1];
+    ssm_state (B,H,P,N). Returns (y (B,S,H,P), new_state).
+    """
+    B_, S, H, P = xdt.shape
+    c = CHUNK
+    assert S % c == 0, (S, c)
+    nc = S // c
+    xs = xdt.reshape(B_, nc, c, H, P).transpose(1, 0, 2, 3, 4)
+    Bs = Bc.reshape(B_, nc, c, -1).transpose(1, 0, 2, 3)
+    Cs = Cc.reshape(B_, nc, c, -1).transpose(1, 0, 2, 3)
+    as_ = a.reshape(B_, nc, c, H).transpose(1, 0, 2, 3)
+    tril = jnp.tril(jnp.ones((c, c)))          # i <= t (diagonal included)
+
+    def chunk(h0, inp):
+        x, Bm, Cm, av = inp                     # (B,c,H,P) (B,c,N) (B,c,H)
+        A = jnp.cumprod(av, axis=1)             # (B,c,H): prod_{j<=t} a_j
+        A_safe = jnp.maximum(A, 1e-30)
+        # inter-chunk: A_t * (C_t . h0)
+        ch0 = jnp.einsum("bcn,bhpn->bchp", Cm, h0)
+        y = A[..., None] * ch0
+        # intra-chunk: sum_{i<=t} (A_t/A_i)(C_t.B_i)(x_i dt_i)
+        G = jnp.einsum("bcn,bin->bci", Cm, Bm)  # (B,c,i)
+        R = (A_safe[:, :, None, :] / A_safe[:, None, :, :])   # (B,t,i,H)
+        R = R * tril[None, :, :, None]
+        y = y + jnp.einsum("btih,bti,bihp->bthp", R, G, x)
+        # state: h_c = A_c h0 + sum_i (A_c/A_i) (x_i dt_i) B_i^T
+        A_c = A[:, -1]                          # (B,H)
+        w = A_c[:, None, :] / A_safe            # (B,c,H)
+        h_new = A_c[..., None, None] * h0 + jnp.einsum(
+            "bch,bchp,bcn->bhpn", w, x, Bm)
+        return h_new, y
+
+    ssm_state, ys = jax.lax.scan(chunk, ssm_state, (xs, Bs, Cs, as_))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B_, S, H, P)
+    return y, ssm_state
+
+
+def mamba_seq(cfg: ArchConfig, p, u: jax.Array, ssm_state: jax.Array,
+              conv_state: jax.Array):
+    """u (B,S,D); ssm_state (B,H,P,N) f32; conv_state (B,K-1,conv_dim).
+
+    Returns (y (B,S,D), new_ssm_state, new_conv_state).
+    """
+    s, d_in, H, conv_dim = mamba_dims(cfg)
+    B_, S, D = u.shape
+    P, N = s.head_dim, s.state_dim
+
+    proj = u @ p["in_proj"]
+    z, x, Bc, Cc, dt = _split_proj(cfg, proj)
+    xbc = jnp.concatenate([x, Bc, Cc], axis=-1)
+    xbc, new_conv = _causal_conv_seq(p["conv_w"], p["conv_b"], xbc,
+                                     conv_state)
+    xbc = jax.nn.silu(xbc)
+    x = xbc[..., :d_in].reshape(B_, S, H, P)
+    Bc = xbc[..., d_in:d_in + s.n_groups * N]                  # (B,S,N) g=1
+    Cc = xbc[..., d_in + s.n_groups * N:]
+
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))               # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"]
+                         .astype(jnp.float32))                 # (B,S,H)
+    a = jnp.exp(dt * A)                                        # (B,S,H)
+
+    xt = jnp.moveaxis(x, 1, 0).astype(jnp.float32)             # (S,B,H,P)
+    Bt = jnp.moveaxis(Bc, 1, 0).astype(jnp.float32)            # (S,B,N)
+    Ct = jnp.moveaxis(Cc, 1, 0).astype(jnp.float32)
+    at = jnp.moveaxis(a, 1, 0)                                 # (S,B,H)
+    dtt = jnp.moveaxis(dt, 1, 0)
+
+    if CHUNK and S % CHUNK == 0:
+        xdt = x.astype(jnp.float32) * dt[..., None]            # (B,S,H,P)
+        y, ssm_state = _chunked_ssd(xdt, Bc.astype(jnp.float32),
+                                    Cc.astype(jnp.float32), a,
+                                    ssm_state.astype(jnp.float32))
+    else:
+        def step(h, inp):
+            x_, B_in, C_in, a_, dt_ = inp
+            dBx = jnp.einsum("bhp,bn->bhpn", x_ * dt_[..., None], B_in)
+            h = a_[..., None, None] * h + dBx
+            y = jnp.einsum("bhpn,bn->bhp", h, C_in)
+            return h, y
+
+        ssm_state, y = jax.lax.scan(step, ssm_state.astype(jnp.float32),
+                                    (xt, Bt, Ct, at, dtt))
+        y = jnp.moveaxis(y, 0, 1)                              # (B,S,H,P)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * x.astype(jnp.float32)
+    y = y.reshape(B_, S, d_in).astype(u.dtype)
+    y = rms_norm(y, p["out_norm"]) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    return shard_hint(out, ("batch", "act_seq", "act_embed")), ssm_state, new_conv
+
+
+def mamba_step(cfg: ArchConfig, p, u: jax.Array, ssm_state: jax.Array,
+               conv_state: jax.Array):
+    """Single-token step. u (B,D)."""
+    s, d_in, H, conv_dim = mamba_dims(cfg)
+    B_, D = u.shape
+    P, N = s.head_dim, s.state_dim
+    proj = u @ p["in_proj"]
+    z, x, Bc, Cc, dt = _split_proj(cfg, proj)
+    xbc = jnp.concatenate([x, Bc, Cc], axis=-1)
+    xbc, new_conv = _causal_conv_step(p["conv_w"], p["conv_b"], xbc,
+                                      conv_state)
+    xbc = jax.nn.silu(xbc)
+    x = xbc[..., :d_in].reshape(B_, H, P).astype(jnp.float32)
+    Bc = xbc[..., d_in:d_in + s.n_groups * N].astype(jnp.float32)
+    Cc = xbc[..., d_in + s.n_groups * N:].astype(jnp.float32)
+
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,H)
+    a = jnp.exp(dt * A)
+    dBx = jnp.einsum("bhp,bn->bhpn", x * dt[..., None], Bc)
+    ssm_state = a[..., None, None] * ssm_state + dBx
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, Cc)
+    y = y + p["d_skip"][None, :, None].astype(jnp.float32) * x
+    y = y.reshape(B_, d_in).astype(u.dtype)
+    y = rms_norm(y, p["out_norm"]) * jax.nn.silu(z)
+    return y @ p["out_proj"], ssm_state, new_conv

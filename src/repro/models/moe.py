@@ -1,0 +1,181 @@
+"""Mixture-of-experts FFN with capacity-based group dispatch.
+
+Design follows the standard JAX/TPU ("t5x/MaxText dropping") formulation:
+tokens are split into groups of ``GROUP_SIZE``; each group routes top-k
+tokens to per-expert capacity buffers via a dispatch mask; expert FFNs run
+as dense einsums with the expert axis sharded over the 'model' mesh axis
+(XLA inserts the all-to-all). Overflow tokens are dropped (standard
+capacity-factor semantics), which the load-balance auxiliary loss keeps
+rare.
+
+Shared experts (DeepSeek style) are an always-on dense FFN added to the
+routed output.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ParamSpec, activation, shard_hint
+from repro.models.layers import mlp_specs, mlp_apply
+
+GROUP_SIZE = 512
+# decode-path dispatch: "gather" moves the top-k expert weights to the
+# token (paper-obvious, but on a sharded mesh it all-gathers whole expert
+# matrices); "dense" runs every (sharded) expert on the tiny token batch
+# and combines by routing weight — E/k x more FLOPs on a negligible
+# decode-step compute budget, zero weight movement. See §Perf.
+TOKEN_DISPATCH = "gather"
+
+
+def moe_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    mo = cfg.moe
+    e, f = mo.num_experts, mo.d_expert
+    s: Dict[str, ParamSpec] = {
+        # router kept in f32: routing decisions are precision-sensitive
+        "router": ParamSpec((d, e), ("embed", "experts"), "normal",
+                            dtype=jnp.float32),
+    }
+    if cfg.glu:
+        s["w_gate"] = ParamSpec((e, d, f), ("experts", "embed", "expert_ff"),
+                                "normal")
+        s["w_up"] = ParamSpec((e, d, f), ("experts", "embed", "expert_ff"),
+                              "normal")
+        s["w_down"] = ParamSpec((e, f, d), ("experts", "expert_ff", "embed"),
+                                "normal")
+    else:
+        s["w_in"] = ParamSpec((e, d, f), ("experts", "embed", "expert_ff"),
+                              "normal")
+        s["w_down"] = ParamSpec((e, f, d), ("experts", "expert_ff", "embed"),
+                                "normal")
+    if mo.num_shared_experts > 0:
+        shared_f = mo.d_shared_expert * mo.num_shared_experts
+        s["shared"] = mlp_specs(cfg, d_ff=shared_f)
+    return s
+
+
+def _capacity(group_size: int, top_k: int, num_experts: int,
+              capacity_factor: float) -> int:
+    c = int(group_size * top_k * capacity_factor / num_experts)
+    return max(c, 4)
+
+
+def moe_apply(cfg: ArchConfig, p, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x (B, S, D) -> (y (B, S, D), aux_loss scalar f32)."""
+    mo = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    g_size = min(GROUP_SIZE, T)
+    assert T % g_size == 0, (T, g_size)
+    G = T // g_size
+    E, K = mo.num_experts, mo.top_k
+    C = _capacity(g_size, K, E, mo.capacity_factor)
+
+    xg = x.reshape(G, g_size, D)
+    xg = shard_hint(xg, ("batch", None, "act_embed"))
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                   # (G, Sg, E)
+    top_w, top_i = jax.lax.top_k(probs, K)                     # (G, Sg, K)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # ---- load-balance auxiliary loss (switch-style) ---------------------- #
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_i, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1)) / K                                       # (E,)
+    aux = E * jnp.sum(me * ce) * mo.aux_loss_coef
+
+    # ---- dispatch & combine masks (per-k outer products) ----------------- #
+    dispatch = jnp.zeros((G, g_size, E, C), dtype=x.dtype)
+    combine = jnp.zeros((G, g_size, E, C), dtype=jnp.float32)
+    # running count of tokens already assigned to each expert in the group
+    fill = jnp.zeros((G, E), dtype=jnp.int32)
+    for k in range(K):
+        sel = top_i[:, :, k]                                   # (G, Sg)
+        onehot_e = jax.nn.one_hot(sel, E, dtype=jnp.int32)     # (G, Sg, E)
+        # position of this token within its expert's buffer
+        prior = jnp.cumsum(onehot_e, axis=1) - onehot_e        # tokens before
+        pos = jnp.sum(prior * onehot_e, axis=-1) + jnp.take_along_axis(
+            fill, sel, axis=1)                                 # (G, Sg)
+        keep = (pos < C).astype(jnp.float32)
+        onehot_c = jax.nn.one_hot(pos, C, dtype=jnp.float32)   # (G, Sg, C)
+        mask_ec = (onehot_e.astype(jnp.float32) * keep[..., None])[..., None] \
+            * onehot_c[:, :, None, :]                          # (G, Sg, E, C)
+        dispatch = dispatch + mask_ec.astype(x.dtype)
+        combine = combine + mask_ec * top_w[:, :, k][..., None, None]
+        fill = fill + jnp.sum(onehot_e, axis=1)
+
+    # ---- expert computation (experts sharded over 'model') --------------- #
+    ex_in = jnp.einsum("gsd,gsec->gecd", xg, dispatch)         # (G, E, C, D)
+    ex_in = shard_hint(ex_in, ("batch", "experts", None, "act_embed"))
+    act = activation(cfg.mlp_act)
+    if cfg.glu:
+        h = act(jnp.einsum("gecd,edf->gecf", ex_in, p["w_gate"])) \
+            * jnp.einsum("gecd,edf->gecf", ex_in, p["w_up"])
+    else:
+        h = act(jnp.einsum("gecd,edf->gecf", ex_in, p["w_in"]))
+    h = shard_hint(h, ("batch", "experts", None, "act_expert_ff"))
+    ex_out = jnp.einsum("gecf,efd->gecd", h, p["w_down"])      # (G, E, C, D)
+    y = jnp.einsum("gecd,gsec->gsd", ex_out,
+                   combine.astype(x.dtype))                    # (G, Sg, D)
+    y = y.reshape(B, S, D)
+
+    if mo.num_shared_experts > 0:
+        y = y + mlp_apply(cfg, p["shared"], x)
+    return y, aux.astype(jnp.float32)
+
+
+def moe_apply_token(cfg: ArchConfig, p, x: jax.Array) -> jax.Array:
+    """Decode-path MoE for a single token per sequence: x (B, D) -> (B, D).
+
+    With one token there is no capacity contention: gather the top-k expert
+    weights per token and run them as small batched matmuls (or, with
+    TOKEN_DISPATCH == "dense", run all sharded experts in place — see
+    module docstring).
+    """
+    mo = cfg.moe
+    B, D = x.shape
+    K = mo.top_k
+    logits = x.astype(jnp.float32) @ p["router"]               # (B, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, K)                     # (B, K)
+    top_w = (top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+             ).astype(x.dtype)
+    act = activation(cfg.mlp_act)
+
+    if TOKEN_DISPATCH == "dense":
+        # combine weight per expert: sum of top-k weights routed to it
+        cw = jnp.zeros((B, mo.num_experts), x.dtype)
+        for k in range(K):
+            cw = cw + jax.nn.one_hot(top_i[:, k], mo.num_experts,
+                                     dtype=x.dtype) * top_w[:, k][:, None]
+        if cfg.glu:
+            h = act(jnp.einsum("bd,edf->ebf", x, p["w_gate"])) \
+                * jnp.einsum("bd,edf->ebf", x, p["w_up"])
+        else:
+            h = act(jnp.einsum("bd,edf->ebf", x, p["w_in"]))
+        y_e = jnp.einsum("ebf,efd->ebd", h, p["w_down"])       # (E, B, D)
+        y = jnp.einsum("ebd,be->bd", y_e, cw)
+        if mo.num_shared_experts > 0:
+            y = y + mlp_apply(cfg, p["shared"], x)
+        return y
+
+    if cfg.glu:
+        wg = jnp.take(p["w_gate"], top_i, axis=0)              # (B, K, D, F)
+        wu = jnp.take(p["w_up"], top_i, axis=0)
+        wd = jnp.take(p["w_down"], top_i, axis=0)              # (B, K, F, D)
+        h = act(jnp.einsum("bd,bkdf->bkf", x, wg)) \
+            * jnp.einsum("bd,bkdf->bkf", x, wu)
+    else:
+        wi = jnp.take(p["w_in"], top_i, axis=0)
+        wd = jnp.take(p["w_down"], top_i, axis=0)
+        h = act(jnp.einsum("bd,bkdf->bkf", x, wi))
+    y = jnp.einsum("bkf,bkfd->bd", h * top_w[..., None], wd)
+    if mo.num_shared_experts > 0:
+        y = y + mlp_apply(cfg, p["shared"], x)
+    return y

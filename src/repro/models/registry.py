@@ -1,0 +1,93 @@
+"""Model factory: build the right family implementation for an ArchConfig,
+plus uniform batch constructors (concrete or abstract) for every family —
+the single place that knows which inputs each family consumes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.encdec import EncDecLM
+from repro.models.hybrid import HybridLM
+from repro.models.rwkv6 import RWKVLM
+from repro.models.transformer import DecoderLM
+
+PyTree = Any
+
+
+def build_model(cfg: ArchConfig, remat: bool = True):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg, remat=remat)
+    if cfg.family == "ssm":
+        if cfg.name.startswith("rwkv"):
+            return RWKVLM(cfg, remat=remat)
+        raise NotImplementedError(f"ssm arch {cfg.name}")
+    if cfg.family == "hybrid":
+        return HybridLM(cfg, remat=remat)
+    if cfg.family == "encdec":
+        return EncDecLM(cfg, remat=remat)
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+# --------------------------------------------------------------------------- #
+# Batch construction (concrete for tests/examples, abstract for dry-runs)
+# --------------------------------------------------------------------------- #
+def train_batch_struct(cfg: ArchConfig, batch: int, seq: int
+                       ) -> Dict[str, jax.ShapeDtypeStruct]:
+    s: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        s["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        s["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return s
+
+
+def prefill_batch_struct(cfg: ArchConfig, batch: int, seq: int):
+    s = train_batch_struct(cfg, batch, seq)
+    s.pop("labels")
+    return s
+
+
+def decode_inputs_struct(model, cfg: ArchConfig, batch: int, cache_len: int):
+    return {
+        "token": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        "cache": model.abstract_cache(batch, cache_len),
+    }
+
+
+def make_train_batch(cfg: ArchConfig, batch: int, seq: int,
+                     key: Optional[jax.Array] = None) -> Dict[str, jax.Array]:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    tokens = jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size,
+                                dtype=jnp.int32)
+    out = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "vlm":
+        out["image_embeds"] = jax.random.normal(
+            k2, (batch, cfg.num_image_tokens, cfg.d_model),
+            jnp.float32).astype(jnp.bfloat16) * 0.02
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(
+            k3, (batch, cfg.encoder_seq, cfg.d_model),
+            jnp.float32).astype(jnp.bfloat16) * 0.02
+    return out
+
+
+def make_decode_inputs(model, cfg: ArchConfig, batch: int, cache_len: int,
+                       key: Optional[jax.Array] = None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    token = jax.random.randint(key, (batch,), 0, cfg.vocab_size,
+                               dtype=jnp.int32)
+    pos = jnp.full((batch,), cache_len - 1, jnp.int32)
+    cache = model.init_cache(batch, cache_len)
+    return {"token": token, "pos": pos, "cache": cache}

@@ -1,0 +1,369 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent decay
+(arXiv:2404.05892).
+
+Time-mix recurrence per head (state S in R^{hd x hd}):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t ( S_{t-1} + diag(u) k_t v_t^T )
+
+where the decay w_t = exp(-exp(w0 + tanh(x W_a) W_b)) is *data dependent* —
+the defining Finch feature. Channel-mix is the squared-ReLU receptance FFN.
+Token shift uses learned static mix ratios (the low-rank dynamic mixing of
+the full release is folded into the decay LoRA, which carries the
+data dependence that matters for the recurrence).
+
+Decode state is O(1) in sequence length, which is why this arch runs the
+long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import (
+    ParamSpec,
+    abstract_params,
+    cross_entropy_loss,
+    init_params,
+    rms_norm,
+    shard_hint,
+    stack_specs,
+)
+from repro.models.layers import embedding_specs, embed_tokens, lm_head
+
+PyTree = Any
+DECAY_LORA = 64
+
+
+def _norm_spec(d):
+    return {"gamma": ParamSpec((d,), ("embed",), "ones")}
+
+
+def time_mix_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    h, hd = cfg.n_heads, cfg.head_dim
+    return {
+        "mu": ParamSpec((4, d), (None, "embed"), "uniform", scale=0.5),
+        "wr": ParamSpec((d, d), ("embed", "heads_fused"), "normal"),
+        "wk": ParamSpec((d, d), ("embed", "heads_fused"), "normal"),
+        "wv": ParamSpec((d, d), ("embed", "heads_fused"), "normal"),
+        "wg": ParamSpec((d, d), ("embed", "heads_fused"), "normal"),
+        "wo": ParamSpec((d, d), ("heads_fused", "embed"), "normal"),
+        # data-dependent decay LoRA (w0 + tanh(x A) B)
+        "w0": ParamSpec((d,), ("embed",), "zeros"),
+        "wa": ParamSpec((d, DECAY_LORA), ("embed", None), "normal"),
+        "wb": ParamSpec((DECAY_LORA, d), (None, "embed"), "normal",
+                        scale=0.1),
+        "u": ParamSpec((h, hd), ("heads", "head_dim"), "uniform", scale=0.5),
+        "ln_x": ParamSpec((d,), ("embed",), "ones"),
+    }
+
+
+def channel_mix_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu": ParamSpec((2, d), (None, "embed"), "uniform", scale=0.5),
+        "wk": ParamSpec((d, f), ("embed", "d_ff"), "normal"),
+        "wv": ParamSpec((f, d), ("d_ff", "embed"), "normal"),
+        "wr": ParamSpec((d, d), ("embed", "embed_out"), "normal"),
+    }
+
+
+def layer_specs(cfg: ArchConfig) -> Dict:
+    return {
+        "ln1": _norm_spec(cfg.d_model),
+        "tm": time_mix_specs(cfg),
+        "ln2": _norm_spec(cfg.d_model),
+        "cm": channel_mix_specs(cfg),
+    }
+
+
+def _shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """Token shift over seq: rows become [prev, x_0, ..., x_{S-2}]."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _decay(p, x):
+    """Data-dependent decay in (0, 1): exp(-exp(w0 + tanh(x A) B))."""
+    loraw = jnp.tanh(x @ p["wa"]) @ p["wb"]
+    return jnp.exp(-jnp.exp((p["w0"] + loraw).astype(jnp.float32)))
+
+
+# when > 0, the training-path recurrence uses the chunk-parallel form with
+# this intra-chunk length (EXPERIMENTS.md Perf: the 4096-step sequential
+# scan is the memory bottleneck of rwkv train; chunking turns per-step
+# outer products into per-chunk matmuls). 0 => paper-faithful sequential scan.
+CHUNK = 0
+
+
+def _chunked_recurrence(rt, kt, vt, wt, u, state):
+    """Chunk-parallel RWKV6 recurrence (exact in f32 for moderate chunks).
+
+    rt/kt/vt/wt: (B,S,H,K) f32 (wt in (0,1)); state (B,H,K,V).
+    With per-chunk entry state S0 and A_t = prod_{j<=t} w_j per channel:
+
+        o_t = (r_t . A_{t-1}) S0 + sum_{i<t} (r_t . A_{t-1}/A_i . k_i) v_i
+              + (r_t . u . k_t) v_t
+        S_c = diag(A_c) S0 + sum_i diag(A_c / A_i) k_i v_i^T
+    """
+    B, S, H, K = rt.shape
+    c = CHUNK
+    assert S % c == 0, (S, c)
+    nc = S // c
+
+    def to_chunks(x):
+        return x.reshape(B, nc, c, H, K).transpose(1, 0, 2, 3, 4)
+
+    rs, ks, vs, ws = map(to_chunks, (rt, kt, vt, wt))   # (nc,B,c,H,K)
+    eye = jnp.eye(c)
+    tri = jnp.tril(jnp.ones((c, c)), k=-1)              # strict i < t
+
+    def chunk(S0, inp):
+        r, k, v, w = inp                                # (B,c,H,K)
+        A = jnp.cumprod(w, axis=1)
+        A_prev = jnp.concatenate(
+            [jnp.ones_like(A[:, :1]), A[:, :-1]], axis=1)
+        r_dec = r * A_prev                              # r_t . A_{t-1}
+        k_dec = k / jnp.maximum(A, 1e-30)               # k_i / A_i
+        inter = jnp.einsum("bchk,bhkv->bchv", r_dec, S0)
+        M = jnp.einsum("bchk,bihk->bhci", r_dec, k_dec) * tri[None, None]
+        diag = jnp.einsum("bchk,bchk->bhc", r, u[None, None] * k)
+        M = M + diag[..., None] * eye[None, None]
+        o = inter + jnp.einsum("bhci,bihv->bchv", M, v)
+        A_c = A[:, -1]                                  # (B,H,K)
+        S_new = A_c[..., None] * S0 + jnp.einsum(
+            "bchk,bchv->bhkv", k_dec * A_c[:, None], v)
+        return S_new, o
+
+    state, os_ = jax.lax.scan(chunk, state, (rs, ks, vs, ws))
+    o = os_.transpose(1, 0, 2, 3, 4).reshape(B, S, H, K)
+    return state, o
+
+
+def time_mix_seq(cfg: ArchConfig, p, x: jax.Array, prev_x: jax.Array,
+                 state: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence time mix.
+
+    x (B,S,D); prev_x (B,D) last token of the previous segment;
+    state (B,H,hd,hd) carried recurrent state.
+    Returns (out (B,S,D), new_prev_x, new_state).
+    """
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    xs = _shift(x, prev_x)
+    mu = p["mu"]
+    xr = x + (xs - x) * mu[0]
+    xk = x + (xs - x) * mu[1]
+    xv = x + (xs - x) * mu[2]
+    xw = x + (xs - x) * mu[3]
+    r = (xr @ p["wr"]).reshape(B, S, H, hd)
+    k = (xk @ p["wk"]).reshape(B, S, H, hd)
+    v = (xv @ p["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(xv @ p["wg"])
+    w = _decay(p, xw).reshape(B, S, H, hd)                     # f32 in (0,1)
+
+    # recurrence (time-major scan), state kept in f32
+    rt = jnp.moveaxis(r, 1, 0).astype(jnp.float32)
+    kt = jnp.moveaxis(k, 1, 0).astype(jnp.float32)
+    vt = jnp.moveaxis(v, 1, 0).astype(jnp.float32)
+    wt = jnp.moveaxis(w, 1, 0)
+    u = p["u"].astype(jnp.float32)
+
+    if CHUNK and S % CHUNK == 0:
+        # chunk-parallel form (see _chunked_recurrence): time-major inputs
+        # are (S,B,H,K); convert to (B,S,H,K)
+        state, o = _chunked_recurrence(
+            jnp.moveaxis(rt, 0, 1), jnp.moveaxis(kt, 0, 1),
+            jnp.moveaxis(vt, 0, 1), jnp.moveaxis(wt, 0, 1),
+            u, state.astype(jnp.float32))
+        o = o.reshape(B, S, D).astype(x.dtype)
+    else:
+        def step(S_state, inp):
+            r_, k_, v_, w_ = inp
+            kv = k_[..., :, None] * v_[..., None, :]           # (B,H,hd,hd)
+            o = jnp.einsum("bhi,bhij->bhj", r_,
+                           S_state + u[None, :, :, None] * kv)
+            S_new = w_[..., :, None] * S_state + kv
+            return S_new, o
+
+        state, o = jax.lax.scan(step, state.astype(jnp.float32),
+                                (rt, kt, vt, wt))
+        o = jnp.moveaxis(o, 0, 1).reshape(B, S, D).astype(x.dtype)
+    o = rms_norm(o, p["ln_x"]) * g
+    out = o @ p["wo"]
+    return shard_hint(out, ("batch", "act_seq", "act_embed")), x[:, -1, :], state
+
+
+def time_mix_step(cfg: ArchConfig, p, x: jax.Array, prev_x: jax.Array,
+                  state: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token time mix. x (B,D); state (B,H,hd,hd) f32."""
+    B, D = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    mu = p["mu"]
+    xr = x + (prev_x - x) * mu[0]
+    xk = x + (prev_x - x) * mu[1]
+    xv = x + (prev_x - x) * mu[2]
+    xw = x + (prev_x - x) * mu[3]
+    r = (xr @ p["wr"]).reshape(B, H, hd).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(B, H, hd).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(B, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xv @ p["wg"])
+    w = _decay(p, xw).reshape(B, H, hd)
+    u = p["u"].astype(jnp.float32)
+    kv = k[..., :, None] * v[..., None, :]
+    o = jnp.einsum("bhi,bhij->bhj", r, state + u[None, :, :, None] * kv)
+    new_state = w[..., :, None] * state + kv
+    o = o.reshape(B, D).astype(x.dtype)
+    o = rms_norm(o, p["ln_x"]) * g
+    return o @ p["wo"], x, new_state
+
+
+def channel_mix_seq(cfg, p, x, prev_x):
+    xs = _shift(x, prev_x)
+    mu = p["mu"]
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    k = shard_hint(k, ("batch", "seq", "act_ff"))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"]), x[:, -1, :]
+
+
+def channel_mix_step(cfg, p, x, prev_x):
+    mu = p["mu"]
+    xk = x + (prev_x - x) * mu[0]
+    xr = x + (prev_x - x) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"]), x
+
+
+class RWKVLM:
+    def __init__(self, cfg: ArchConfig, remat: bool = True):
+        assert cfg.family == "ssm" and cfg.name.startswith("rwkv")
+        self.cfg = cfg
+        self.remat = remat
+
+    def param_specs(self) -> Dict:
+        cfg = self.cfg
+        return {
+            "embed": embedding_specs(cfg),
+            "final_norm": _norm_spec(cfg.d_model),
+            "layers": stack_specs(cfg.n_layers, layer_specs(cfg)),
+        }
+
+    def init(self, key):
+        return init_params(key, self.param_specs())
+
+    def abstract_params(self):
+        return abstract_params(self.param_specs())
+
+    # -------------------------------------------------------------- #
+    def _layer_seq(self, lp, x, st):
+        cfg = self.cfg
+        h = rms_norm(x, lp["ln1"]["gamma"])
+        tm_out, tm_prev, tm_state = time_mix_seq(
+            cfg, lp["tm"], h, st["tm_prev"], st["state"])
+        x = x + tm_out
+        h2 = rms_norm(x, lp["ln2"]["gamma"])
+        cm_out, cm_prev = channel_mix_seq(cfg, lp["cm"], h2, st["cm_prev"])
+        x = x + cm_out
+        return x, {"state": tm_state, "tm_prev": tm_prev, "cm_prev": cm_prev}
+
+    def _zero_layer_state(self, B):
+        cfg = self.cfg
+        return {
+            "state": jnp.zeros((B, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+                               jnp.float32),
+            "tm_prev": jnp.zeros((B, cfg.d_model), jnp.bfloat16),
+            "cm_prev": jnp.zeros((B, cfg.d_model), jnp.bfloat16),
+        }
+
+    def forward(self, params, batch) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        x = embed_tokens(cfg, params["embed"], batch["tokens"])
+        B = x.shape[0]
+        zero_st = self._zero_layer_state(B)
+
+        def body(carry, lp):
+            y, _ = self._layer_seq(lp, carry, zero_st)
+            return y, jnp.zeros((), jnp.float32)
+
+        if self.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        x = rms_norm(x, params["final_norm"]["gamma"])
+        return lm_head(cfg, params["embed"], x), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch) -> jax.Array:
+        logits, _ = self.forward(params, batch)
+        return cross_entropy_loss(logits[:, :-1, :], batch["labels"][:, 1:])
+
+    # -------------------------------------------------------------- #
+    # decode: the "cache" is the stacked recurrent state — O(1) in seq.
+    # -------------------------------------------------------------- #
+    def cache_struct(self, batch_size: int, cache_len: int):
+        cfg = self.cfg
+        L, B = cfg.n_layers, batch_size
+        return {
+            "state": ((L, B, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+                      jnp.float32),
+            "tm_prev": ((L, B, cfg.d_model), jnp.bfloat16),
+            "cm_prev": ((L, B, cfg.d_model), jnp.bfloat16),
+        }
+
+    def cache_axes(self):
+        return {
+            "state": ("layers", "batch", "heads", "head_dim", None),
+            "tm_prev": ("layers", "batch", "act_embed"),
+            "cm_prev": ("layers", "batch", "act_embed"),
+        }
+
+    def init_cache(self, batch_size, cache_len):
+        return {k: jnp.zeros(sh, dt)
+                for k, (sh, dt) in self.cache_struct(batch_size,
+                                                     cache_len).items()}
+
+    def abstract_cache(self, batch_size, cache_len):
+        return {k: jax.ShapeDtypeStruct(sh, dt)
+                for k, (sh, dt) in self.cache_struct(batch_size,
+                                                     cache_len).items()}
+
+    def decode_step(self, params, token, pos, cache):
+        cfg = self.cfg
+        x = jnp.take(params["embed"]["tok"], token, axis=0)
+
+        def body(carry, xs):
+            lp, st = xs
+            h = rms_norm(carry, lp["ln1"]["gamma"])
+            tm_out, tm_prev, state = time_mix_step(
+                cfg, lp["tm"], h, st["tm_prev"].astype(h.dtype), st["state"])
+            y = carry + tm_out
+            h2 = rms_norm(y, lp["ln2"]["gamma"])
+            cm_out, cm_prev = channel_mix_step(
+                cfg, lp["cm"], h2, st["cm_prev"].astype(h2.dtype))
+            y = y + cm_out
+            return y, {"state": state,
+                       "tm_prev": tm_prev.astype(jnp.bfloat16),
+                       "cm_prev": cm_prev.astype(jnp.bfloat16)}
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        x = rms_norm(x, params["final_norm"]["gamma"])
+        return lm_head(cfg, params["embed"], x), new_cache
+
+    def prefill(self, params, batch):
+        """Forward over the prompt, returning logits + recurrent state."""
+        cfg = self.cfg
+        x = embed_tokens(cfg, params["embed"], batch["tokens"])
+        B = x.shape[0]
+        zero_st = self._zero_layer_state(B)
+
+        def body(carry, lp):
+            y, st = self._layer_seq(lp, carry, zero_st)
+            return y, st
+
+        x, states = jax.lax.scan(body, x, params["layers"])
+        x = rms_norm(x, params["final_norm"]["gamma"])
+        return lm_head(cfg, params["embed"], x), states

@@ -1,0 +1,11 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    apply_updates,
+    global_norm,
+    momentum,
+    sgd,
+)
+
+__all__ = ["Optimizer", "sgd", "momentum", "adamw", "apply_updates",
+           "global_norm"]

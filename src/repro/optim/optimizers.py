@@ -1,0 +1,99 @@
+"""Minimal optax-style optimizers in pure JAX.
+
+The paper's devices run plain gradient descent (Eq. 10), so ``sgd`` is the
+paper-faithful default; ``momentum``/``adamw`` are provided for the
+datacenter-scale configs. API: ``init(params) -> state``;
+``update(grads, state, params) -> (updates, state)``; updates are *added*
+to params by ``apply_updates``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+
+
+def _tree_zeros_f32(params: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def sgd(lr: float) -> Optimizer:
+    """Plain GD (paper Eq. 10: w <- w - eta g)."""
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        updates = jax.tree_util.tree_map(
+            lambda g: (-lr * g.astype(jnp.float32)), grads)
+        updates = jax.tree_util.tree_map(
+            lambda u, p: u.astype(p.dtype), updates, params)
+        return updates, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"m": _tree_zeros_f32(params)}
+
+    def update(grads, state, params):
+        m = jax.tree_util.tree_map(
+            lambda mo, g: beta * mo + g.astype(jnp.float32),
+            state["m"], grads)
+        updates = jax.tree_util.tree_map(
+            lambda mo, p: (-lr * mo).astype(p.dtype), m, params)
+        return updates, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"m": _tree_zeros_f32(params), "v": _tree_zeros_f32(params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(
+            lambda mo, g: b1 * mo + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda vo, g: b2 * vo
+            + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1.0 - b1 ** t.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+        def upd(mo, vo, p):
+            step = mo / bc1 / (jnp.sqrt(vo / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p, u: p + u, params, updates)
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))

@@ -1,0 +1,10 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches
+run on the single real CPU device; only the dry-run subprocess tests spawn
+interpreters with forced device counts."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

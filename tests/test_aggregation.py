@@ -1,0 +1,36 @@
+"""Server aggregation under packet loss (paper Eq. 19)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import aggregate
+
+
+def test_weighted_mean():
+    g = {"w": jnp.stack([jnp.full((4,), 1.0), jnp.full((4,), 2.0),
+                         jnp.full((4,), 4.0)])}
+    weights = jnp.array([100.0, 200.0, 100.0])
+    alpha = jnp.array([1.0, 1.0, 1.0])
+    out = aggregate(g, weights, alpha)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               (100 + 400 + 400) / 400.0)
+
+
+def test_dropped_clients_excluded():
+    g = {"w": jnp.stack([jnp.full((4,), 1.0), jnp.full((4,), 100.0)])}
+    out = aggregate(g, jnp.array([500.0, 500.0]), jnp.array([1.0, 0.0]))
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.0)
+
+
+def test_all_dropped_zero_update():
+    g = {"w": jnp.ones((3, 8))}
+    out = aggregate(g, jnp.array([1.0, 1.0, 1.0]), jnp.zeros(3))
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.0)
+
+
+def test_preserves_dtype_and_structure():
+    g = {"a": jnp.ones((2, 4), jnp.bfloat16), "b": {"c": jnp.ones((2, 3))}}
+    out = aggregate(g, jnp.array([1.0, 3.0]), jnp.array([1.0, 1.0]))
+    assert out["a"].dtype == jnp.bfloat16
+    assert out["a"].shape == (4,)
+    assert out["b"]["c"].shape == (3,)

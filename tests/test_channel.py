@@ -1,0 +1,75 @@
+"""Wireless channel model (paper Eq. 1-4)."""
+import numpy as np
+import pytest
+
+from repro.configs.base import WirelessConfig
+from repro.core.channel import (
+    DeviceChannel,
+    expected_rate,
+    packet_error_rate,
+    sample_devices,
+    sample_transmissions,
+)
+
+CFG = WirelessConfig()
+DEV = DeviceChannel(distance=200.0, fading_mean=0.015,
+                    interference=1.5e-8, cpu_hz=7e7, num_samples=500)
+
+
+def test_rate_monotone_in_power():
+    p = np.linspace(CFG.p_min, CFG.p_max, 10)
+    r = expected_rate(CFG, DEV, p)
+    assert np.all(np.diff(r) > 0)
+    assert r[0] > 0
+
+
+def test_per_monotone_decreasing_in_power():
+    p = np.linspace(CFG.p_min, CFG.p_max, 10)
+    q = packet_error_rate(CFG, DEV, p)
+    assert np.all(np.diff(q) < 0)
+    assert np.all((q >= 0) & (q <= 1))
+
+
+def test_per_worse_with_distance():
+    near = DeviceChannel(100.0, 0.015, 1.5e-8, 7e7, 500)
+    far = DeviceChannel(300.0, 0.015, 1.5e-8, 7e7, 500)
+    qn = packet_error_rate(CFG, near, np.asarray(0.05))
+    qf = packet_error_rate(CFG, far, np.asarray(0.05))
+    assert float(qf) > float(qn)
+
+
+def test_quadrature_matches_monte_carlo():
+    """Gauss-Laguerre expectation vs brute-force MC over exponential fading."""
+    rng = np.random.default_rng(0)
+    p = 0.05
+    gain = DEV.fading_mean * DEV.distance ** -2
+    noise = DEV.interference + CFG.bandwidth_ul * CFG.n0
+    x = rng.exponential(1.0, 200_000)
+    mc_rate = CFG.bandwidth_ul * np.mean(np.log2(1 + p * gain * x / noise))
+    mc_per = np.mean(1 - np.exp(-CFG.waterfall * noise / (p * gain * x)))
+    assert abs(float(expected_rate(CFG, DEV, np.asarray(p))) - mc_rate) \
+        / mc_rate < 0.02
+    assert abs(float(packet_error_rate(CFG, DEV, np.asarray(p))) - mc_per) \
+        < 0.01
+
+
+def test_sample_devices_ranges(rng):
+    devs = sample_devices(CFG, 50, 400, 600, rng)
+    assert len(devs) == 50
+    for d in devs:
+        assert CFG.dist_min <= d.distance <= CFG.dist_max
+        assert CFG.cpu_min <= d.cpu_hz <= CFG.cpu_max
+        assert 400 <= d.num_samples <= 600
+
+
+def test_transmissions_bernoulli(rng):
+    devs = sample_devices(CFG, 4, 400, 600, rng)
+    powers = np.full(4, 0.05)
+    qs = np.array([float(packet_error_rate(CFG, d, np.asarray(0.05)))
+                   for d in devs])
+    hits = np.zeros(4)
+    n = 400
+    for _ in range(n):
+        hits += sample_transmissions(CFG, devs, powers, rng)
+    emp = 1 - hits / n
+    assert np.all(np.abs(emp - qs) < 0.08)

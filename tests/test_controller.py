@@ -1,0 +1,101 @@
+"""Two-stage controller (Theorems 2-3, Algorithm 1) + Bayesian optimization."""
+import numpy as np
+import pytest
+
+from repro.configs.base import LTFLConfig
+from repro.core import bayesopt, controller
+from repro.core.channel import DeviceChannel, packet_error_rate
+from repro.core.convergence import gamma as gamma_fn
+from repro.core.delay_energy import (
+    device_round_delay,
+    device_round_energy,
+)
+from repro.core.quantization import payload_bits
+
+LTFL = LTFLConfig(bo_iters=6, alt_max_iters=3)
+DEV = DeviceChannel(distance=250.0, fading_mean=0.015,
+                    interference=1.5e-8, cpu_hz=4e7, num_samples=550)
+V = 300_000
+
+
+def _feasible(ltfl, dev, rho, delta, p):
+    payload = float(payload_bits(V, delta, ltfl.xi_bits))
+    t = device_round_delay(ltfl.wireless, dev, payload, rho, p) \
+        + ltfl.server_delay
+    e = device_round_energy(ltfl.wireless, dev, payload, rho, p)
+    return t <= ltfl.t_max * (1 + 1e-9) and e <= ltfl.e_max * (1 + 1e-9)
+
+
+def test_theorem2_rho_feasible_and_minimal():
+    """rho* satisfies (38b)/(38c) and no smaller feasible rho exists
+    (the objective is increasing in rho, Theorem 2's argument)."""
+    p = 0.05
+    delta = LTFL.delta_max
+    payload = float(payload_bits(V, delta, LTFL.xi_bits))
+    rho_star = controller.optimal_rho(LTFL, DEV, payload, p)
+    assert 0.0 <= rho_star <= LTFL.rho_max
+    if rho_star < LTFL.rho_max:            # interior => constraints active
+        assert _feasible(LTFL, DEV, rho_star, delta, p)
+        for rho in np.linspace(0.0, rho_star - 0.02, 8):
+            if rho < 0:
+                continue
+            assert not _feasible(LTFL, DEV, float(rho), delta, p), \
+                f"smaller rho={rho} unexpectedly feasible"
+
+
+def test_theorem3_delta_max_feasible():
+    p = 0.05
+    payload = float(payload_bits(V, LTFL.delta_max, LTFL.xi_bits))
+    rho = controller.optimal_rho(LTFL, DEV, payload, p)
+    d_star = controller.optimal_delta(LTFL, DEV, rho, p, V)
+    assert 1 <= d_star <= LTFL.delta_max
+    assert _feasible(LTFL, DEV, rho, d_star, p)
+    if d_star < LTFL.delta_max:
+        assert not _feasible(LTFL, DEV, rho, d_star + 1, p), \
+            "delta*+1 unexpectedly feasible: delta* not maximal"
+
+
+def test_algorithm1_solve(rng):
+    from repro.core.channel import sample_devices
+    devs = sample_devices(LTFL.wireless, 6, 400, 600, rng)
+    dec = controller.solve(LTFL, devs, V, rng=rng)
+    assert dec.rho.shape == (6,)
+    assert np.all((dec.rho >= 0) & (dec.rho <= LTFL.rho_max))
+    assert np.all((dec.delta >= 1) & (dec.delta <= LTFL.delta_max))
+    assert np.all((dec.power >= LTFL.wireless.p_min - 1e-9)
+                  & (dec.power <= LTFL.wireless.p_max + 1e-9))
+    assert np.isfinite(dec.gamma)
+    # every device's decision is feasible
+    for i, d in enumerate(devs):
+        assert _feasible(LTFL, d, float(dec.rho[i]), int(dec.delta[i]),
+                         float(dec.power[i]))
+
+
+def test_gamma_trace_non_increasing_overall(rng):
+    from repro.core.channel import sample_devices
+    devs = sample_devices(LTFL.wireless, 4, 400, 600, rng)
+    dec = controller.solve(LTFL, devs, V, rng=rng)
+    if len(dec.gamma_trace) >= 2:
+        assert dec.gamma_trace[-1] <= dec.gamma_trace[0] * 1.05
+
+
+def test_bayesopt_beats_random_on_quadratic(rng):
+    target = np.array([0.3, 0.7, 0.5])
+
+    def f(x):
+        return float(np.sum((x - target) ** 2))
+
+    bounds = np.tile([[0.0, 1.0]], (3, 1))
+    res = bayesopt.minimize(f, bounds, iters=30, rng=rng)
+    assert res.y_best < 0.05
+    assert np.all(np.diff(res.history) <= 1e-12)   # best-so-far monotone
+
+
+def test_gp_posterior_interpolates():
+    gp = bayesopt.GaussianProcess(lengthscale=0.5)
+    x = np.array([[0.0], [0.5], [1.0]])
+    y = np.array([1.0, -1.0, 2.0])
+    gp.fit(x, y)
+    mu, var = gp.predict(x)
+    np.testing.assert_allclose(mu, y, atol=1e-3)
+    assert np.all(var < 1e-4)

@@ -1,0 +1,50 @@
+"""Convergence gap Gamma^n (Theorem 1, Eq. 29-30)."""
+import numpy as np
+import pytest
+
+from repro.configs.base import LTFLConfig
+from repro.core.convergence import gamma, gap_terms, theorem1_bound
+
+LTFL = LTFLConfig()
+U = 4
+RS = [100.0] * U
+NS = [500] * U
+
+
+def test_terms_positive_and_total():
+    t = gap_terms(LTFL, RS, [4] * U, [0.2] * U, [0.05] * U, NS)
+    assert t.quantization > 0 and t.pruning > 0 and t.transmission > 0
+    assert abs(t.total - t.scale * (t.quantization + t.pruning
+                                    + t.transmission)) < 1e-9
+
+
+def test_gamma_decreasing_in_delta():
+    gs = [gamma(LTFL, RS, [d] * U, [0.2] * U, [0.05] * U, NS)
+          for d in (1, 2, 4, 8)]
+    assert all(a > b for a, b in zip(gs, gs[1:]))
+
+
+def test_gamma_increasing_in_rho():
+    gs = [gamma(LTFL, RS, [4] * U, [r] * U, [0.05] * U, NS)
+          for r in (0.0, 0.2, 0.5)]
+    assert gs[0] < gs[1] < gs[2]
+
+
+def test_gamma_increasing_in_per():
+    gs = [gamma(LTFL, RS, [4] * U, [0.2] * U, [q] * U, NS)
+          for q in (0.0, 0.1, 0.3)]
+    assert gs[0] < gs[1] < gs[2]
+
+
+def test_theorem1_bound_shrinks_with_rounds():
+    g = gamma(LTFL, RS, [8] * U, [0.0] * U, [0.01] * U, NS)
+    b10 = theorem1_bound(LTFL, 5.0, [g] * 10)
+    b100 = theorem1_bound(LTFL, 5.0, [g] * 100)
+    assert b100 < b10
+    # the floor is the average Gamma (Eq. 30)
+    assert b100 > g * 0.99
+
+
+def test_v2_guard():
+    with pytest.raises(ValueError):
+        LTFLConfig(v2=0.2)

@@ -1,0 +1,110 @@
+"""Data pipeline, optimizers, checkpointing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore, save
+from repro.data import (
+    ArrayDataset,
+    class_histogram,
+    dirichlet_partition,
+    iid_partition,
+    synthetic_cifar,
+    synthetic_lm,
+)
+from repro.optim import adamw, apply_updates, momentum, sgd
+
+
+# ---------------------------- data ---------------------------------------- #
+def test_synthetic_cifar_shapes():
+    x, y = synthetic_cifar(200, seed=0)
+    assert x.shape == (200, 32, 32, 3) and y.shape == (200,)
+    assert x.dtype == np.float32 and np.abs(x).max() <= 1.0
+    assert set(np.unique(y)) <= set(range(10))
+
+
+def test_synthetic_templates_shared_across_seeds():
+    x0, y0 = synthetic_cifar(500, seed=0, noise=0.0, max_shift=0)
+    x1, y1 = synthetic_cifar(500, seed=1, noise=0.0, max_shift=0)
+    # same class -> identical noiseless image regardless of sample seed
+    c = int(y0[0])
+    i1 = int(np.where(y1 == c)[0][0])
+    np.testing.assert_allclose(x0[0], x1[i1], atol=1e-6)
+
+
+def test_iid_partition_disjoint(rng):
+    parts = iid_partition(1000, [100, 200, 300], rng)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(set(allidx.tolist())) == 600
+    assert [len(p) for p in parts] == [100, 200, 300]
+
+
+def test_dirichlet_skew(rng):
+    _, y = synthetic_cifar(6000, seed=0)
+    sizes = [300] * 8
+    skewed = dirichlet_partition(y, sizes, alpha=0.1, rng=rng)
+    mild = dirichlet_partition(y, sizes, alpha=10.0, rng=rng)
+    h_skew = class_histogram(y, skewed, 10) / 300.0
+    h_mild = class_histogram(y, mild, 10) / 300.0
+
+    def mean_entropy(h):
+        p = np.clip(h, 1e-9, 1)
+        return float(np.mean(-np.sum(p * np.log(p), axis=1)))
+
+    assert mean_entropy(h_skew) < mean_entropy(h_mild)
+    assert all(len(p) == 300 for p in skewed)
+
+
+def test_synthetic_lm_periodicity():
+    toks = synthetic_lm(4, 64, 100, seed=0, period=8, noise=0.0)
+    np.testing.assert_array_equal(toks[:, :8], toks[:, 8:16])
+
+
+def test_dataset_batching(rng):
+    ds = ArrayDataset({"x": np.arange(10), "y": np.arange(10) * 2})
+    b = ds.batch(4, rng)
+    assert b["x"].shape == (4,)
+    np.testing.assert_array_equal(b["y"], b["x"] * 2)
+    sub = ds.subset(np.array([1, 3]))
+    assert sub.size == 2
+
+
+# ---------------------------- optim ---------------------------------------- #
+@pytest.mark.parametrize("opt_fn", [lambda: sgd(0.1),
+                                    lambda: momentum(0.02),
+                                    lambda: adamw(0.05)])
+def test_optimizers_minimize_quadratic(opt_fn):
+    opt = opt_fn()
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    losses = []
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+        losses.append(float(loss(params)))
+    assert min(losses) < 5e-2, min(losses)
+
+
+# ---------------------------- checkpoint ----------------------------------- #
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16) * 1.5,
+                  "d": jnp.array(7, jnp.int32)}}
+    save(str(tmp_path), 3, tree, metadata={"note": "test"})
+    save(str(tmp_path), 10, tree)
+    assert latest_step(str(tmp_path)) == 10
+    out = restore(str(tmp_path), tree, step=3)
+    assert out["b"]["c"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(tree["a"]))
+    np.testing.assert_allclose(np.asarray(out["b"]["c"], np.float32), 1.5)
+
+
+def test_checkpoint_missing(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore(str(tmp_path), {"a": jnp.zeros(1)})

@@ -1,0 +1,75 @@
+"""Edge-mode federated rounds: all five schemes under identical accounting."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import LTFLConfig
+from repro.configs.ltfl_paper import ResNetConfig
+from repro.data import ArrayDataset, synthetic_cifar
+from repro.fed import (
+    ALL_SCHEMES,
+    FedRunner,
+    FedSGDScheme,
+    LTFLScheme,
+)
+from repro.models.resnet import ResNet
+
+LTFL = LTFLConfig(num_devices=5, samples_min=100, samples_max=150,
+                  bo_iters=3, alt_max_iters=2)
+
+
+@pytest.fixture(scope="module")
+def world():
+    imgs, labels = synthetic_cifar(900, seed=0)
+    timgs, tlabels = synthetic_cifar(300, seed=1)
+    train = ArrayDataset({"images": imgs, "labels": labels})
+    test = ArrayDataset({"images": timgs, "labels": tlabels})
+    model = ResNet(ResNetConfig(stem_channels=16,
+                                group_channels=(16, 32, 32, 64)))
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params, train, test
+
+
+@pytest.mark.parametrize("scheme_name", sorted(ALL_SCHEMES))
+def test_scheme_runs_three_rounds(scheme_name, world):
+    model, params, train, test = world
+    runner = FedRunner(model, params, LTFL, train, test,
+                       ALL_SCHEMES[scheme_name](), batch_size=32, seed=0)
+    hist = runner.run(3)
+    assert len(hist) == 3
+    for rec in hist:
+        assert np.isfinite(rec.train_loss)
+        assert rec.delay > 0 and rec.energy > 0
+        assert 0 <= rec.received <= LTFL.num_devices
+    assert hist[-1].cum_delay == pytest.approx(
+        sum(r.delay for r in hist))
+
+
+def test_ltfl_respects_constraints(world):
+    model, params, train, test = world
+    runner = FedRunner(model, params, LTFL, train, test, LTFLScheme(),
+                       batch_size=32, seed=0)
+    rec = runner.run_round(0)
+    # LTFL's closed-form controls keep every round within T_max (Eq. 38b)
+    assert rec.delay <= LTFL.t_max * 1.01
+
+
+def test_fedsgd_larger_payload_than_ltfl(world):
+    """FedSGD uploads 32-bit full gradients; LTFL uploads <=8-bit pruned
+    ones — its uplink (and typically total) delay must be smaller."""
+    model, params, train, test = world
+    r_sgd = FedRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                      batch_size=32, seed=0)
+    r_ltfl = FedRunner(model, params, LTFL, train, test, LTFLScheme(),
+                       batch_size=32, seed=0)
+    d_sgd = r_sgd.run_round(0).delay
+    d_ltfl = r_ltfl.run_round(0).delay
+    assert d_ltfl <= d_sgd
+
+
+def test_non_iid_partition_runs(world):
+    model, params, train, test = world
+    runner = FedRunner(model, params, LTFL, train, test, LTFLScheme(),
+                       batch_size=32, non_iid_alpha=0.1, seed=0)
+    rec = runner.run_round(0)
+    assert np.isfinite(rec.train_loss)

@@ -1,0 +1,87 @@
+"""The jit-able datacenter LTFL train step (repro.core.ltfl_step)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import make_fl_train_step, make_plain_train_step
+from repro.models import build_model, make_train_batch
+from repro.optim import sgd
+
+C = 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.reduce_for_smoke(configs.get_arch("granite-8b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b = make_train_batch(cfg, C * 2, 32)
+    batch = jax.tree_util.tree_map(
+        lambda x: x.reshape(C, 2, *x.shape[1:]), b)
+    return cfg, model, params, batch
+
+
+def _controls(drop=0.0):
+    return {"rho": jnp.array([0.0, 0.2, 0.4, 0.5]),
+            "delta": jnp.array([8.0, 4.0, 2.0, 8.0]),
+            "drop_prob": jnp.full((C,), drop),
+            "weights": jnp.array([400.0, 500.0, 450.0, 600.0])}
+
+
+def test_loss_decreases(setup):
+    cfg, model, params, batch = setup
+    opt = sgd(0.1)
+    opt_state = opt.init(params)
+    step = jax.jit(make_fl_train_step(model, opt, C, prune_block=32))
+    losses = []
+    for i in range(8):
+        params, opt_state, m = step(params, opt_state, batch,
+                                    _controls(), jax.random.PRNGKey(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_all_received_without_drops(setup):
+    cfg, model, params, batch = setup
+    opt = sgd(0.1)
+    step = jax.jit(make_fl_train_step(model, opt, C, prune_block=32))
+    _, _, m = step(params, opt.init(params), batch, _controls(0.0),
+                   jax.random.PRNGKey(0))
+    assert int(m["clients_received"]) == C
+
+
+def test_certain_drop_freezes_params(setup):
+    cfg, model, params, batch = setup
+    opt = sgd(0.1)
+    step = jax.jit(make_fl_train_step(model, opt, C, prune_block=32))
+    new_params, _, m = step(params, opt.init(params), batch,
+                            _controls(1.0), jax.random.PRNGKey(0))
+    assert int(m["clients_received"]) == 0
+    diffs = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        params, new_params)
+    assert max(jax.tree_util.tree_leaves(diffs)) == 0.0
+
+
+def test_ablation_switches(setup):
+    cfg, model, params, batch = setup
+    opt = sgd(0.1)
+    for kw in ({"quantize": False}, {"prune": False},
+               {"simulate_drops": False}):
+        step = jax.jit(make_fl_train_step(model, opt, C, prune_block=32,
+                                          **kw))
+        p, _, m = step(params, opt.init(params), batch, _controls(),
+                       jax.random.PRNGKey(0))
+        assert np.isfinite(float(m["loss"]))
+
+
+def test_plain_step(setup):
+    cfg, model, params, _ = setup
+    batch = make_train_batch(cfg, 4, 32)
+    opt = sgd(0.1)
+    step = jax.jit(make_plain_train_step(model, opt))
+    p, s, m = step(params, opt.init(params), batch, jax.random.PRNGKey(0))
+    assert np.isfinite(float(m["loss"]))

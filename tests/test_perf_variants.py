@@ -1,0 +1,114 @@
+"""Numerics of the beyond-paper perf variants (EXPERIMENTS.md §Perf):
+int8 quantized collectives and dense MoE token dispatch must be
+numerically faithful to their baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core.quantization import (
+    dequantize_int8,
+    quantize_int8,
+    quantize_int8_pytree,
+)
+from repro.models import moe as moe_mod
+from repro.models.common import init_params
+
+
+def test_int8_roundtrip_bounded():
+    g = jax.random.normal(jax.random.PRNGKey(0), (4096,))
+    lv, sc = quantize_int8(g, jax.random.PRNGKey(1))
+    assert lv.dtype == jnp.int8
+    back = dequantize_int8(lv, sc, dtype=jnp.float32)
+    step = float(sc)
+    assert float(jnp.max(jnp.abs(back - g))) <= step * 1.001
+
+
+def test_int8_unbiased():
+    g = jax.random.normal(jax.random.PRNGKey(2), (512,))
+    reps = []
+    for i in range(300):
+        lv, sc = quantize_int8(g, jax.random.PRNGKey(100 + i))
+        reps.append(dequantize_int8(lv, sc, jnp.float32))
+    bias = jnp.abs(jnp.mean(jnp.stack(reps), 0) - g)
+    scale = float(jnp.max(jnp.abs(g))) / 127.0
+    assert float(jnp.mean(bias)) < scale * 0.15
+
+
+def test_int8_pytree_structure():
+    tree = {"a": jnp.ones((8, 8)), "b": jnp.zeros((4,))}
+    levels, scales = quantize_int8_pytree(tree, jax.random.PRNGKey(0))
+    assert levels["a"].dtype == jnp.int8
+    assert scales["a"].shape == ()
+
+
+def test_dense_token_dispatch_matches_gather():
+    cfg = configs.reduce_for_smoke(configs.get_arch("olmoe-1b-7b"))
+    p = init_params(jax.random.PRNGKey(0), moe_mod.moe_specs(cfg))
+    x = (jax.random.normal(jax.random.PRNGKey(1), (8, cfg.d_model))
+         .astype(jnp.bfloat16))
+    y_gather = moe_mod.moe_apply_token(cfg, p, x)
+    saved = moe_mod.TOKEN_DISPATCH
+    try:
+        moe_mod.TOKEN_DISPATCH = "dense"
+        y_dense = moe_mod.moe_apply_token(cfg, p, x)
+    finally:
+        moe_mod.TOKEN_DISPATCH = saved
+    np.testing.assert_allclose(np.asarray(y_dense, np.float32),
+                               np.asarray(y_gather, np.float32),
+                               atol=0.06, rtol=0.06)
+
+
+def test_dense_dispatch_shared_experts():
+    cfg = configs.reduce_for_smoke(configs.get_arch("deepseek-v2-lite-16b"))
+    p = init_params(jax.random.PRNGKey(0), moe_mod.moe_specs(cfg))
+    x = (jax.random.normal(jax.random.PRNGKey(1), (4, cfg.d_model))
+         .astype(jnp.bfloat16))
+    y_gather = moe_mod.moe_apply_token(cfg, p, x)
+    saved = moe_mod.TOKEN_DISPATCH
+    try:
+        moe_mod.TOKEN_DISPATCH = "dense"
+        y_dense = moe_mod.moe_apply_token(cfg, p, x)
+    finally:
+        moe_mod.TOKEN_DISPATCH = saved
+    np.testing.assert_allclose(np.asarray(y_dense, np.float32),
+                               np.asarray(y_gather, np.float32),
+                               atol=0.06, rtol=0.06)
+
+
+def test_rwkv_chunked_matches_sequential():
+    from repro.models import rwkv6
+    from repro.models import build_model, make_train_batch
+    cfg = configs.reduce_for_smoke(configs.get_arch("rwkv6-7b"))
+    model = build_model(cfg)
+    p = model.init(jax.random.PRNGKey(0))
+    b = make_train_batch(cfg, 2, 64)
+    logits_seq, _ = jax.jit(model.forward)(p, b)
+    saved = rwkv6.CHUNK
+    try:
+        rwkv6.CHUNK = 16
+        logits_chunk, _ = jax.jit(model.forward)(p, b)
+    finally:
+        rwkv6.CHUNK = saved
+    np.testing.assert_allclose(np.asarray(logits_chunk, np.float32),
+                               np.asarray(logits_seq, np.float32),
+                               atol=0.08, rtol=0.08)
+
+
+def test_mamba_chunked_matches_sequential():
+    from repro.models import mamba2
+    from repro.models import build_model, make_train_batch
+    cfg = configs.reduce_for_smoke(configs.get_arch("zamba2-2.7b"))
+    model = build_model(cfg)
+    p = model.init(jax.random.PRNGKey(0))
+    b = make_train_batch(cfg, 2, 64)
+    logits_seq, _ = jax.jit(model.forward)(p, b)
+    saved = mamba2.CHUNK
+    try:
+        mamba2.CHUNK = 16
+        logits_chunk, _ = jax.jit(model.forward)(p, b)
+    finally:
+        mamba2.CHUNK = saved
+    np.testing.assert_allclose(np.asarray(logits_chunk, np.float32),
+                               np.asarray(logits_seq, np.float32),
+                               atol=0.08, rtol=0.08)

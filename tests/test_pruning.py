@@ -1,0 +1,97 @@
+"""Model pruning (paper Eq. 11-13, Lemma 2) — unstructured + block."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pruning import (
+    actual_pruning_error,
+    block_importance,
+    block_prune,
+    magnitude_prune,
+    magnitude_prune_pytree,
+    prune_pytree,
+    tileable,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(rho=st.floats(0.0, 0.9), seed=st.integers(0, 2 ** 16))
+def test_exact_prune_fraction(rho, seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (64, 32))
+    pruned, mask = magnitude_prune(w, rho)
+    expect = int(np.floor(rho * w.size))
+    assert int(w.size - jnp.sum(mask)) == expect
+
+
+@settings(max_examples=25, deadline=None)
+@given(rho=st.floats(0.0, 0.9), seed=st.integers(0, 2 ** 16))
+def test_lemma2_bound(rho, seed):
+    """||w - w_hat||^2 <= rho ||w||^2 for magnitude pruning."""
+    w = jax.random.normal(jax.random.PRNGKey(seed), (64, 64))
+    pruned, _ = magnitude_prune(w, rho)
+    err = float(actual_pruning_error(w, pruned))
+    assert err <= rho * float(jnp.sum(w * w)) + 1e-5
+
+
+def test_smallest_entries_pruned():
+    w = jnp.array([[0.01, -5.0], [0.02, 4.0]])
+    pruned, mask = magnitude_prune(w, 0.5)
+    assert not bool(mask[0, 0]) and not bool(mask[1, 0])
+    assert bool(mask[0, 1]) and bool(mask[1, 1])
+
+
+def test_block_prune_tile_structure():
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 256))
+    pruned, tile_mask = block_prune(w, 0.25, block=64)
+    assert tile_mask.shape == (4, 4)
+    assert int(jnp.sum(~tile_mask)) == 4   # floor(0.25 * 16)
+    # pruned tiles are entirely zero; kept tiles untouched
+    t = np.asarray(pruned).reshape(4, 64, 4, 64)
+    for i in range(4):
+        for j in range(4):
+            if not bool(tile_mask[i, j]):
+                assert np.all(t[i, :, j, :] == 0)
+
+
+def test_block_lemma2_bound():
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 256))
+    for rho in (0.1, 0.3, 0.5):
+        pruned, tile_mask = block_prune(w, rho, block=64)
+        frac = float(jnp.mean(~tile_mask))
+        err = float(actual_pruning_error(w, pruned))
+        # Lemma 2 at tile granularity, with the realized fraction
+        assert err <= (frac + 1e-6) * float(jnp.sum(w * w))
+
+
+def test_block_importance_matches_ref():
+    from repro.kernels.ref import block_norms_ref
+    w = jax.random.normal(jax.random.PRNGKey(2), (256, 128))
+    imp = block_importance(w, 64)
+    ref = block_norms_ref(w, 64, 64)
+    np.testing.assert_allclose(np.asarray(imp), np.asarray(ref), rtol=1e-5)
+
+
+def test_pytree_exempts_1d():
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(3), (128, 128)),
+            "gamma": jnp.ones((128,))}
+    pruned, masks = prune_pytree(tree, 0.5, block=64)
+    np.testing.assert_array_equal(np.asarray(pruned["gamma"]), 1.0)
+    assert bool(jnp.all(masks["gamma"]))
+    assert float(jnp.mean(masks["w"].astype(jnp.float32))) < 1.0
+
+    mp, mm = magnitude_prune_pytree(tree, 0.5)
+    np.testing.assert_array_equal(np.asarray(mp["gamma"]), 1.0)
+
+
+def test_tileable():
+    assert tileable(jnp.zeros((256, 128)), 128)
+    assert not tileable(jnp.zeros((100, 128)), 128)
+    assert not tileable(jnp.zeros((128,)), 128)
+
+
+def test_rho_zero_identity():
+    w = jax.random.normal(jax.random.PRNGKey(4), (64, 64))
+    pruned, mask = magnitude_prune(w, 0.0)
+    np.testing.assert_array_equal(np.asarray(pruned), np.asarray(w))
+    assert bool(jnp.all(mask))

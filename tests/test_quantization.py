@@ -1,0 +1,90 @@
+"""Stochastic quantization (paper Eq. 16-18, Lemma 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import (
+    dequantize,
+    payload_bits,
+    quant_error_bound,
+    quantize,
+    quantize_dequantize,
+    quantize_pytree,
+    range_sq_sum,
+)
+
+
+def test_unbiased_lemma1():
+    """E[Q(g)] = g (Lemma 1), statistically."""
+    g = jax.random.normal(jax.random.PRNGKey(0), (2048,))
+    reps = jnp.stack([quantize_dequantize(g, 3, jax.random.PRNGKey(i))
+                      for i in range(300)])
+    bias = jnp.abs(jnp.mean(reps, 0) - g)
+    # per-coordinate standard error of the MC mean is step/(2 sqrt(300))
+    a = jnp.abs(g)
+    step = (jnp.max(a) - jnp.min(a)) / (2 ** 3 - 1)
+    assert float(jnp.mean(bias)) < float(step) * 0.15
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+def test_error_bound_eq26(bits):
+    g = jax.random.normal(jax.random.PRNGKey(1), (4096,))
+    q = quantize_dequantize(g, bits, jax.random.PRNGKey(2))
+    err = float(jnp.sum((q - g) ** 2))
+    a = jnp.abs(g)
+    rng_sq = float((jnp.max(a) - jnp.min(a)) ** 2) * g.size
+    bound = float(quant_error_bound(jnp.asarray(rng_sq), bits))
+    # Eq. 26 bounds the EXPECTED error; realized error concentrates below
+    # 4x the bound comfortably at these sizes
+    assert err <= 4.0 * bound
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.integers(1, 8), seed=st.integers(0, 2 ** 16))
+def test_within_one_step(bits, seed):
+    """Every quantized value lies within one step of the input."""
+    g = jax.random.normal(jax.random.PRNGKey(seed), (512,))
+    q = quantize_dequantize(g, bits, jax.random.PRNGKey(seed + 1))
+    a = jnp.abs(g)
+    step = (jnp.max(a) - jnp.min(a)) / (2 ** bits - 1)
+    assert float(jnp.max(jnp.abs(q - g))) <= float(step) * 1.001
+
+
+def test_sign_preserved():
+    g = jnp.array([-5.0, -0.1, 0.1, 3.0])
+    q = quantize_dequantize(g, 8, jax.random.PRNGKey(0))
+    assert bool(jnp.all(jnp.sign(q) == jnp.sign(g)))
+
+
+def test_levels_integer_range():
+    g = jax.random.normal(jax.random.PRNGKey(3), (256,))
+    qt = quantize(g, 4, jax.random.PRNGKey(4))
+    lv = np.asarray(qt.levels)
+    assert lv.min() >= 0 and lv.max() <= 2 ** 4 - 1
+    assert np.allclose(lv, np.round(lv))
+    rt = dequantize(qt)
+    assert rt.shape == g.shape
+
+
+def test_payload_bits_eq18():
+    assert float(payload_bits(1000, 8, 64)) == 8064.0
+
+
+def test_pytree_and_range_sq():
+    tree = {"a": jax.random.normal(jax.random.PRNGKey(5), (64, 64)),
+            "b": jnp.ones((32,))}
+    out = quantize_pytree(tree, 8, jax.random.PRNGKey(6))
+    assert jax.tree_util.tree_structure(out) == \
+        jax.tree_util.tree_structure(tree)
+    rs = float(range_sq_sum(tree))
+    assert rs > 0
+    # constant tensor contributes zero range
+    assert float(range_sq_sum({"c": jnp.ones((100,))})) == 0.0
+
+
+def test_constant_tensor_roundtrip():
+    g = jnp.full((128,), 0.7)
+    q = quantize_dequantize(g, 4, jax.random.PRNGKey(7))
+    np.testing.assert_allclose(np.asarray(q), 0.7, rtol=1e-6)
