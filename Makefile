@@ -1,0 +1,17 @@
+# CI entry points (documented in ROADMAP.md).
+#
+#   make test        — tier-1 verify: the full pytest suite with PYTHONPATH
+#                      handled (same command the PR driver runs).
+#   make bench-smoke — one tiny round-engine benchmark round: proves the
+#                      unified batched step compiles and beats the legacy
+#                      per-device loop on this machine.
+
+PY ?= python
+
+.PHONY: test bench-smoke
+
+test:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
+
+bench-smoke:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.round_engine --smoke

@@ -1,0 +1,186 @@
+"""Tentpole benchmark: the unified batched round engine vs the legacy
+per-device loop.
+
+``legacy`` reproduces the pre-refactor FedRunner inner loop exactly as a
+cost model: per device, a separate jitted prune+grad dispatch, a host jit
+dispatch for the gradient range, a jitted quantize at a host-float delta,
+then a host stack + aggregate — O(U) dispatches and O(U) host-device
+round-trips per round. ``engine`` is ONE call into the compiled unified
+step (repro.core.ltfl_step) doing identical tensor work (prune, grad,
+mask, quantize, drop, aggregate, update) for all clients at once.
+
+Run:  PYTHONPATH=src python -m benchmarks.round_engine [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_artifact
+from repro.configs.ltfl_paper import ResNetConfig
+from repro.core.aggregation import aggregate
+from repro.core.compressors import ltfl_quantizer
+from repro.core.ltfl_step import make_fl_train_step
+from repro.core.pruning import magnitude_prune_pytree
+from repro.core.quantization import quantize_pytree, range_sq_sum
+from repro.data import synthetic_cifar
+from repro.models.resnet import ResNet
+from repro.optim import apply_updates, sgd
+
+
+def _block_until_ready(tree):
+    for leaf in jax.tree_util.tree_leaves(tree):
+        leaf.block_until_ready()
+
+
+def _world(clients: int, batch: int, width: int, seed: int = 0):
+    model = ResNet(ResNetConfig(stem_channels=width,
+                                group_channels=(width, width * 2,
+                                                width * 2, width * 4)))
+    params = model.init(jax.random.PRNGKey(seed))
+    imgs, labels = synthetic_cifar(clients * batch, seed=seed)
+    cbatch = {
+        "images": jnp.asarray(imgs).reshape(clients, batch,
+                                            *imgs.shape[1:]),
+        "labels": jnp.asarray(labels).reshape(clients, batch),
+    }
+    rho = np.linspace(0.0, 0.5, clients)
+    delta = np.tile([8.0, 4.0, 6.0, 3.0], clients)[:clients]
+    weights = np.linspace(100.0, 200.0, clients)
+    alpha = np.ones(clients)
+    return model, params, cbatch, rho, delta, weights, alpha
+
+
+def prep_legacy(model, params, cbatch, rho, delta, weights, alpha):
+    """The pre-refactor path: per-device jit dispatches + host compression.
+    Returns timeit(rounds) -> wall seconds (already warmed/compiled)."""
+    opt = sgd(0.1)
+    opt_state = opt.init(params)
+    clients = len(rho)
+    grad_fn = jax.jit(jax.value_and_grad(model.loss))
+    prune_fn = jax.jit(magnitude_prune_pytree)
+    rsq_fn = jax.jit(range_sq_sum)
+    quant_fn = jax.jit(quantize_pytree)
+    agg_fn = jax.jit(aggregate)
+
+    def one_round(params, opt_state, key):
+        keys = jax.random.split(key, clients + 1)
+        grads = []
+        for u in range(clients):
+            b = jax.tree_util.tree_map(lambda x: x[u], cbatch)
+            if rho[u] > 0:
+                pruned, masks = prune_fn(params, rho[u])
+            else:
+                pruned, masks = params, None
+            _, g = grad_fn(pruned, b)
+            if masks is not None:
+                g = jax.tree_util.tree_map(
+                    lambda gi, m: gi * m.astype(gi.dtype), g, masks)
+            float(rsq_fn(g))          # host read, as the old engine did
+            g = quant_fn(g, float(delta[u]), keys[u])
+            grads.append(g)
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *grads)
+        agg = agg_fn(stacked, jnp.asarray(weights, jnp.float32),
+                     jnp.asarray(alpha, jnp.float32))
+        updates, opt_state = opt.update(agg, opt_state, params)
+        return apply_updates(params, updates), opt_state
+
+    p, s = one_round(params, opt_state, jax.random.PRNGKey(0))  # warmup
+    _block_until_ready(p)
+
+    def timeit(rounds: int) -> float:
+        p, s = params, opt_state
+        t0 = time.time()
+        for r in range(rounds):
+            p, s = one_round(p, s, jax.random.PRNGKey(r + 1))
+        _block_until_ready(p)
+        return time.time() - t0
+
+    return timeit
+
+
+def prep_engine(model, params, cbatch, rho, delta, weights, alpha):
+    """The unified path: one compiled step call per round."""
+    opt = sgd(0.1)
+    opt_state = opt.init(params)
+    clients = len(rho)
+    step_fn = make_fl_train_step(model, opt, clients, prune=True,
+                                 prune_kind="magnitude",
+                                 compressor=ltfl_quantizer(),
+                                 simulate_drops=False)
+    step = jax.jit(step_fn)
+    comp_state = step_fn.init_comp_state(params)
+    controls = {"rho": jnp.asarray(rho, jnp.float32),
+                "delta": jnp.asarray(delta, jnp.float32),
+                "weights": jnp.asarray(weights, jnp.float32),
+                "alpha": jnp.asarray(alpha, jnp.float32)}
+
+    p, s, cs, m = step(params, opt_state, comp_state, cbatch, controls,
+                       jax.random.PRNGKey(0))               # warmup/compile
+    _block_until_ready(p)
+
+    def timeit(rounds: int) -> float:
+        p, s, cs = params, opt_state, comp_state
+        t0 = time.time()
+        for r in range(rounds):
+            p, s, cs, m = step(p, s, cs, cbatch, controls,
+                               jax.random.PRNGKey(r + 1))
+            float(m["range_sq"][0])   # same per-round host read as FedRunner
+        _block_until_ready(p)
+        return time.time() - t0
+
+    return timeit
+
+
+def run(client_counts=(4, 16, 32), rounds: int = 2, trials: int = 3,
+        batch: int = 4, width: int = 8) -> dict:
+    """Interleave legacy/engine trials and take per-path minima — this
+    container's wall clock is noisy (shared cores), and min-of-trials is
+    the standard way to read through load spikes.
+
+    The default per-device batch of 4 is the paper's edge regime (many
+    small devices): there the legacy path is dispatch-bound and the
+    unified engine wins ~2x at U>=16. At large per-device batches the
+    conv compute dominates both paths and the gap narrows toward parity
+    (pass --batch to explore)."""
+    rows = []
+    for clients in client_counts:
+        world = _world(clients, batch, width)
+        run_l = prep_legacy(*world)
+        run_e = prep_engine(*world)
+        tl, te = [], []
+        for _ in range(trials):
+            tl.append(run_l(rounds) / rounds)
+            te.append(run_e(rounds) / rounds)
+        t_legacy, t_engine = min(tl), min(te)
+        speedup = t_legacy / t_engine
+        emit(f"round_engine/legacy_U{clients}", t_legacy * 1e6,
+             f"per-device loop, {clients} clients, min of {trials}")
+        emit(f"round_engine/unified_U{clients}", t_engine * 1e6,
+             f"one compiled step, {clients} clients, "
+             f"speedup={speedup:.2f}x")
+        rows.append({"clients": clients, "legacy_s": t_legacy,
+                     "engine_s": t_engine, "speedup": speedup,
+                     "legacy_trials_s": tl, "engine_trials_s": te})
+    payload = {"rounds": rounds, "trials": trials, "batch": batch,
+               "width": width, "rows": rows}
+    save_artifact("round_engine", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny single-U run for make bench-smoke")
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+    if args.smoke:
+        run(client_counts=(8,), rounds=1, trials=2, batch=4, width=8)
+    else:
+        run(rounds=args.rounds, trials=args.trials, batch=args.batch)

@@ -56,7 +56,9 @@ def main():
     opt = sgd(0.3)
     opt_state = opt.init(params)
     C = args.clients
-    step = jax.jit(make_fl_train_step(model, opt, C, prune_block=64))
+    step_fn = make_fl_train_step(model, opt, C, prune_block=64)
+    comp_state = step_fn.init_comp_state(params)
+    step = jax.jit(step_fn)
 
     toks = synthetic_lm(C * args.per_client_batch * 8, args.seq + 1,
                         cfg.vocab_size, seed=0)
@@ -73,8 +75,9 @@ def main():
         b = jnp.asarray(toks[idx]).reshape(C, args.per_client_batch, -1)
         # model.loss shifts internally (predict t+1 from t)
         batch = {"tokens": b[:, :, :-1], "labels": b[:, :, :-1]}
-        params, opt_state, m = step(params, opt_state, batch, controls,
-                                    jax.random.PRNGKey(i))
+        params, opt_state, comp_state, m = step(
+            params, opt_state, comp_state, batch, controls,
+            jax.random.PRNGKey(i))
         if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
             print(f"step {i:4d} loss={float(m['loss']):.4f} "
                   f"recv={int(m['clients_received'])}/{C} "

@@ -2,23 +2,28 @@ from repro.core import (
     aggregation,
     bayesopt,
     channel,
+    compressors,
     controller,
     convergence,
     delay_energy,
     pruning,
     quantization,
 )
+from repro.core.compressors import Compressor, get_compressor
 from repro.core.ltfl_step import make_fl_train_step, make_plain_train_step
 
 __all__ = [
     "aggregation",
     "bayesopt",
     "channel",
+    "compressors",
     "controller",
     "convergence",
     "delay_energy",
     "pruning",
     "quantization",
+    "Compressor",
+    "get_compressor",
     "make_fl_train_step",
     "make_plain_train_step",
 ]

@@ -1,32 +1,50 @@
-"""The jit-able distributed LTFL federated train step.
+"""The unified, jit-able LTFL federated round step.
 
-This is the datacenter-scale realization of the paper's round (Eq. 19-20):
-FL clients are laid out along mesh axes (DESIGN.md section 3); the batch
-carries an explicit leading client axis C; per-client gradients are
-computed with vmap(grad), pruned (block-structured, Lemma-2-compatible),
-stochastically quantized (Lemma 1), dropped per the packet-error Bernoulli
-(Eq. 4), and aggregated with sample-count weights (Eq. 19). The aggregation
-lowers to the cross-client all-reduce — the "uplink" of the TPU mapping.
+This is the single batched realization of the paper's round (Eq. 8-20)
+that BOTH engines share: the edge-mode ``repro.fed.rounds.FedRunner``
+(CIFAR/ResNet, wireless accounting on host) and the datacenter launcher /
+dry-run (clients on mesh axes, DESIGN.md section 3). The batch carries an
+explicit leading client axis C; per-client gradients are computed with
+vmap(grad), pruned (unstructured for paper-faithful edge runs, block-
+structured for MXU), compressed by a pluggable jit-able ``Compressor``
+stage (repro.core.compressors: LTFL stochastic quantization, SignSGD
+sign + majority vote, STC ternary + carried error-feedback residual,
+identity), dropped per the packet-error Bernoulli (Eq. 4), and aggregated
+with sample-count weights (Eq. 19). Compressor state (STC residuals) is an
+explicit carried pytree in the step signature, so stateful schemes retain
+one-compiled-call-per-round semantics.
 
-``controls`` come from the Algorithm-1 controller (repro.core.controller):
+``controls`` come from the scheme / Algorithm-1 controller:
     rho        (C,) pruning ratios
-    delta      (C,) quantization bit-widths
-    drop_prob  (C,) packet error rates q_u(p_u)
+    delta      (C,) quantization bit-widths (0 => passthrough)
     weights    (C,) sample counts N_u
+    drop_prob  (C,) packet error rates q_u(p_u)  (in-jit Bernoulli), OR
+    alpha      (C,) host-sampled transmission outcomes (edge engine: the
+               channel stays on host, Eq. 4, only tensor work is jitted)
+
+With ``use_kernels=True`` the 2-D-tileable leaves route through the Pallas
+kernels in repro.kernels.ops (block-prune norms/masking and the dynamic-
+bits stochastic quantizer) — interpret-mode on this CPU container,
+identical kernel bodies on real TPU.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.aggregation import aggregate
-from repro.core.pruning import prune_pytree
+from repro.core.compressors import (
+    Compressor,
+    get_compressor,
+    identity_compressor,
+    ltfl_quantizer,
+)
+from repro.core.pruning import magnitude_prune_pytree, prune_pytree
 from repro.core.quantization import (
     dequantize_int8,
     quantize_int8_pytree,
-    quantize_pytree,
     range_sq_sum,
 )
 from repro.optim import Optimizer, apply_updates, global_norm
@@ -38,15 +56,29 @@ def make_fl_train_step(model, optimizer: Optimizer, n_clients: int,
                        *, prune_block: int = 128,
                        quantize: bool = True,
                        prune: bool = True,
+                       prune_kind: str = "block",
                        simulate_drops: bool = True,
+                       compressor: Union[Compressor, str, None] = None,
+                       use_kernels: bool = False,
                        param_shardings=None,
                        int8_collective: bool = False,
                        gather_shardings=None
                        ) -> Callable:
-    """Build step(params, opt_state, batch, controls, key)
-    -> (params, opt_state, metrics).
+    """Build step(params, opt_state, comp_state, batch, controls, key)
+    -> (params, opt_state, comp_state, metrics).
 
-    batch leaves carry a leading client axis C == n_clients.
+    batch leaves carry a leading client axis C == n_clients. ``compressor``
+    selects the uplink compression stage (a Compressor, a registry name,
+    or None => the legacy quantize/no-quantize switch); ``comp_state`` is
+    its carried pytree — use the returned step's ``init_comp_state(params)``
+    to build the initial value (() for stateless compressors).
+    ``use_kernels`` reaches the compressor only for None/name-based specs;
+    a ready-made Compressor instance keeps whatever kernel setting it was
+    built with (thread use_kernels into its factory yourself), while the
+    flag still controls the pruning stage.
+
+    ``prune_kind`` picks unstructured "magnitude" pruning (the edge
+    engine's paper-faithful Eq. 12-13) or MXU-"block" pruning (datacenter).
     The quantize/prune/simulate_drops switches exist for the paper's
     ablation (Fig. 2) and for baselines. ``param_shardings`` (a pytree of
     NamedShardings shaped like the STACKED (n_clients, ...) grads) pins the
@@ -54,6 +86,20 @@ def make_fl_train_step(model, optimizer: Optimizer, n_clients: int,
     temporaries — to the parameter layout; without it GSPMD may replicate
     multi-GB masks and random bits on every device.
     """
+    if compressor is None:
+        comp = ltfl_quantizer(use_kernels=use_kernels) if quantize \
+            else identity_compressor()
+    else:
+        if int8_collective:
+            raise ValueError(
+                "int8_collective is a wire-format override; "
+                "pass compressor=None")
+        # name-based specs get the engine-wide kernel flag threaded through
+        # (only the ltfl quantizer has a kernel variant)
+        kw = {"use_kernels": use_kernels} if compressor == "ltfl" else {}
+        comp = get_compressor(compressor, **kw)
+    if prune_kind not in ("block", "magnitude"):
+        raise ValueError(f"prune_kind={prune_kind!r}")
 
     def constrain_stacked(tree):
         """Pin the (C, ...) per-client grad tree to its shardings — applied
@@ -63,9 +109,15 @@ def make_fl_train_step(model, optimizer: Optimizer, n_clients: int,
         return jax.tree_util.tree_map(
             jax.lax.with_sharding_constraint, tree, param_shardings)
 
+    def _prune(params, rho):
+        if prune_kind == "magnitude":
+            return magnitude_prune_pytree(params, rho)
+        return prune_pytree(params, rho, block=prune_block,
+                            use_kernels=use_kernels)
+
     def client_grad(params, cbatch, rho):
         if prune:
-            pruned, masks = prune_pytree(params, rho, block=prune_block)
+            pruned, masks = _prune(params, rho)
         else:
             pruned, masks = params, None
         loss, g = jax.value_and_grad(model.loss)(pruned, cbatch)
@@ -76,14 +128,15 @@ def make_fl_train_step(model, optimizer: Optimizer, n_clients: int,
         rsq = range_sq_sum(g)
         return g, loss, rsq
 
-    def step(params: PyTree, opt_state: PyTree, batch: PyTree,
-             controls: Dict[str, jax.Array], key: jax.Array
-             ) -> Tuple[PyTree, PyTree, Dict[str, jax.Array]]:
+    def step(params: PyTree, opt_state: PyTree, comp_state: PyTree,
+             batch: PyTree, controls: Dict[str, jax.Array], key: jax.Array
+             ) -> Tuple[PyTree, PyTree, PyTree, Dict[str, jax.Array]]:
         keys = jax.random.split(key, n_clients + 1)
         grads, losses, rsqs = jax.vmap(
             client_grad, in_axes=(None, 0, 0))(
             params, batch, controls["rho"])
         grads = constrain_stacked(grads)
+        # int8_collective with an explicit compressor was rejected above
         if quantize and int8_collective:
             # beyond-paper wire format: move int8 levels across the client
             # axis (all-gather of 1 byte/coord) instead of letting XLA
@@ -99,28 +152,35 @@ def make_fl_train_step(model, optimizer: Optimizer, n_clients: int,
                 lambda lv, sc: dequantize_int8(
                     lv, sc.reshape((n_clients,) + (1,) * (lv.ndim - 1))),
                 levels, scales)
-        elif quantize:
-            grads = jax.vmap(quantize_pytree)(grads, controls["delta"],
-                                              keys[:n_clients])
+        else:
+            grads, comp_state = jax.vmap(
+                comp.compress, in_axes=(0, 0, 0, 0))(
+                grads, controls["delta"], keys[:n_clients], comp_state)
             grads = constrain_stacked(grads)
 
-        if simulate_drops:
+        if "alpha" in controls:                    # host-sampled channel
+            alpha = controls["alpha"].astype(jnp.float32)
+        elif simulate_drops:
             alpha = (jax.random.uniform(keys[-1], (n_clients,))
                      >= controls["drop_prob"]).astype(jnp.float32)   # Eq. 4
         else:
             alpha = jnp.ones((n_clients,), jnp.float32)
 
         g = aggregate(grads, controls["weights"], alpha)             # Eq. 19
+        g = comp.server_transform(g)
         updates, opt_state = optimizer.update(g, opt_state, params)
         params = apply_updates(params, updates)                      # Eq. 20
         metrics = {
             "loss": jnp.mean(losses),
             "grad_norm": global_norm(g),
             "clients_received": jnp.sum(alpha),
+            "range_sq": rsqs,
             "range_sq_mean": jnp.mean(rsqs),
         }
-        return params, opt_state, metrics
+        return params, opt_state, comp_state, metrics
 
+    step.compressor = comp
+    step.init_comp_state = lambda params: comp.init_state(params, n_clients)
     return step
 
 

@@ -109,19 +109,40 @@ def block_prune(w: jax.Array, rho: jax.Array, block: int = BLOCK
     return pruned, tile_mask
 
 
-def prune_pytree(w: PyTree, rho: jax.Array, block: int = BLOCK
-                 ) -> Tuple[PyTree, PyTree]:
+def prune_pytree(w: PyTree, rho: jax.Array, block: int = BLOCK,
+                 *, use_kernels: bool = False) -> Tuple[PyTree, PyTree]:
     """Block-prune tileable leaves; magnitude-prune other >=2-D leaves;
     EXEMPT 1-D leaves (norm scales, biases) — pruning them destroys the
     network for negligible savings, and no pruning system touches them.
 
     Returns (pruned_tree, element_mask_tree) where masks are element-level
     (tile masks are expanded) so they can gate gradients uniformly.
+
+    ``use_kernels`` routes the bandwidth-heavy passes of tileable leaves
+    (tile norms, masking) through the Pallas kernels in repro.kernels.ops.
+    Collapsing the leading dims into rows keeps every tile intact
+    (shape[-2] % block == 0) and preserves the global tile ranking,
+    flatten order and all — masks are bit-identical to the jnp path.
     """
+    if use_kernels:
+        from repro.kernels import ops as kops
+
+        def kernel_block_leaf(x):
+            m2 = x.reshape(-1, x.shape[-1])
+            pruned, tile_mask = kops.block_prune_2d(m2, rho,
+                                                    block=(block, block))
+            emask = jnp.broadcast_to(
+                tile_mask[:, None, :, None],
+                (tile_mask.shape[0], block, tile_mask.shape[1], block)
+            ).reshape(x.shape)
+            return pruned.reshape(x.shape), emask
+
     def leaf(x):
         if x.ndim < 2:
             return x, jnp.ones(x.shape, bool)
         if tileable(x, block):
+            if use_kernels:
+                return kernel_block_leaf(x)
             imp = block_importance(x, block)
             tile_mask = _rank_mask(imp, rho)
             t = _tile_view(x, block)

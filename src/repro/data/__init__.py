@@ -3,11 +3,12 @@ from repro.data.partition import (
     dirichlet_partition,
     iid_partition,
 )
-from repro.data.pipeline import ArrayDataset
+from repro.data.pipeline import ArrayDataset, ClientBatcher
 from repro.data.synthetic import synthetic_cifar, synthetic_lm
 
 __all__ = [
     "ArrayDataset",
+    "ClientBatcher",
     "synthetic_cifar",
     "synthetic_lm",
     "iid_partition",

@@ -1,7 +1,14 @@
-"""Minimal batching pipeline for the federated loops and examples."""
+"""Minimal batching pipeline for the federated loops and examples.
+
+``ArrayDataset`` is the single-stream dict-of-arrays view;
+``ClientBatcher`` is the federated view: it owns every client's index
+partition into one shared backing dataset and materializes the stacked
+(C, B, ...) batch the unified round engine consumes — one fancy-index
+gather per leaf per round instead of C per-device dict copies.
+"""
 from __future__ import annotations
 
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator, Optional, Sequence
 
 import numpy as np
 
@@ -33,3 +40,37 @@ class ArrayDataset:
             for ofs in range(0, self.size - batch_size + 1, batch_size):
                 idx = perm[ofs:ofs + batch_size]
                 yield {k: v[idx] for k, v in self.arrays.items()}
+
+
+class ClientBatcher:
+    """Stacked client-batch construction over a shared backing dataset.
+
+    ``parts[u]`` holds client u's global indices into ``base`` (from
+    ``iid_partition`` / ``dirichlet_partition``). ``batch`` samples B
+    local indices per client (with replacement only when a client holds
+    fewer than B samples, matching ``ArrayDataset.batch``), maps them to a
+    (C, B) global index matrix, and gathers each leaf once — the input the
+    unified round engine's vmapped step expects.
+    """
+
+    def __init__(self, base: ArrayDataset, parts: Sequence[np.ndarray]):
+        if not parts:
+            raise ValueError("need at least one client partition")
+        self.base = base
+        self.parts = [np.asarray(p, dtype=np.int64) for p in parts]
+        for u, p in enumerate(self.parts):
+            if p.size == 0:
+                raise ValueError(f"client {u} has an empty partition")
+        self.num_clients = len(self.parts)
+
+    def batch(self, batch_size: int, rng: np.random.Generator
+              ) -> Dict[str, np.ndarray]:
+        """One stacked (C, B, ...) random batch across all clients."""
+        idx = np.stack([
+            p[rng.choice(p.size, size=batch_size,
+                         replace=batch_size > p.size)]
+            for p in self.parts])
+        return {k: v[idx] for k, v in self.base.arrays.items()}
+
+    def client_sizes(self) -> np.ndarray:
+        return np.asarray([p.size for p in self.parts], dtype=np.int64)

@@ -1,6 +1,7 @@
 from repro.fed.rounds import FedRunner, RoundRecord
 from repro.fed.schemes import (
     BaseScheme,
+    Controls,
     FedMPScheme,
     FedSGDScheme,
     LTFLScheme,
@@ -20,6 +21,7 @@ __all__ = [
     "FedRunner",
     "RoundRecord",
     "BaseScheme",
+    "Controls",
     "LTFLScheme",
     "FedSGDScheme",
     "SignSGDScheme",

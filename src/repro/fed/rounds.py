@@ -1,43 +1,48 @@
-"""The paper-scale federated round engine (edge mode).
+"""The paper-scale federated round engine (edge mode), on the unified
+batched step.
 
 One round (Section 2, Eq. 8-10/14-15/19-20):
-  1. scheme supplies (rho_u, delta_u, p_u) — for LTFL via Algorithm 1;
-  2. every device prunes the global model (Eq. 12-13), runs GD on its local
-     data at the pruned weights (Eq. 8), masks and compresses the gradient;
-  3. the channel drops packets per alpha_u ~ Bernoulli(1 - q_u(p_u)) (Eq. 4);
-  4. the server aggregates received gradients (Eq. 19) and updates the
-     global model (Eq. 20);
-  5. delay (Eq. 34) and energy (Eq. 37) are charged analytically from the
-     paper's models, and Gamma^n (Eq. 29) is evaluated with the *measured*
-     gradient ranges.
+  1. the scheme supplies vectorized controls (rho_u, delta_u, p_u) — for
+     LTFL via Algorithm 1 — plus a jit-able compressor spec;
+  2. a stacked (C, B, ...) batch is gathered across all clients at once
+     (repro.data.ClientBatcher);
+  3. the channel outcome alpha_u ~ Bernoulli(1 - q_u(p_u)) (Eq. 4) is
+     sampled on host;
+  4. ONE compiled call to the unified step (repro.core.ltfl_step) does all
+     tensor work: vmapped per-client gradients at the pruned weights
+     (Eq. 8/12-13), mask, compress (quantize / sign / ternarize+residual),
+     weighted aggregate over received clients (Eq. 19) and the global
+     update (Eq. 20). Compressor state (STC residuals) is carried through
+     the jit between rounds;
+  5. delay (Eq. 34) and energy (Eq. 37) are charged analytically on host
+     from the scheme's payload declaration, and Gamma^n (Eq. 29) is
+     evaluated with the *measured* per-client gradient ranges.
 
-This engine runs the paper's CIFAR/ResNet experiments on CPU; the
-datacenter-scale counterpart of the same operator chain is
-repro.core.ltfl_step (used by the launcher/dry-run).
+This replaces the former per-device Python loop (O(U) jit dispatches +
+host-side compression per round) — the same compiled operator chain now
+serves both this edge engine and the datacenter launcher/dry-run.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import asdict, dataclass
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import LTFLConfig
-from repro.core.aggregation import aggregate
 from repro.core.channel import sample_devices, sample_transmissions
 from repro.core.convergence import gap_terms
 from repro.core.delay_energy import (
     device_round_delay,
     device_round_energy,
 )
-from repro.core.pruning import magnitude_prune_pytree
-from repro.core.quantization import range_sq_sum
-from repro.data import ArrayDataset, dirichlet_partition, iid_partition
+from repro.core.ltfl_step import make_fl_train_step
+from repro.data import ArrayDataset, ClientBatcher, dirichlet_partition, \
+    iid_partition
 from repro.fed.schemes import BaseScheme
-from repro.optim import apply_updates, sgd
+from repro.optim import sgd
 
 PyTree = Any
 
@@ -60,18 +65,24 @@ class RoundRecord:
 
 class FedRunner:
     """Shared loop: every scheme runs under identical channel, data and
-    accounting so the comparison reproduces the paper's figures."""
+    accounting so the comparison reproduces the paper's figures.
+
+    ``eval_every`` evaluates test accuracy every k rounds (0 => never);
+    ``use_kernels`` routes the 2-D quantization fast path through the
+    Pallas kernels (intended for real TPU; interpret mode on CPU)."""
 
     def __init__(self, model, params: PyTree, ltfl: LTFLConfig,
                  train: ArrayDataset, test: ArrayDataset,
                  scheme: BaseScheme, *, batch_size: int = 64,
                  non_iid_alpha: float = 0.0, label_key: str = "labels",
-                 seed: int = 0):
+                 seed: int = 0, eval_every: int = 1,
+                 use_kernels: bool = False):
         self.model = model
         self.params = params
         self.ltfl = ltfl
         self.scheme = scheme
         self.batch_size = batch_size
+        self.eval_every = eval_every
         self.np_rng = np.random.default_rng(seed)
         self.num_devices = ltfl.num_devices
 
@@ -84,7 +95,7 @@ class FedRunner:
                                         non_iid_alpha, self.np_rng)
         else:
             parts = iid_partition(train.size, sizes, self.np_rng)
-        self.client_data = [train.subset(p) for p in parts]
+        self.batcher = ClientBatcher(train, parts)
         self.test = test
 
         self.num_params = int(sum(
@@ -93,30 +104,25 @@ class FedRunner:
 
         self.opt = sgd(ltfl.learning_rate)
         self.opt_state = self.opt.init(params)
-        self._grad_fn = jax.jit(jax.value_and_grad(model.loss))
-        self._prune_fn = jax.jit(magnitude_prune_pytree)
         self._eval_fn = jax.jit(model.accuracy) if hasattr(model, "accuracy") \
             else None
-        self._rsq_fn = jax.jit(range_sq_sum)
         scheme.setup(self)
+
+        # the unified engine: every scheme's round is ONE compiled call
+        step_fn = make_fl_train_step(
+            model, self.opt, self.num_devices,
+            prune=scheme.uses_prune, prune_kind="magnitude",
+            compressor=scheme.compressor(use_kernels=use_kernels),
+            simulate_drops=False, use_kernels=use_kernels)
+        self.comp_state = step_fn.init_comp_state(params)
+        self._step = jax.jit(step_fn)
+        self._weights = jnp.asarray(sizes, jnp.float32)
+
         self.history: List[RoundRecord] = []
         self._cum_delay = 0.0
         self._cum_energy = 0.0
 
     # ------------------------------------------------------------------ #
-    def _client_update(self, dev_idx: int, rho: float, key: jax.Array):
-        batch = self.client_data[dev_idx].batch(self.batch_size, self.np_rng)
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        if rho > 0:
-            pruned, masks = self._prune_fn(self.params, rho)
-        else:
-            pruned, masks = self.params, None
-        loss, g = self._grad_fn(pruned, batch)
-        if masks is not None:
-            g = jax.tree_util.tree_map(
-                lambda gi, m: gi * m.astype(gi.dtype), g, masks)
-        return loss, g
-
     def evaluate(self, max_batches: int = 4, batch: int = 256) -> float:
         if self._eval_fn is None:
             return float("nan")
@@ -131,37 +137,33 @@ class FedRunner:
     def run_round(self, rnd: int) -> RoundRecord:
         ltfl, w = self.ltfl, self.ltfl.wireless
         ctl = self.scheme.controls(rnd)
-        grads, losses, payloads, rsqs = [], [], [], []
-        for u in range(self.num_devices):
-            key = jax.random.PRNGKey(
-                int(self.np_rng.integers(0, 2 ** 31 - 1)))
-            loss, g = self._client_update(u, float(ctl.rho[u]), key)
-            rsqs.append(float(self._rsq_fn(g)))
-            g, bits = self.scheme.compress(g, u, key, float(ctl.rho[u]))
-            grads.append(g)
-            losses.append(float(loss))
-            payloads.append(bits)
+
+        batch = {k: jnp.asarray(v) for k, v in
+                 self.batcher.batch(self.batch_size, self.np_rng).items()}
+        key = jax.random.PRNGKey(
+            int(self.np_rng.integers(0, 2 ** 31 - 1)))
+        alpha = sample_transmissions(w, self.devices, ctl.power, self.np_rng)
+        controls = {
+            "rho": jnp.asarray(ctl.rho, jnp.float32),
+            "delta": jnp.asarray(ctl.delta, jnp.float32),
+            "weights": self._weights,
+            "alpha": jnp.asarray(alpha, jnp.float32),
+        }
+
+        # all tensor work for the round: one jit dispatch (Eq. 8-20)
+        self.params, self.opt_state, self.comp_state, m = self._step(
+            self.params, self.opt_state, self.comp_state, batch, controls,
+            key)
+        rsqs = np.asarray(m["range_sq"], np.float64).tolist()
         self.range_sq_estimates = rsqs
 
-        alpha = sample_transmissions(w, self.devices, ctl.power, self.np_rng)
-        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *grads)
-        weights = jnp.asarray([d.num_samples for d in self.devices],
-                              jnp.float32)
-        agg = aggregate(stacked, weights, jnp.asarray(alpha, jnp.float32))
-        if getattr(self.scheme, "aggregate_mode", "") == "majority":
-            agg = jax.tree_util.tree_map(jnp.sign, agg)
-            lr_scale = getattr(self.scheme, "lr_scale", 1.0)
-            agg = jax.tree_util.tree_map(lambda x: x * lr_scale, agg)
-        updates, self.opt_state = self.opt.update(agg, self.opt_state,
-                                                  self.params)
-        self.params = apply_updates(self.params, updates)
-
         # ---- accounting (Eq. 31-37) ---------------------------------- #
-        per_delay = [device_round_delay(w, d, b, float(r), float(p))
+        payloads = np.asarray(self.scheme.payload_bits(ctl), np.float64)
+        per_delay = [device_round_delay(w, d, float(b), float(r), float(p))
                      for d, b, r, p in zip(self.devices, payloads, ctl.rho,
                                            ctl.power)]
         delay = max(per_delay) + ltfl.server_delay
-        energy = sum(device_round_energy(w, d, b, float(r), float(p))
+        energy = sum(device_round_energy(w, d, float(b), float(r), float(p))
                      for d, b, r, p in zip(self.devices, payloads, ctl.rho,
                                            ctl.power))
         self._cum_delay += delay
@@ -176,8 +178,10 @@ class FedRunner:
 
         rec = RoundRecord(
             round=rnd,
-            train_loss=float(np.mean(losses)),
-            test_acc=self.evaluate() if rnd % 1 == 0 else float("nan"),
+            train_loss=float(m["loss"]),
+            test_acc=(self.evaluate()
+                      if self.eval_every and rnd % self.eval_every == 0
+                      else float("nan")),
             delay=float(delay),
             energy=float(energy),
             cum_delay=self._cum_delay,

@@ -1,27 +1,40 @@
 """FL schemes: LTFL (+ its ablations) and the paper's four baselines
 (Section 6.1): FedSGD, SignSGD, FedMP, STC.
 
-A scheme supplies per-round controls (pruning ratio, quantization level,
-transmission power) and a gradient compressor; the shared ``FedRunner``
-(repro.fed.rounds) owns the loop, channel simulation, delay/energy
-accounting and aggregation, so every scheme is measured identically —
-exactly how the paper's comparison figures are constructed.
+A scheme is now a *declaration*, not a per-device loop: it supplies
+
+* vectorized per-round controls — (U,) arrays of pruning ratio rho,
+  quantization level delta and transmission power (``controls``);
+* a jit-able ``Compressor`` (repro.core.compressors) that the unified
+  round engine vmaps over the client axis inside the one compiled step
+  (``compressor``);
+* the analytic uplink payload in bits per device (``payload_bits``),
+  which the host-side delay/energy accounting (Eq. 31-37) charges —
+  compression happens on-device inside the jit, so payloads are computed
+  from the controls rather than measured.
+
+The shared ``FedRunner`` (repro.fed.rounds) owns the loop, channel
+simulation, accounting and the compiled step, so every scheme is measured
+identically — exactly how the paper's comparison figures are constructed.
+``post_round`` remains the host-side feedback hook (FedMP's bandit, LTFL
+re-control).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import LTFLConfig
 from repro.core import controller as controller_mod
 from repro.core.channel import packet_error_rate
-from repro.core.quantization import quantize_pytree, range_sq_sum
-
-PyTree = Any
+from repro.core.compressors import (
+    Compressor,
+    identity_compressor,
+    ltfl_quantizer,
+    sign_compressor,
+    stc_compressor,
+)
 
 
 @dataclass
@@ -33,24 +46,30 @@ class Controls:
 
 class BaseScheme:
     name = "base"
+    uses_prune = False    # engine builds the prune stage only when True
 
     def setup(self, runner) -> None:
         self.runner = runner
 
+    def compressor(self, *, use_kernels: bool = False) -> Compressor:
+        """The scheme's jit-able compression stage (default: identity)."""
+        return identity_compressor()
+
     def controls(self, rnd: int) -> Controls:
         raise NotImplementedError
 
-    def compress(self, g: PyTree, dev: int, key: jax.Array,
-                 rho: float) -> Tuple[PyTree, float]:
-        """-> (compressed grad, uplink payload bits)."""
+    def payload_bits(self, ctl: Controls) -> np.ndarray:
+        """(U,) uplink payload bits under these controls (Eq. 18/32)."""
         raise NotImplementedError
 
     def post_round(self, rnd: int, metrics: Dict[str, float]) -> None:
         pass
 
     # helpers ----------------------------------------------------------- #
-    def _full_bits(self, rho: float = 0.0) -> float:
-        return 32.0 * self.runner.num_params * (1.0 - rho)
+    def _full_bits(self, rho=0.0) -> np.ndarray:
+        u = self.runner.num_devices
+        return 32.0 * self.runner.num_params * (1.0 - np.asarray(rho)) \
+            * np.ones(u)
 
 
 class LTFLScheme(BaseScheme):
@@ -60,7 +79,7 @@ class LTFLScheme(BaseScheme):
     def __init__(self, recontrol_every: int = 0, *, use_prune: bool = True,
                  use_quant: bool = True, use_power: bool = True):
         self.recontrol_every = recontrol_every
-        self.use_prune = use_prune
+        self.uses_prune = use_prune
         self.use_quant = use_quant
         self.use_power = use_power
         suffix = "".join(
@@ -69,6 +88,11 @@ class LTFLScheme(BaseScheme):
                             ("-nopower", not use_power)) if on)
         self.name = "ltfl" + suffix
         self._decision: Optional[controller_mod.ControlDecision] = None
+
+    def compressor(self, *, use_kernels: bool = False) -> Compressor:
+        if not self.use_quant:
+            return identity_compressor()
+        return ltfl_quantizer(use_kernels=use_kernels)
 
     def _solve(self):
         r = self.runner
@@ -105,20 +129,17 @@ class LTFLScheme(BaseScheme):
                 self.recontrol_every and rnd % self.recontrol_every == 0):
             self._solve()
         d = self._decision
-        rho = d.rho if self.use_prune else np.zeros_like(d.rho)
+        rho = d.rho if self.uses_prune else np.zeros_like(d.rho)
         delta = (d.delta.astype(np.float64) if self.use_quant
                  else np.zeros_like(d.rho))
         return Controls(rho=rho, delta=delta, power=d.power)
 
-    def compress(self, g, dev, key, rho):
-        r = self.runner
-        ltfl = r.ltfl
+    def payload_bits(self, ctl: Controls) -> np.ndarray:
         if not self.use_quant:
-            return g, self._full_bits(rho)
-        delta = float(self._decision.delta[dev])
-        gq = quantize_pytree(g, delta, key)
-        bits = (r.num_params * delta + ltfl.xi_bits) * (1.0 - rho)  # Eq. 18/32
-        return gq, bits
+            return self._full_bits(ctl.rho)
+        v = self.runner.num_params
+        xi = self.runner.ltfl.xi_bits
+        return (v * ctl.delta + xi) * (1.0 - ctl.rho)        # Eq. 18/32
 
 
 class FedSGDScheme(BaseScheme):
@@ -132,18 +153,21 @@ class FedSGDScheme(BaseScheme):
         return Controls(rho=np.zeros(r.num_devices),
                         delta=np.zeros(r.num_devices), power=p)
 
-    def compress(self, g, dev, key, rho):
-        return g, self._full_bits()
+    def payload_bits(self, ctl):
+        return self._full_bits()
 
 
 class SignSGDScheme(BaseScheme):
-    """Bernstein et al. 2018: transmit sign(g); server majority vote."""
+    """Bernstein et al. 2018: transmit sign(g); server majority vote (the
+    compressor's server_transform signs the aggregate inside the jit)."""
 
     name = "signsgd"
-    aggregate_mode = "majority"    # FedRunner applies sign after aggregation
 
     def __init__(self, lr_scale: float = 0.02):
         self.lr_scale = lr_scale   # signSGD needs a much smaller step
+
+    def compressor(self, *, use_kernels: bool = False) -> Compressor:
+        return sign_compressor(self.lr_scale)
 
     def controls(self, rnd):
         r = self.runner
@@ -151,9 +175,9 @@ class SignSGDScheme(BaseScheme):
         return Controls(rho=np.zeros(r.num_devices),
                         delta=np.zeros(r.num_devices), power=p)
 
-    def compress(self, g, dev, key, rho):
-        signs = jax.tree_util.tree_map(jnp.sign, g)
-        return signs, float(self.runner.num_params)   # 1 bit / coordinate
+    def payload_bits(self, ctl):
+        u = self.runner.num_devices
+        return float(self.runner.num_params) * np.ones(u)  # 1 bit / coord
 
 
 class FedMPScheme(BaseScheme):
@@ -162,6 +186,7 @@ class FedMPScheme(BaseScheme):
     unit round delay). No quantization; full-precision kept entries."""
 
     name = "fedmp"
+    uses_prune = True
 
     def __init__(self, arms=(0.0, 0.125, 0.25, 0.375, 0.5), ucb_c=1.0):
         self.arms = np.asarray(arms)
@@ -190,8 +215,8 @@ class FedMPScheme(BaseScheme):
         p = np.full(r.num_devices, 0.5 * r.ltfl.wireless.p_max)
         return Controls(rho=rho, delta=np.zeros(r.num_devices), power=p)
 
-    def compress(self, g, dev, key, rho):
-        return g, self._full_bits(rho)
+    def payload_bits(self, ctl):
+        return self._full_bits(ctl.rho)
 
     def post_round(self, rnd, metrics):
         loss = metrics["train_loss"]
@@ -211,13 +236,16 @@ class FedMPScheme(BaseScheme):
 class STCScheme(BaseScheme):
     """Sattler et al. 2020: sparse ternary compression — top-k
     sparsification + ternarization (mean magnitude of kept entries) +
-    client-side error accumulation; Golomb-coded payload estimate."""
+    client-side error accumulation. The residual is the engine's carried
+    comp_state pytree; Golomb-coded payload estimate."""
 
     name = "stc"
 
     def __init__(self, sparsity: float = 0.01):
         self.sparsity = sparsity
-        self._residual: Dict[int, PyTree] = {}
+
+    def compressor(self, *, use_kernels: bool = False) -> Compressor:
+        return stc_compressor(self.sparsity)
 
     def controls(self, rnd):
         r = self.runner
@@ -225,28 +253,9 @@ class STCScheme(BaseScheme):
         return Controls(rho=np.zeros(r.num_devices),
                         delta=np.zeros(r.num_devices), power=p)
 
-    def compress(self, g, dev, key, rho):
-        r = self.runner
-        res = self._residual.get(dev)
-        if res is not None:
-            g = jax.tree_util.tree_map(lambda a, b: a + b.astype(a.dtype),
-                                       g, res)
-
-        def ternarize(x):
-            flat = jnp.abs(x.astype(jnp.float32)).reshape(-1)
-            k = max(int(self.sparsity * flat.size), 1)
-            thresh = jnp.sort(flat)[-k]
-            keep = jnp.abs(x.astype(jnp.float32)) >= thresh
-            mu = jnp.sum(jnp.abs(x.astype(jnp.float32)) * keep) \
-                / jnp.maximum(jnp.sum(keep), 1)
-            return (jnp.sign(x) * mu * keep).astype(x.dtype)
-
-        gt = jax.tree_util.tree_map(ternarize, g)
-        self._residual[dev] = jax.tree_util.tree_map(
-            lambda a, b: (a.astype(jnp.float32) - b.astype(jnp.float32)),
-            g, gt)
+    def payload_bits(self, ctl):
         # Golomb-ish estimate: k * (log2(1/p) + 1.5) bits + magnitude
-        v = r.num_params
+        v = self.runner.num_params
         k = self.sparsity * v
         bits = k * (np.log2(1.0 / self.sparsity) + 1.5) + 32.0
-        return gt, float(bits)
+        return float(bits) * np.ones(self.runner.num_devices)

@@ -22,12 +22,39 @@ INTERPRET = True  # CPU container: interpret mode. TPU deployments: False.
 
 def quantize_dequantize_2d(g: jax.Array, bits: int, key: jax.Array,
                            block=(256, 256)) -> jax.Array:
-    """Kernel-backed Q(g) for a 2-D tensor (paper Eq. 16-17)."""
+    """Kernel-backed Q(g) for a 2-D tensor (paper Eq. 16-17), static
+    bit-width; thin wrapper over the traced-bits path."""
+    return quantize_dequantize_2d_dyn(g, jnp.float32(bits), key, block=block)
+
+
+def kernel_quant_compatible(shape: Tuple[int, ...],
+                            block=(256, 256)) -> bool:
+    """True when a >=2-D tensor, viewed as (prod(leading), last), tiles
+    evenly for the quantization kernels. Leaves failing this stay on the
+    jnp path (the two are bit-identical given the same key)."""
+    if len(shape) < 2:
+        return False
+    m = 1
+    for d in shape[:-1]:
+        m *= d
+    n = shape[-1]
+    if m == 0 or n == 0:
+        return False
+    return m % min(block[0], m) == 0 and n % min(block[1], n) == 0
+
+
+def quantize_dequantize_2d_dyn(g: jax.Array, bits: jax.Array, key: jax.Array,
+                               block=(256, 256)) -> jax.Array:
+    """Kernel-backed Q(g) with a *traced* bit-width — the unified round
+    engine's 2-D fast path, where delta is a per-client array under vmap.
+    Math and randomness match ``quantize_dequantize`` exactly."""
     a = jnp.abs(g.astype(jnp.float32))
     lo, hi = jnp.min(a), jnp.max(a)
+    n_levels = jnp.maximum(
+        jnp.round(2.0 ** jnp.asarray(bits, jnp.float32)) - 1.0, 1.0)
     rand = jax.random.uniform(key, g.shape, jnp.float32)
-    return _sq.stochastic_quant(g, rand, lo, hi, bits, block=block,
-                                interpret=INTERPRET)
+    return _sq.stochastic_quant_dyn(g, rand, lo, hi, n_levels, block=block,
+                                    interpret=INTERPRET)
 
 
 def block_prune_2d(w: jax.Array, rho: float, block=(128, 128)

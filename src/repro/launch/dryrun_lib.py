@@ -188,11 +188,13 @@ def build_train(arch: ArchConfig, shape: ShapeConfig, mesh,
     ctrl_sh = {k: rep for k in ctrl_abs}
     key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
 
+    # comp_state is the carried compressor pytree — () for the stateless
+    # LTFL quantizer; stateful compressors (STC) would pin it like params.
     jf = jax.jit(step,
-                 in_shardings=(param_sh, (), batch_sh, ctrl_sh, rep),
-                 out_shardings=(param_sh, (), rep),
-                 donate_argnums=(0, 1))
-    args = (params_abs, (), batch_abs, ctrl_abs, key_abs)
+                 in_shardings=(param_sh, (), (), batch_sh, ctrl_sh, rep),
+                 out_shardings=(param_sh, (), (), rep),
+                 donate_argnums=(0, 1, 2))
+    args = (params_abs, (), (), batch_abs, ctrl_abs, key_abs)
     return jf, args, rules, n_clients
 
 

@@ -68,8 +68,10 @@ def run_datacenter(args) -> None:
     opt = sgd(args.lr)
     opt_state = opt.init(params)
     n_clients = args.clients
-    step = jax.jit(make_fl_train_step(model, opt, n_clients,
-                                      prune_block=args.prune_block))
+    step_fn = make_fl_train_step(model, opt, n_clients,
+                                 prune_block=args.prune_block)
+    comp_state = step_fn.init_comp_state(params)
+    step = jax.jit(step_fn)
     seq = args.seq_len
     batch = make_train_batch(arch, n_clients * args.per_client_batch, seq)
     batch = jax.tree_util.tree_map(
@@ -82,10 +84,12 @@ def run_datacenter(args) -> None:
         "weights": jnp.ones((n_clients,)) * 500.0,
     }
     for i in range(args.steps):
-        params, opt_state, metrics = step(params, opt_state, batch, controls,
-                                          jax.random.PRNGKey(i))
-        print(f"step={i} " + " ".join(f"{k}={float(v):.4f}"
-                                      for k, v in metrics.items()))
+        params, opt_state, comp_state, metrics = step(
+            params, opt_state, comp_state, batch, controls,
+            jax.random.PRNGKey(i))
+        print(f"step={i} " + " ".join(
+            f"{k}={float(v):.4f}" for k, v in metrics.items()
+            if np.ndim(v) == 0))
 
 
 def main() -> None:

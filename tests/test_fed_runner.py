@@ -67,6 +67,20 @@ def test_fedsgd_larger_payload_than_ltfl(world):
     assert d_ltfl <= d_sgd
 
 
+def test_eval_every_cadence(world):
+    """eval_every=2 evaluates on rounds 0 and 2 only; eval_every=0 never."""
+    model, params, train, test = world
+    runner = FedRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                       batch_size=32, seed=0, eval_every=2)
+    hist = runner.run(3)
+    assert np.isfinite(hist[0].test_acc) and np.isfinite(hist[2].test_acc)
+    assert np.isnan(hist[1].test_acc)
+
+    runner0 = FedRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                        batch_size=32, seed=0, eval_every=0)
+    assert all(np.isnan(r.test_acc) for r in runner0.run(2))
+
+
 def test_non_iid_partition_runs(world):
     model, params, train, test = world
     runner = FedRunner(model, params, LTFL, train, test, LTFLScheme(),

@@ -1,4 +1,4 @@
-"""The jit-able datacenter LTFL train step (repro.core.ltfl_step)."""
+"""The unified jit-able LTFL round step (repro.core.ltfl_step)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -30,15 +30,21 @@ def _controls(drop=0.0):
             "weights": jnp.array([400.0, 500.0, 450.0, 600.0])}
 
 
+def _build(model, opt, **kw):
+    step_fn = make_fl_train_step(model, opt, C, prune_block=32, **kw)
+    return step_fn, jax.jit(step_fn)
+
+
 def test_loss_decreases(setup):
     cfg, model, params, batch = setup
     opt = sgd(0.1)
     opt_state = opt.init(params)
-    step = jax.jit(make_fl_train_step(model, opt, C, prune_block=32))
+    step_fn, step = _build(model, opt)
+    cs = step_fn.init_comp_state(params)
     losses = []
     for i in range(8):
-        params, opt_state, m = step(params, opt_state, batch,
-                                    _controls(), jax.random.PRNGKey(i))
+        params, opt_state, cs, m = step(params, opt_state, cs, batch,
+                                        _controls(), jax.random.PRNGKey(i))
         losses.append(float(m["loss"]))
     assert losses[-1] < losses[0] * 0.9, losses
 
@@ -46,18 +52,21 @@ def test_loss_decreases(setup):
 def test_all_received_without_drops(setup):
     cfg, model, params, batch = setup
     opt = sgd(0.1)
-    step = jax.jit(make_fl_train_step(model, opt, C, prune_block=32))
-    _, _, m = step(params, opt.init(params), batch, _controls(0.0),
-                   jax.random.PRNGKey(0))
+    step_fn, step = _build(model, opt)
+    _, _, _, m = step(params, opt.init(params),
+                      step_fn.init_comp_state(params), batch, _controls(0.0),
+                      jax.random.PRNGKey(0))
     assert int(m["clients_received"]) == C
+    assert m["range_sq"].shape == (C,)
 
 
 def test_certain_drop_freezes_params(setup):
     cfg, model, params, batch = setup
     opt = sgd(0.1)
-    step = jax.jit(make_fl_train_step(model, opt, C, prune_block=32))
-    new_params, _, m = step(params, opt.init(params), batch,
-                            _controls(1.0), jax.random.PRNGKey(0))
+    step_fn, step = _build(model, opt)
+    new_params, _, _, m = step(params, opt.init(params),
+                               step_fn.init_comp_state(params), batch,
+                               _controls(1.0), jax.random.PRNGKey(0))
     assert int(m["clients_received"]) == 0
     diffs = jax.tree_util.tree_map(
         lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
@@ -66,16 +75,46 @@ def test_certain_drop_freezes_params(setup):
     assert max(jax.tree_util.tree_leaves(diffs)) == 0.0
 
 
+def test_host_sampled_alpha(setup):
+    """The edge-engine mode: the channel outcome is sampled on host and
+    passed in as controls['alpha'] — drop pattern must be honored."""
+    cfg, model, params, batch = setup
+    opt = sgd(0.1)
+    step_fn, step = _build(model, opt, simulate_drops=False)
+    ctl = dict(_controls(), alpha=jnp.array([1.0, 0.0, 1.0, 0.0]))
+    _, _, _, m = step(params, opt.init(params),
+                      step_fn.init_comp_state(params), batch, ctl,
+                      jax.random.PRNGKey(0))
+    assert int(m["clients_received"]) == 2
+
+
 def test_ablation_switches(setup):
     cfg, model, params, batch = setup
     opt = sgd(0.1)
     for kw in ({"quantize": False}, {"prune": False},
-               {"simulate_drops": False}):
-        step = jax.jit(make_fl_train_step(model, opt, C, prune_block=32,
-                                          **kw))
-        p, _, m = step(params, opt.init(params), batch, _controls(),
-                       jax.random.PRNGKey(0))
+               {"simulate_drops": False}, {"prune_kind": "magnitude"}):
+        step_fn, step = _build(model, opt, **kw)
+        p, _, _, m = step(params, opt.init(params),
+                          step_fn.init_comp_state(params), batch,
+                          _controls(), jax.random.PRNGKey(0))
         assert np.isfinite(float(m["loss"]))
+
+
+def test_compressor_plugins(setup):
+    """SignSGD and STC lower into the same compiled step; STC's residual
+    state is carried and becomes non-zero after one round."""
+    cfg, model, params, batch = setup
+    opt = sgd(0.1)
+    for name in ("sign", "stc"):
+        step_fn, step = _build(model, opt, compressor=name, prune=False)
+        cs = step_fn.init_comp_state(params)
+        p, _, cs, m = step(params, opt.init(params), cs, batch,
+                           _controls(), jax.random.PRNGKey(0))
+        assert np.isfinite(float(m["loss"]))
+        if name == "stc":
+            leaves = jax.tree_util.tree_leaves(cs)
+            assert leaves and all(l.shape[0] == C for l in leaves)
+            assert any(float(jnp.max(jnp.abs(l))) > 0 for l in leaves)
 
 
 def test_plain_step(setup):

@@ -1,0 +1,287 @@
+"""Engine parity: the unified batched round (repro.core.ltfl_step) must
+reproduce the legacy per-device reference path — per-device Python loops
+over prune/grad/compress/aggregate with the identical key discipline —
+for LTFL and SignSGD over multiple rounds, and STC's carried-through-jit
+residual state must match the host-side reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import aggregate
+from repro.core.compressors import ltfl_quantizer, stc_compressor
+from repro.core.ltfl_step import make_fl_train_step
+from repro.core.pruning import magnitude_prune_pytree
+from repro.core.quantization import quantize_pytree
+from repro.optim import apply_updates, sgd
+
+C = 6
+B = 8
+D, H, K = 12, 24, 4
+LR = 0.1
+WEIGHTS = np.linspace(100.0, 200.0, C)
+
+
+class TinyMLP:
+    """Self-contained model for fast parity checks (1-D bias leaf included
+    so the prune exemption path is exercised)."""
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        return {"w1": jax.random.normal(k1, (D, H)) * 0.3,
+                "b1": jnp.zeros((H,)),
+                "w2": jax.random.normal(k2, (H, K)) * 0.3}
+
+    def loss(self, params, batch):
+        h = jax.nn.relu(batch["x"] @ params["w1"] + params["b1"])
+        logits = h @ params["w2"]
+        lp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(lp, batch["labels"][:, None], 1))
+
+
+def _world(seed=0):
+    model = TinyMLP()
+    params = model.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    batches = [
+        {"x": jnp.asarray(rng.normal(size=(C, B, D)).astype(np.float32)),
+         "labels": jnp.asarray(rng.integers(0, K, (C, B)))}
+        for _ in range(3)]
+    alphas = [jnp.asarray(rng.random(C) < 0.8, jnp.float32)
+              for _ in range(3)]
+    keys = [jax.random.PRNGKey(100 + r) for r in range(3)]
+    return model, params, batches, alphas, keys
+
+
+def _controls(rho, delta, alpha):
+    return {"rho": jnp.asarray(rho, jnp.float32),
+            "delta": jnp.asarray(delta, jnp.float32),
+            "weights": jnp.asarray(WEIGHTS, jnp.float32),
+            "alpha": alpha}
+
+
+def _assert_trees_close(a, b, atol=5e-6):
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_allclose(
+            np.asarray(x, np.float64), np.asarray(y, np.float64),
+            atol=atol, rtol=1e-5), a, b)
+
+
+def _reference_round(model, opt, params, opt_state, batch, controls, key,
+                     *, prune, mode, residuals=None, lr_scale=0.02,
+                     sparsity=0.05):
+    """The legacy per-device path: one Python iteration per client, same
+    key discipline as the batched engine (split C+1, keys[u] per client)."""
+    keys = jax.random.split(key, C + 1)
+    grads = []
+    new_residuals = []
+    for u in range(C):
+        cbatch = jax.tree_util.tree_map(lambda x: x[u], batch)
+        if prune:
+            pruned, masks = magnitude_prune_pytree(
+                params, controls["rho"][u])
+        else:
+            pruned, masks = params, None
+        _, g = jax.value_and_grad(model.loss)(pruned, cbatch)
+        if masks is not None:
+            g = jax.tree_util.tree_map(
+                lambda gi, m: gi * m.astype(gi.dtype), g, masks)
+        if mode == "ltfl":
+            g = quantize_pytree(g, controls["delta"][u], keys[u])
+        elif mode == "sign":
+            g = jax.tree_util.tree_map(jnp.sign, g)
+        elif mode == "stc":
+            acc = jax.tree_util.tree_map(
+                lambda gi, r: gi.astype(jnp.float32) + r, g, residuals[u])
+
+            def ternarize(x):
+                flat = jnp.abs(x).reshape(-1)
+                k = max(int(sparsity * flat.size), 1)
+                thresh = jnp.sort(flat)[-k]
+                keep = jnp.abs(x) >= thresh
+                mu = jnp.sum(jnp.abs(x) * keep) / jnp.maximum(
+                    jnp.sum(keep), 1)
+                return jnp.sign(x) * mu * keep
+
+            tern = jax.tree_util.tree_map(ternarize, acc)
+            new_residuals.append(jax.tree_util.tree_map(
+                lambda a, t: a - t, acc, tern))
+            g = tern
+        grads.append(g)
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *grads)
+    agg = aggregate(stacked, controls["weights"], controls["alpha"])
+    if mode == "sign":
+        agg = jax.tree_util.tree_map(
+            lambda x: (jnp.sign(x) * lr_scale).astype(x.dtype), agg)
+    updates, opt_state = opt.update(agg, opt_state, params)
+    params = apply_updates(params, updates)
+    return params, opt_state, new_residuals
+
+
+def test_parity_ltfl_three_rounds():
+    """3 LTFL rounds (prune + quantize + drops): batched engine == legacy
+    per-device reference, identical seeds."""
+    model, params, batches, alphas, keys = _world()
+    opt = sgd(LR)
+    rho = np.linspace(0.0, 0.5, C)
+    delta = np.array([8.0, 4.0, 2.0, 8.0, 3.0, 6.0])
+
+    step_fn = make_fl_train_step(model, opt, C, prune=True,
+                                 prune_kind="magnitude",
+                                 compressor=ltfl_quantizer(),
+                                 simulate_drops=False)
+    step = jax.jit(step_fn)
+    pe, se, cs = params, opt.init(params), step_fn.init_comp_state(params)
+    pr, sr = params, opt.init(params)
+    for r in range(3):
+        ctl = _controls(rho, delta, alphas[r])
+        pe, se, cs, m = step(pe, se, cs, batches[r], ctl, keys[r])
+        pr, sr, _ = _reference_round(model, opt, pr, sr, batches[r], ctl,
+                                     keys[r], prune=True, mode="ltfl")
+        _assert_trees_close(pe, pr)
+        assert np.isfinite(float(m["loss"]))
+
+
+def test_parity_signsgd_three_rounds():
+    """3 SignSGD rounds: sign uplink + server majority vote inside the
+    jit matches the per-device reference."""
+    model, params, batches, alphas, keys = _world(seed=1)
+    opt = sgd(LR)
+    zeros = np.zeros(C)
+
+    step_fn = make_fl_train_step(model, opt, C, prune=False,
+                                 compressor="sign", simulate_drops=False)
+    step = jax.jit(step_fn)
+    pe, se, cs = params, opt.init(params), step_fn.init_comp_state(params)
+    pr, sr = params, opt.init(params)
+    for r in range(3):
+        ctl = _controls(zeros, zeros, alphas[r])
+        pe, se, cs, _ = step(pe, se, cs, batches[r], ctl, keys[r])
+        pr, sr, _ = _reference_round(model, opt, pr, sr, batches[r], ctl,
+                                     keys[r], prune=False, mode="sign")
+        _assert_trees_close(pe, pr)
+
+
+def test_stc_residual_carried_through_jit():
+    """STC error-feedback residual carried as the step's comp_state pytree
+    matches the host-side per-device reference after every round."""
+    model, params, batches, alphas, keys = _world(seed=2)
+    opt = sgd(LR)
+    zeros = np.zeros(C)
+    sparsity = 0.05
+
+    step_fn = make_fl_train_step(model, opt, C, prune=False,
+                                 compressor=stc_compressor(sparsity),
+                                 simulate_drops=False)
+    step = jax.jit(step_fn)
+    cs = step_fn.init_comp_state(params)
+    assert all(l.shape[0] == C for l in jax.tree_util.tree_leaves(cs))
+    pe, se = params, opt.init(params)
+    pr, sr = params, opt.init(params)
+    residuals = [jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        for _ in range(C)]
+    for r in range(3):
+        ctl = _controls(zeros, zeros, alphas[r])
+        pe, se, cs, _ = step(pe, se, cs, batches[r], ctl, keys[r])
+        pr, sr, residuals = _reference_round(
+            model, opt, pr, sr, batches[r], ctl, keys[r], prune=False,
+            mode="stc", residuals=residuals, sparsity=sparsity)
+        _assert_trees_close(pe, pr)
+        ref_state = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *residuals)
+        _assert_trees_close(cs, ref_state)
+    # residual must be doing something after 3 rounds
+    assert any(float(jnp.max(jnp.abs(l))) > 0
+               for l in jax.tree_util.tree_leaves(cs))
+
+
+def test_kernel_quantizer_matches_jnp_path():
+    """The Pallas 2-D fast path (dynamic-bits kernel) is numerically the
+    jnp quantizer given the same key — 2-D, reshaped 4-D and exempt 1-D
+    leaves all agree."""
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (2, 3, 4, 8)),
+         "v": jax.random.normal(jax.random.PRNGKey(1), (64, 32)),
+         "b": jax.random.normal(jax.random.PRNGKey(2), (16,))}
+    cj = ltfl_quantizer(use_kernels=False)
+    ck = ltfl_quantizer(use_kernels=True)
+    for delta in (1.0, 4.0, 8.0):
+        qj, _ = cj.compress(g, jnp.asarray(delta), jax.random.PRNGKey(9), ())
+        qk, _ = ck.compress(g, jnp.asarray(delta), jax.random.PRNGKey(9), ())
+        _assert_trees_close(qj, qk, atol=1e-6)
+
+
+def test_kernel_block_prune_matches_prune_pytree():
+    """The kernel block-prune path must reproduce prune_pytree's masks
+    bit-for-bit on 2-D AND >2-D tileable leaves (leading dims collapse
+    into rows without crossing tile boundaries), with the same magnitude
+    fallback for non-tileable and the same 1-D exemption."""
+    from repro.core.pruning import prune_pytree
+
+    block = 8
+    w = {"w2d": jax.random.normal(jax.random.PRNGKey(0), (16, 24)),
+         "w3d": jax.random.normal(jax.random.PRNGKey(1), (2, 16, 8)),
+         "odd": jax.random.normal(jax.random.PRNGKey(2), (5, 7)),
+         "b": jax.random.normal(jax.random.PRNGKey(3), (16,))}
+    for rho in (0.0, 0.25, 0.5):
+        rho = jnp.asarray(rho)
+        pr, mr = prune_pytree(w, rho, block=block)
+        pk, mk = prune_pytree(w, rho, block=block, use_kernels=True)
+        _assert_trees_close(pr, pk, atol=1e-6)
+        for key in w:
+            assert bool(jnp.all(mr[key] == mk[key])), key
+
+
+def test_engine_use_kernels_matches_jnp_through_jit():
+    """use_kernels=True through the full vmapped/jitted step (the TPU
+    deployment configuration) must be bit-identical to the jnp engine for
+    both prune kinds — the kernels are a fast path, never a semantic one."""
+    model = TinyMLP()
+    opt = sgd(LR)
+    _, _, batches, _, _ = _world(seed=3)
+    batch = batches[0]
+    ctl = {"rho": jnp.full((C,), 0.25), "delta": jnp.full((C,), 4.0),
+           "weights": jnp.asarray(WEIGHTS, jnp.float32),
+           "drop_prob": jnp.zeros((C,))}
+    for kind in ("magnitude", "block"):
+        outs = []
+        for uk in (False, True):
+            step = jax.jit(make_fl_train_step(
+                model, opt, C, prune_block=4, prune_kind=kind,
+                compressor="ltfl", use_kernels=uk))
+            params = model.init(jax.random.PRNGKey(0))
+            opt_state = opt.init(params)
+            params, opt_state, _, m = step(params, opt_state, (), batch,
+                                           ctl, jax.random.PRNGKey(7))
+            outs.append((params, float(m["loss"])))
+        (pj, lj), (pk, lk) = outs
+        assert lj == lk, kind
+        assert jax.tree_util.tree_all(jax.tree_util.tree_map(
+            lambda a, b: jnp.array_equal(a, b), pj, pk)), kind
+
+
+def test_all_schemes_one_compiled_call_per_round():
+    """Acceptance: every scheme's round is exactly one call into the
+    compiled unified step."""
+    from repro.configs.base import LTFLConfig
+    from repro.data import ArrayDataset
+    from repro.fed import ALL_SCHEMES, FedRunner
+
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(600, D)).astype(np.float32)
+    y = rng.integers(0, K, 600)
+    train = ArrayDataset({"x": X, "labels": y})
+    test = ArrayDataset({"x": X[:100], "labels": y[:100]})
+    ltfl = LTFLConfig(num_devices=4, samples_min=40, samples_max=60,
+                      bo_iters=2, alt_max_iters=1)
+    model = TinyMLP()
+    for name, cls in sorted(ALL_SCHEMES.items()):
+        params = model.init(jax.random.PRNGKey(0))
+        runner = FedRunner(model, params, ltfl, train, test, cls(),
+                           batch_size=8, seed=0, eval_every=0)
+        calls = []
+        orig = runner._step
+        runner._step = lambda *a: (calls.append(1), orig(*a))[1]
+        hist = runner.run(2)
+        assert len(calls) == 2, (name, len(calls))
+        assert all(np.isfinite(h.train_loss) for h in hist), name

@@ -5,8 +5,9 @@ from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.launch.sharding import base_rules, make_pspec
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+# jax >= 0.4.36: AbstractMesh takes ((name, size), ...) pairs
+MESH = AbstractMesh((("data", 16), ("model", 16)))
+MESH3 = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 
 
 def test_divisible_dims_shard():
