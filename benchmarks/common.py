@@ -38,7 +38,8 @@ def small_world(num_train=6000, num_test=1500, width=24):
 
 def run_scheme(scheme_name: str, rounds: int, *, ltfl: LTFLConfig,
                model=None, train=None, test=None, non_iid_alpha=0.0,
-               batch_size=48, seed=0, scheme_kwargs=None) -> Dict:
+               batch_size=48, seed=0, scheme_kwargs=None,
+               runner_kwargs=None) -> Dict:
     if model is None:
         model, train, test = small_world()
     params = model.init(jax.random.PRNGKey(seed))
@@ -46,7 +47,7 @@ def run_scheme(scheme_name: str, rounds: int, *, ltfl: LTFLConfig,
     t0 = time.time()
     runner = FedRunner(model, params, ltfl, train, test, scheme,
                        batch_size=batch_size, non_iid_alpha=non_iid_alpha,
-                       seed=seed)
+                       seed=seed, **(runner_kwargs or {}))
     hist = runner.run(rounds)
     wall = time.time() - t0
     return {

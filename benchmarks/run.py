@@ -34,13 +34,15 @@ def main() -> None:
     if only is None or "kernels" in only:
         kernels_bench.run()
     if only is None or "controller" in only:
-        controller_bench.run(devices=30 if args.full else 10)
+        controller_bench.run(
+            device_counts=(16, 32, 64) if args.full else (16,))
     if only is None or "ablation" in only:
         ablation.run(rounds=rounds)
     if only is None or "schemes" in only:
         schemes.run(rounds=rounds)
     if only is None or "channel" in only:
         channel_sweep.run(rounds=max(rounds // 2, 3))
+        channel_sweep.run_block_fading(rounds=max(rounds // 2, 3))
     if only is None or "devices" in only:
         device_count.run(rounds=max(rounds // 2, 3))
     if only is None or "noniid" in only:

@@ -8,11 +8,28 @@ and packet error rate (Eq. 3) are evaluated with Gauss-Laguerre quadrature
 deterministic objectives).
 
 Per-round transmission outcomes alpha_u (Eq. 4) are Bernoulli(1 - q_u).
+
+Batched API
+-----------
+``ChannelState`` is the struct-of-arrays device representation: one (U,)
+array per attribute instead of a tuple of per-device ``DeviceChannel``
+dataclasses. ``expected_rate`` / ``packet_error_rate`` accept either form:
+
+* ``DeviceChannel`` + power of any shape (...,)   -> rates of shape (...,)
+  (the legacy scalar signature, kept as a thin wrapper path);
+* ``ChannelState``  + power of shape (..., U)     -> rates of shape (..., U),
+  broadcasting over the device axis AND any leading candidate axes — the
+  controller scores K candidate power vectors as one (K, U) array op.
+
+``ChannelState.sample`` is the vectorized device sampler and
+``ChannelState.redraw_fading`` re-draws per-round fading/interference
+realizations (block fading), cheap enough to run every round.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Sequence, Tuple, Union
 
 import numpy as np
 
@@ -33,9 +50,104 @@ class DeviceChannel:
     num_samples: int         # N_u
 
 
+@dataclass(frozen=True)
+class ChannelState:
+    """Struct-of-arrays channel state for U devices: each field is (U,).
+
+    The whole control plane (rates, PER, delay/energy, Theorems 2/3, the
+    BO objective) broadcasts over these arrays — one array op per stage
+    instead of O(U) Python calls.
+    """
+
+    distance: np.ndarray     # (U,) d_u (m)
+    fading_mean: np.ndarray  # (U,) E[varpi_u]
+    interference: np.ndarray # (U,) I_u (W)
+    cpu_hz: np.ndarray       # (U,) f_u
+    num_samples: np.ndarray  # (U,) N_u (int)
+
+    @property
+    def num_devices(self) -> int:
+        return int(self.distance.shape[0])
+
+    def __len__(self) -> int:
+        return self.num_devices
+
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def sample(cls, cfg: WirelessConfig, num: int, samples_min: int,
+               samples_max: int, rng: np.random.Generator) -> "ChannelState":
+        """Vectorized device sampling per Table 2 (one draw per field)."""
+        return cls(
+            distance=rng.uniform(cfg.dist_min, cfg.dist_max, num),
+            fading_mean=np.full(num, cfg.fading_scale, dtype=np.float64),
+            interference=rng.uniform(cfg.interference_min,
+                                     cfg.interference_max, num),
+            cpu_hz=rng.uniform(cfg.cpu_min, cfg.cpu_max, num),
+            num_samples=rng.integers(samples_min, samples_max + 1, num),
+        )
+
+    @classmethod
+    def from_devices(cls, devices: Sequence[DeviceChannel]) -> "ChannelState":
+        return cls(
+            distance=np.array([d.distance for d in devices], np.float64),
+            fading_mean=np.array([d.fading_mean for d in devices],
+                                 np.float64),
+            interference=np.array([d.interference for d in devices],
+                                  np.float64),
+            cpu_hz=np.array([d.cpu_hz for d in devices], np.float64),
+            num_samples=np.array([d.num_samples for d in devices], np.int64),
+        )
+
+    def to_devices(self) -> Tuple[DeviceChannel, ...]:
+        return tuple(
+            DeviceChannel(distance=float(self.distance[i]),
+                          fading_mean=float(self.fading_mean[i]),
+                          interference=float(self.interference[i]),
+                          cpu_hz=float(self.cpu_hz[i]),
+                          num_samples=int(self.num_samples[i]))
+            for i in range(self.num_devices))
+
+    # ------------------------------------------------------------------ #
+    def redraw_fading(self, cfg: WirelessConfig,
+                      rng: np.random.Generator) -> "ChannelState":
+        """Block fading of the SLOW channel components: per round, the
+        mean fading power E[varpi_u] is re-drawn as fading_scale * Exp(1)
+        (large-scale variation, e.g. shadowing) and the interference
+        level is re-drawn from its Table-2 range. Fast Rayleigh fading
+        around that mean is still averaged within the round by the
+        rate/PER quadrature — the realization is NOT frozen. Distances,
+        CPUs and dataset sizes stay fixed — they are device attributes,
+        not channel state.
+        """
+        u = self.num_devices
+        return dataclasses.replace(
+            self,
+            fading_mean=cfg.fading_scale * rng.exponential(1.0, u),
+            interference=rng.uniform(cfg.interference_min,
+                                     cfg.interference_max, u),
+        )
+
+
+Devices = Union[ChannelState, DeviceChannel, Sequence[DeviceChannel]]
+
+
+def as_channel_state(devices: Devices) -> ChannelState:
+    """Coerce a ChannelState / DeviceChannel / sequence to ChannelState."""
+    if isinstance(devices, ChannelState):
+        return devices
+    if isinstance(devices, DeviceChannel):
+        return ChannelState.from_devices([devices])
+    return ChannelState.from_devices(devices)
+
+
 def sample_devices(cfg: WirelessConfig, num: int, samples_min: int,
                    samples_max: int, rng: np.random.Generator
                    ) -> Tuple[DeviceChannel, ...]:
+    """Legacy tuple-of-dataclass sampler (kept for the scalar wrappers).
+
+    Draw order matches the original per-device loop so seeded callers see
+    the same devices; new code should use ``ChannelState.sample``.
+    """
     out = []
     for _ in range(num):
         out.append(DeviceChannel(
@@ -49,39 +161,46 @@ def sample_devices(cfg: WirelessConfig, num: int, samples_min: int,
     return tuple(out)
 
 
-def _mean_gain(dev: DeviceChannel) -> float:
-    """E[h] = E[varpi] * d^-2 (Eq. 2)."""
-    return dev.fading_mean * dev.distance ** -2.0
+def _mean_gain(dev) -> np.ndarray:
+    """E[h] = E[varpi] * d^-2 (Eq. 2); scalar or (U,)."""
+    return np.asarray(dev.fading_mean) * np.asarray(dev.distance) ** -2.0
 
 
-def expected_rate(cfg: WirelessConfig, dev: DeviceChannel,
-                  power: np.ndarray) -> np.ndarray:
+def _noise(cfg: WirelessConfig, dev) -> np.ndarray:
+    return np.asarray(dev.interference) + cfg.bandwidth_ul * cfg.n0
+
+
+def expected_rate(cfg: WirelessConfig, dev, power: np.ndarray) -> np.ndarray:
     """Eq. 1: R = B * E_h[ log2(1 + p h / (I + B N0)) ]  (bits/s).
 
-    ``power`` may be scalar or vector; broadcasting applies.
+    ``dev`` is a DeviceChannel (power (...,) -> rate (...,)) or a
+    ChannelState (power (..., U) -> rate (..., U)); broadcasting applies.
     """
     p = np.asarray(power, dtype=np.float64)
-    noise = dev.interference + cfg.bandwidth_ul * cfg.n0
-    c = p[..., None] * _mean_gain(dev) / noise          # h = mean_gain * X
-    val = np.log2(1.0 + c * _GL_X)                      # X ~ Exp(1)
+    c = p * _mean_gain(dev) / _noise(cfg, dev)          # h = mean_gain * X
+    val = np.log2(1.0 + c[..., None] * _GL_X)           # X ~ Exp(1)
     return cfg.bandwidth_ul * np.sum(_GL_W * val, axis=-1)
 
 
-def packet_error_rate(cfg: WirelessConfig, dev: DeviceChannel,
+def packet_error_rate(cfg: WirelessConfig, dev,
                       power: np.ndarray) -> np.ndarray:
-    """Eq. 3: q = E_h[ 1 - exp(-Upsilon (I + B N0) / (p h)) ]."""
+    """Eq. 3: q = E_h[ 1 - exp(-Upsilon (I + B N0) / (p h)) ].
+
+    Same dual signature as ``expected_rate``: scalar per-device or
+    batched over a ChannelState's device axis (and candidate axes).
+    """
     p = np.asarray(power, dtype=np.float64)
-    noise = dev.interference + cfg.bandwidth_ul * cfg.n0
-    c = cfg.waterfall * noise / (p[..., None] * _mean_gain(dev))
+    c = cfg.waterfall * _noise(cfg, dev) / (p * _mean_gain(dev))
     # E over X ~ Exp(1) of 1 - exp(-c / X); integrand -> 1 as X -> 0
     x = np.maximum(_GL_X, 1e-12)
-    val = 1.0 - np.exp(-c / x)
+    val = 1.0 - np.exp(-c[..., None] / x)
     return np.clip(np.sum(_GL_W * val, axis=-1), 0.0, 1.0)
 
 
-def sample_transmissions(cfg: WirelessConfig, devices, powers: np.ndarray,
+def sample_transmissions(cfg: WirelessConfig, devices: Devices,
+                         powers: np.ndarray,
                          rng: np.random.Generator) -> np.ndarray:
     """Eq. 4: alpha_u ~ Bernoulli(1 - q_u(p_u)). Returns int array (U,)."""
-    qs = np.array([packet_error_rate(cfg, d, np.asarray(p))
-                   for d, p in zip(devices, powers)])
-    return (rng.random(len(devices)) >= qs).astype(np.int64)
+    state = as_channel_state(devices)
+    qs = packet_error_rate(cfg, state, np.asarray(powers, np.float64))
+    return (rng.random(state.num_devices) >= qs).astype(np.int64)

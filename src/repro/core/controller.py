@@ -5,18 +5,36 @@ Stage 1 (closed form): Theorem 2 gives the optimal pruning ratio rho*
 given the current power vector. Stage 2: Bayesian optimization over the
 power vector p (problem P4). The stages alternate until the Gamma gap
 change falls below varrho (Eq. 57).
+
+Vectorized control plane
+------------------------
+``optimal_rho`` / ``optimal_delta`` / ``_evaluate`` broadcast over the
+device axis: hand them a ``ChannelState`` of (U,) arrays and they return
+(U,) decisions in one array op. ``_evaluate`` additionally batches over
+candidate power vectors — a (K, U) power matrix yields (K,) Gamma values
+and (K,) feasibility flags — which is what lets ``solve`` hand
+``bayesopt.minimize`` a vectorized objective (its init points and
+proposals are scored without any per-device Python loop).
+
+``solve`` is the vectorized Algorithm 1; ``solve_reference`` preserves
+the original scalar per-device implementation (same seeded rng stream,
+same results) as the parity/benchmark baseline. The scalar
+DeviceChannel signatures of ``optimal_rho``/``optimal_delta`` keep
+working via thin wrappers around the batched math.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.configs.base import LTFLConfig
 from repro.core import bayesopt
 from repro.core.channel import (
+    ChannelState,
     DeviceChannel,
+    as_channel_state,
     expected_rate,
     packet_error_rate,
 )
@@ -25,7 +43,7 @@ from repro.core.delay_energy import (
     device_round_delay,
     device_round_energy,
 )
-from repro.core.quantization import payload_bits
+from repro.core.quantization import payload_bits, payload_bits_host
 
 _PENALTY = 1e9
 
@@ -41,42 +59,171 @@ class ControlDecision:
     gamma_trace: np.ndarray  # Gamma per outer iteration
 
 
-def optimal_rho(ltfl: LTFLConfig, dev: DeviceChannel, payload: float,
-                power: float) -> float:
-    """Theorem 2 (Eq. 40-42)."""
+# --------------------------------------------------------------------------- #
+# Theorems 2/3, batched over the device axis
+# --------------------------------------------------------------------------- #
+def optimal_rho(ltfl: LTFLConfig, dev: Union[ChannelState, DeviceChannel],
+                payload, power):
+    """Theorem 2 (Eq. 40-42).
+
+    ``ChannelState`` + (U,) payload/power -> (U,) rho*; the scalar
+    ``DeviceChannel`` signature returns a float as before.
+    """
+    scalar = isinstance(dev, DeviceChannel)
     w = ltfl.wireless
-    rate = float(expected_rate(w, dev, np.asarray(power)))
-    t_comp = dev.num_samples * w.cycles_per_sample / dev.cpu_hz
+    payload = np.asarray(payload, np.float64)
+    power = np.asarray(power, np.float64)
+    rate = np.maximum(expected_rate(w, dev, power), 1e-30)
+    n = np.asarray(dev.num_samples, np.float64)
+    cpu = np.asarray(dev.cpu_hz, np.float64)
+    t_comp = n * w.cycles_per_sample / cpu
     phi1 = (ltfl.t_max - ltfl.server_delay) / (t_comp + payload / rate)
-    e_comp = (w.k_eff * dev.cpu_hz ** (w.sigma_exp - 1.0)
-              * dev.num_samples * w.cycles_per_sample)
+    e_comp = w.k_eff * cpu ** (w.sigma_exp - 1.0) * n * w.cycles_per_sample
     phi2 = ltfl.e_max / (e_comp + power * payload / rate)
-    rho = min(ltfl.rho_max, max(0.0, 1.0 - min(phi1, phi2)))
-    return rho
+    rho = np.clip(1.0 - np.minimum(phi1, phi2), 0.0, ltfl.rho_max)
+    return float(rho) if scalar else rho
 
 
-def optimal_delta(ltfl: LTFLConfig, dev: DeviceChannel, rho: float,
-                  power: float, num_params: int) -> int:
-    """Theorem 3 (Eq. 44-46)."""
+def optimal_delta(ltfl: LTFLConfig, dev: Union[ChannelState, DeviceChannel],
+                  rho, power, num_params: int):
+    """Theorem 3 (Eq. 44-46).
+
+    ``ChannelState`` + (U,) rho/power -> (U,) int delta*; the scalar
+    ``DeviceChannel`` signature returns an int as before. Infeasible
+    budgets (phi3/phi4 <= xi, vanishing rate) clamp to delta = 1, never
+    NaN.
+    """
+    scalar = isinstance(dev, DeviceChannel)
     w = ltfl.wireless
-    rate = float(expected_rate(w, dev, np.asarray(power)))
-    keep = max(1.0 - rho, 1e-9)
-    t_comp = dev.num_samples * w.cycles_per_sample * keep / dev.cpu_hz
+    power = np.asarray(power, np.float64)
+    rate = np.maximum(expected_rate(w, dev, power), 1e-30)
+    keep = np.maximum(1.0 - np.asarray(rho, np.float64), 1e-9)
+    n = np.asarray(dev.num_samples, np.float64)
+    cpu = np.asarray(dev.cpu_hz, np.float64)
+    t_comp = n * w.cycles_per_sample * keep / cpu
     phi3 = (ltfl.t_max - ltfl.server_delay - t_comp) * rate / keep
-    e_comp = (w.k_eff * dev.cpu_hz ** (w.sigma_exp - 1.0)
-              * dev.num_samples * w.cycles_per_sample * keep)
+    e_comp = (w.k_eff * cpu ** (w.sigma_exp - 1.0)
+              * n * w.cycles_per_sample * keep)
     phi4 = (ltfl.e_max - e_comp) * rate / (power * keep)
     # Eq. 44 with delta~ = V delta + xi; floor = "min positive integer <= x"
     v_eff = num_params * keep   # pruned grads are not uploaded (Eq. 32)
-    raw = min((phi3 - ltfl.xi_bits) / v_eff,
-              (phi4 - ltfl.xi_bits) / v_eff,
-              float(ltfl.delta_max))
-    return int(np.clip(np.floor(raw), 1, ltfl.delta_max))
+    raw = np.minimum(np.minimum((phi3 - ltfl.xi_bits) / v_eff,
+                                (phi4 - ltfl.xi_bits) / v_eff),
+                     float(ltfl.delta_max))
+    raw = np.where(np.isnan(raw), 1.0, raw)
+    delta = np.clip(np.floor(raw), 1, ltfl.delta_max).astype(np.int64)
+    return int(delta) if scalar else delta
 
 
 def _evaluate(ltfl: LTFLConfig, devices, range_sq_sums, rhos, deltas,
-              powers, num_params: int) -> Tuple[float, bool]:
-    """Gamma^n + feasibility of (38b)/(38c) at the given controls."""
+              powers, num_params: int):
+    """Gamma^n + feasibility of (38b)/(38c) at the given controls.
+
+    ``powers`` may be one (U,) vector or a (K, U) batch of candidates;
+    the returned (gamma, feasible) are then scalars or (K,) arrays.
+    """
+    w = ltfl.wireless
+    state = as_channel_state(devices)
+    p = np.asarray(powers, np.float64)
+    rhos = np.asarray(rhos, np.float64)
+    deltas = np.asarray(deltas, np.float64)
+    pers = packet_error_rate(w, state, p)                     # (..., U)
+    g = gamma_fn(ltfl, np.asarray(range_sq_sums, np.float64), deltas,
+                 rhos, pers, state.num_samples)
+    payload = payload_bits_host(num_params, deltas, ltfl.xi_bits)
+    # one expected-rate quadrature shared by the delay AND energy batches
+    rate = expected_rate(w, state, p)
+    t = device_round_delay(w, state, payload, rhos, p, rate=rate) \
+        + ltfl.server_delay
+    e = device_round_energy(w, state, payload, rhos, p, rate=rate)
+    feasible = (np.all(t <= ltfl.t_max * (1 + 1e-9), axis=-1)
+                & np.all(e <= ltfl.e_max * (1 + 1e-9), axis=-1))
+    return g, feasible
+
+
+# --------------------------------------------------------------------------- #
+# Algorithm 1 (vectorized)
+# --------------------------------------------------------------------------- #
+def solve(ltfl: LTFLConfig,
+          devices: Union[ChannelState, Sequence[DeviceChannel]],
+          num_params: int,
+          range_sq_sums: Optional[Sequence[float]] = None,
+          rng: Optional[np.random.Generator] = None,
+          verbose: bool = False) -> ControlDecision:
+    """Algorithm 1: alternate Theorem 2 / Theorem 3 / BO until Eq. 57.
+
+    Every stage is one array op over the device axis, and the BO
+    objective scores whole batches of candidate power vectors at once;
+    seeded runs reproduce ``solve_reference`` exactly.
+    """
+    state = as_channel_state(devices)
+    rng = rng or np.random.default_rng(ltfl.seed)
+    u = state.num_devices
+    if range_sq_sums is None:
+        # conservative prior for the per-device gradient range mass
+        range_sq_sums = np.full(u, 1e-2 * num_params)
+    range_sq = np.asarray(range_sq_sums, np.float64)
+    w = ltfl.wireless
+
+    powers = np.full(u, 0.5 * (w.p_min + w.p_max))
+    deltas = np.full(u, ltfl.delta_max, dtype=np.int64)
+    prev_gamma = np.inf
+    trace = []
+
+    def stage1(deltas: np.ndarray, powers: np.ndarray):
+        """Theorems 2 + 3 for all devices at the current powers."""
+        payload = payload_bits_host(num_params, deltas, ltfl.xi_bits)
+        rhos = optimal_rho(ltfl, state, payload, powers)
+        return rhos, optimal_delta(ltfl, state, rhos, powers, num_params)
+
+    for k in range(ltfl.alt_max_iters):
+        # --- Stage 1: Theorems 2/3 (one batched call each) -------------- #
+        rhos, deltas = stage1(deltas, powers)
+
+        # --- Stage 2: Bayesian optimization over p (problem P4) --------- #
+        def objective(p_mat: np.ndarray) -> np.ndarray:
+            """(K, U) candidate powers -> (K,) penalized Gamma values."""
+            g, feasible = _evaluate(ltfl, state, range_sq, rhos, deltas,
+                                    p_mat, num_params)
+            return np.asarray(g) + np.where(feasible, 0.0, _PENALTY)
+
+        bounds = np.tile([[w.p_min, w.p_max]], (u, 1))
+        res = bayesopt.minimize(objective, bounds, iters=ltfl.bo_iters,
+                                rng=rng, xi=ltfl.bo_xi, vectorized=True)
+        powers = res.x_best
+
+        g, _ = _evaluate(ltfl, state, range_sq, rhos, deltas, powers,
+                         num_params)
+        g = float(g)
+        trace.append(g)
+        if verbose:
+            print(f"[controller] k={k} gamma={g:.6g} "
+                  f"rho_mean={rhos.mean():.3f} delta_mean={deltas.mean():.2f}")
+        if abs(prev_gamma - g) <= ltfl.alt_tol:          # Eq. 57
+            prev_gamma = g
+            break
+        prev_gamma = g
+
+    # final Stage-1 pass at the chosen powers: Theorems 2/3 construct
+    # (rho*, delta*) to satisfy (38b)/(38c) GIVEN p, so re-deriving them
+    # once more guarantees the returned decision is feasible even when the
+    # loop exits right after a power update.
+    rhos, deltas = stage1(deltas, powers)
+    final_gamma, _ = _evaluate(ltfl, state, range_sq, rhos, deltas, powers,
+                               num_params)
+
+    pers = packet_error_rate(w, state, powers)
+    return ControlDecision(rho=rhos, delta=deltas, power=powers, per=pers,
+                           gamma=float(final_gamma), alternations=k + 1,
+                           gamma_trace=np.asarray(trace))
+
+
+# --------------------------------------------------------------------------- #
+# Legacy scalar reference (parity baseline + benchmark comparison)
+# --------------------------------------------------------------------------- #
+def _evaluate_reference(ltfl: LTFLConfig, devices, range_sq_sums, rhos,
+                        deltas, powers, num_params: int) -> Tuple[float, bool]:
+    """The original per-device-loop `_evaluate` (kept verbatim)."""
     w = ltfl.wireless
     pers = [float(packet_error_rate(w, d, np.asarray(p)))
             for d, p in zip(devices, powers)]
@@ -93,16 +240,21 @@ def _evaluate(ltfl: LTFLConfig, devices, range_sq_sums, rhos, deltas,
     return g, feasible
 
 
-def solve(ltfl: LTFLConfig, devices: Sequence[DeviceChannel],
-          num_params: int,
-          range_sq_sums: Optional[Sequence[float]] = None,
-          rng: Optional[np.random.Generator] = None,
-          verbose: bool = False) -> ControlDecision:
-    """Algorithm 1: alternate Theorem 2 / Theorem 3 / BO until Eq. 57."""
+def solve_reference(ltfl: LTFLConfig, devices: Sequence[DeviceChannel],
+                    num_params: int,
+                    range_sq_sums: Optional[Sequence[float]] = None,
+                    rng: Optional[np.random.Generator] = None,
+                    verbose: bool = False) -> ControlDecision:
+    """The original scalar Algorithm 1: O(U) Python calls per stage.
+
+    Kept as the pinned reference for the vectorized ``solve`` (identical
+    seeded results) and as the baseline in benchmarks/controller_bench.
+    """
+    if isinstance(devices, ChannelState):
+        devices = devices.to_devices()
     rng = rng or np.random.default_rng(ltfl.seed)
     u = len(devices)
     if range_sq_sums is None:
-        # conservative prior for the per-device gradient range mass
         range_sq_sums = [1e-2 * num_params] * u
     w = ltfl.wireless
 
@@ -127,8 +279,8 @@ def solve(ltfl: LTFLConfig, devices: Sequence[DeviceChannel],
 
         # --- Stage 2: Bayesian optimization over p (problem P4) --------- #
         def objective(p_vec: np.ndarray) -> float:
-            g, feasible = _evaluate(ltfl, devices, range_sq_sums, rhos,
-                                    deltas, p_vec, num_params)
+            g, feasible = _evaluate_reference(ltfl, devices, range_sq_sums,
+                                              rhos, deltas, p_vec, num_params)
             return g if feasible else g + _PENALTY
 
         bounds = np.tile([[w.p_min, w.p_max]], (u, 1))
@@ -136,8 +288,8 @@ def solve(ltfl: LTFLConfig, devices: Sequence[DeviceChannel],
                                 rng=rng, xi=ltfl.bo_xi)
         powers = res.x_best
 
-        g, _ = _evaluate(ltfl, devices, range_sq_sums, rhos, deltas, powers,
-                         num_params)
+        g, _ = _evaluate_reference(ltfl, devices, range_sq_sums, rhos, deltas,
+                                   powers, num_params)
         trace.append(g)
         if verbose:
             print(f"[controller] k={k} gamma={g:.6g} "
@@ -147,10 +299,6 @@ def solve(ltfl: LTFLConfig, devices: Sequence[DeviceChannel],
             break
         prev_gamma = g
 
-    # final Stage-1 pass at the chosen powers: Theorems 2/3 construct
-    # (rho*, delta*) to satisfy (38b)/(38c) GIVEN p, so re-deriving them
-    # once more guarantees the returned decision is feasible even when the
-    # loop exits right after a power update.
     rhos = np.array([
         optimal_rho(ltfl, dev,
                     float(payload_bits(num_params, deltas[i], ltfl.xi_bits)),
@@ -160,8 +308,8 @@ def solve(ltfl: LTFLConfig, devices: Sequence[DeviceChannel],
         optimal_delta(ltfl, dev, float(rhos[i]), float(powers[i]),
                       num_params)
         for i, dev in enumerate(devices)])
-    final_gamma, _ = _evaluate(ltfl, devices, range_sq_sums, rhos, deltas,
-                               powers, num_params)
+    final_gamma, _ = _evaluate_reference(ltfl, devices, range_sq_sums, rhos,
+                                         deltas, powers, num_params)
 
     pers = np.array([float(packet_error_rate(w, d, np.asarray(p)))
                      for d, p in zip(devices, powers)])

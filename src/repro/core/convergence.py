@@ -5,6 +5,12 @@ quantization, pruning and transmission error terms; the controller
 minimizes it subject to the delay/energy constraints. ``gap_terms``
 returns the three addends separately so benchmarks and tests can attribute
 the gap to its sources.
+
+``gap_terms``/``gamma`` reduce over the LAST axis, so they are batched:
+(U,) inputs give scalar terms (the legacy behavior), while (K, U) inputs —
+e.g. K candidate power vectors' packet error rates — give (K,) terms in
+one array op. Unbatched (U,) inputs (range_sq_sums, num_samples) broadcast
+against batched ones.
 """
 from __future__ import annotations
 
@@ -35,25 +41,31 @@ def gap_terms(ltfl: LTFLConfig,
               rhos: Sequence[float],
               pers: Sequence[float],
               num_samples: Sequence[int]) -> GapTerms:
-    """Evaluate Eq. 29 for one round.
+    """Evaluate Eq. 29; the device axis is the LAST axis of each input.
 
     range_sq_sums[u] = sum_v (g_max - g_min)^2 for device u's gradient.
+    deltas/rhos/pers may carry leading batch axes (e.g. (K, U)); the
+    returned terms then have shape (K,). (U,)-shaped inputs return floats.
     """
     deltas = np.asarray(deltas, dtype=np.float64)
     steps = np.maximum(2.0 ** deltas - 1.0, 1e-12)
-    quant = 3.0 * float(np.sum(np.asarray(range_sq_sums)
-                               / (4.0 * steps * steps)))
-    prune = 3.0 * ltfl.lipschitz ** 2 * ltfl.d_sq * float(np.sum(rhos))
+    quant = 3.0 * np.sum(np.asarray(range_sq_sums)
+                         / (4.0 * steps * steps), axis=-1)
+    prune = 3.0 * ltfl.lipschitz ** 2 * ltfl.d_sq \
+        * np.sum(np.asarray(rhos, np.float64), axis=-1)
     n_total = float(np.sum(num_samples))
-    trans = 12.0 * ltfl.v1 / n_total * float(
-        np.sum(np.asarray(num_samples) * np.asarray(pers)))
+    trans = 12.0 * ltfl.v1 / n_total * np.sum(
+        np.asarray(num_samples) * np.asarray(pers, np.float64), axis=-1)
     scale = 1.0 / (1.0 - 12.0 * ltfl.v2)
+    if quant.ndim == 0 and prune.ndim == 0 and trans.ndim == 0:
+        return GapTerms(float(quant), float(prune), float(trans), scale)
+    quant, prune, trans = np.broadcast_arrays(quant, prune, trans)
     return GapTerms(quant, prune, trans, scale)
 
 
 def gamma(ltfl: LTFLConfig, range_sq_sums, deltas, rhos, pers,
-          num_samples) -> float:
-    """Gamma^n (Eq. 29)."""
+          num_samples):
+    """Gamma^n (Eq. 29); scalar for (U,) inputs, (K,) for (K, U) inputs."""
     return gap_terms(ltfl, range_sq_sums, deltas, rhos, pers,
                      num_samples).total
 

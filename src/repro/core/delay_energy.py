@@ -1,4 +1,11 @@
-"""Per-round delay and energy models (paper Section 4.1-4.2, Eq. 31-37)."""
+"""Per-round delay and energy models (paper Section 4.1-4.2, Eq. 31-37).
+
+Every function accepts either a scalar ``DeviceChannel`` (legacy per-device
+signature: floats in, float out) or a ``ChannelState`` of (U,) arrays, in
+which case ``payload_bits`` / ``rho`` / ``power`` broadcast over the device
+axis and any leading candidate axes — e.g. (K, U) powers produce (K, U)
+delays. ``round_delay`` / ``round_energy`` reduce over the device axis.
+"""
 from __future__ import annotations
 
 from typing import Sequence
@@ -6,55 +13,71 @@ from typing import Sequence
 import numpy as np
 
 from repro.configs.base import LTFLConfig, WirelessConfig
-from repro.core.channel import DeviceChannel, expected_rate
+from repro.core.channel import as_channel_state, expected_rate
 
 
-def local_train_delay(cfg: WirelessConfig, dev: DeviceChannel,
-                      rho: float) -> float:
+def local_train_delay(cfg: WirelessConfig, dev, rho) -> np.ndarray:
     """Eq. 31: T_lt = N_u c0 (1 - rho) / f_u."""
-    return dev.num_samples * cfg.cycles_per_sample * (1.0 - rho) / dev.cpu_hz
+    return (np.asarray(dev.num_samples, np.float64) * cfg.cycles_per_sample
+            * (1.0 - np.asarray(rho, np.float64)) / np.asarray(dev.cpu_hz))
 
 
-def upload_delay(cfg: WirelessConfig, dev: DeviceChannel, payload_bits: float,
-                 rho: float, power: float) -> float:
-    """Eq. 32: T_lu = delta~ (1 - rho) / R(p)."""
-    rate = float(expected_rate(cfg, dev, np.asarray(power)))
-    return payload_bits * (1.0 - rho) / max(rate, 1e-9)
+def upload_delay(cfg: WirelessConfig, dev, payload_bits, rho,
+                 power, *, rate=None) -> np.ndarray:
+    """Eq. 32: T_lu = delta~ (1 - rho) / R(p).
+
+    ``rate`` lets batched callers reuse one expected-rate quadrature
+    across the delay AND energy evaluations of the same power batch.
+    """
+    if rate is None:
+        rate = expected_rate(cfg, dev, np.asarray(power, np.float64))
+    return (np.asarray(payload_bits, np.float64)
+            * (1.0 - np.asarray(rho, np.float64))
+            / np.maximum(rate, 1e-9))
 
 
-def local_train_energy(cfg: WirelessConfig, dev: DeviceChannel,
-                       rho: float) -> float:
+def local_train_energy(cfg: WirelessConfig, dev, rho) -> np.ndarray:
     """Eq. 35: E_lt = k f^sigma T_lt = k f^(sigma-1) N c0 (1 - rho)."""
-    return (cfg.k_eff * dev.cpu_hz ** (cfg.sigma_exp - 1.0)
-            * dev.num_samples * cfg.cycles_per_sample * (1.0 - rho))
+    return (cfg.k_eff * np.asarray(dev.cpu_hz) ** (cfg.sigma_exp - 1.0)
+            * np.asarray(dev.num_samples, np.float64)
+            * cfg.cycles_per_sample * (1.0 - np.asarray(rho, np.float64)))
 
 
-def upload_energy(cfg: WirelessConfig, dev: DeviceChannel, payload_bits: float,
-                  rho: float, power: float) -> float:
+def upload_energy(cfg: WirelessConfig, dev, payload_bits, rho,
+                  power, *, rate=None) -> np.ndarray:
     """Eq. 36: E_lu = p * T_lu."""
-    return power * upload_delay(cfg, dev, payload_bits, rho, power)
+    return (np.asarray(power, np.float64)
+            * upload_delay(cfg, dev, payload_bits, rho, power, rate=rate))
 
 
-def device_round_delay(cfg: WirelessConfig, dev: DeviceChannel,
-                       payload_bits: float, rho: float,
-                       power: float) -> float:
+def device_round_delay(cfg: WirelessConfig, dev, payload_bits, rho,
+                       power, *, rate=None) -> np.ndarray:
     return (local_train_delay(cfg, dev, rho)
-            + upload_delay(cfg, dev, payload_bits, rho, power))
+            + upload_delay(cfg, dev, payload_bits, rho, power, rate=rate))
 
 
-def device_round_energy(cfg: WirelessConfig, dev: DeviceChannel,
-                        payload_bits: float, rho: float,
-                        power: float) -> float:
+def device_round_energy(cfg: WirelessConfig, dev, payload_bits, rho,
+                        power, *, rate=None) -> np.ndarray:
     """Eq. 37: E = E_lt + E_lu."""
     return (local_train_energy(cfg, dev, rho)
-            + upload_energy(cfg, dev, payload_bits, rho, power))
+            + upload_energy(cfg, dev, payload_bits, rho, power, rate=rate))
 
 
-def round_delay(ltfl: LTFLConfig, devices: Sequence[DeviceChannel],
-                payload_bits: Sequence[float], rhos: Sequence[float],
-                powers: Sequence[float]) -> float:
+def round_delay(ltfl: LTFLConfig, devices, payload_bits: Sequence[float],
+                rhos: Sequence[float], powers: Sequence[float]) -> float:
     """Eq. 34: T = max_u(T_lt + T_lu) + s (stragglers gate the round)."""
-    w = ltfl.wireless
-    per_dev = [device_round_delay(w, d, b, r, p)
-               for d, b, r, p in zip(devices, payload_bits, rhos, powers)]
-    return max(per_dev) + ltfl.server_delay
+    state = as_channel_state(devices)
+    per_dev = device_round_delay(
+        ltfl.wireless, state, np.asarray(payload_bits, np.float64),
+        np.asarray(rhos, np.float64), np.asarray(powers, np.float64))
+    return float(np.max(per_dev)) + ltfl.server_delay
+
+
+def round_energy(ltfl: LTFLConfig, devices, payload_bits: Sequence[float],
+                 rhos: Sequence[float], powers: Sequence[float]) -> float:
+    """Total round energy: sum_u E_u (Eq. 37 summed over devices)."""
+    state = as_channel_state(devices)
+    per_dev = device_round_energy(
+        ltfl.wireless, state, np.asarray(payload_bits, np.float64),
+        np.asarray(rhos, np.float64), np.asarray(powers, np.float64))
+    return float(np.sum(per_dev))

@@ -16,6 +16,7 @@ from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 PyTree = Any
 
@@ -87,6 +88,18 @@ def payload_bits(num_params: jax.Array, bits: jax.Array,
                  xi_bits: int) -> jax.Array:
     """Eq. 18: total uplink bits  delta~ = V * delta + xi."""
     return num_params * jnp.asarray(bits, jnp.float32) + xi_bits
+
+
+def payload_bits_host(num_params, bits, xi_bits) -> np.ndarray:
+    """Numpy twin of ``payload_bits`` for the host-side control plane.
+
+    Keeps the same float32 arithmetic so controller decisions agree
+    bitwise with the jnp path, but broadcasts over (U,) delta arrays
+    without a jax dispatch per device.
+    """
+    out = (np.float32(num_params) * np.asarray(bits, np.float32)
+           + np.float32(xi_bits))
+    return np.asarray(out, np.float64)
 
 
 # --------------------------------------------------------------------------- #

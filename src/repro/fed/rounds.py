@@ -16,7 +16,16 @@ One round (Section 2, Eq. 8-10/14-15/19-20):
      the jit between rounds;
   5. delay (Eq. 34) and energy (Eq. 37) are charged analytically on host
      from the scheme's payload declaration, and Gamma^n (Eq. 29) is
-     evaluated with the *measured* per-client gradient ranges.
+     evaluated with the *measured* per-client gradient ranges — all of it
+     broadcast over the struct-of-arrays ChannelState (one array op per
+     stage, no per-device Python loops), with packet error rates cached
+     per (channel epoch, power vector).
+
+``block_fading=True`` re-draws the slow channel components (mean fading
+power + interference; see ChannelState.redraw_fading) every round through
+the vectorized sampler; with ``LTFLScheme(recontrol_every=1)`` the
+Algorithm-1 controller re-optimizes controls against each round's
+channel.
 
 This replaces the former per-device Python loop (O(U) jit dispatches +
 host-side compression per round) — the same compiled operator chain now
@@ -25,14 +34,18 @@ serves both this edge engine and the datacenter launcher/dry-run.
 from __future__ import annotations
 
 from dataclasses import asdict, dataclass
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import LTFLConfig
-from repro.core.channel import sample_devices, sample_transmissions
+from repro.core.channel import (
+    ChannelState,
+    packet_error_rate,
+    sample_transmissions,
+)
 from repro.core.convergence import gap_terms
 from repro.core.delay_energy import (
     device_round_delay,
@@ -69,27 +82,35 @@ class FedRunner:
 
     ``eval_every`` evaluates test accuracy every k rounds (0 => never);
     ``use_kernels`` routes the 2-D quantization fast path through the
-    Pallas kernels (intended for real TPU; interpret mode on CPU)."""
+    Pallas kernels (intended for real TPU; interpret mode on CPU);
+    ``block_fading`` re-draws the per-device slow fading/interference
+    state at the start of every round through the vectorized channel
+    sampler — combined with ``LTFLScheme(recontrol_every=1)`` the
+    controller re-optimizes against each round's channel."""
 
     def __init__(self, model, params: PyTree, ltfl: LTFLConfig,
                  train: ArrayDataset, test: ArrayDataset,
                  scheme: BaseScheme, *, batch_size: int = 64,
                  non_iid_alpha: float = 0.0, label_key: str = "labels",
                  seed: int = 0, eval_every: int = 1,
-                 use_kernels: bool = False):
+                 use_kernels: bool = False, block_fading: bool = False):
         self.model = model
         self.params = params
         self.ltfl = ltfl
         self.scheme = scheme
         self.batch_size = batch_size
         self.eval_every = eval_every
+        self.block_fading = block_fading
         self.np_rng = np.random.default_rng(seed)
+        self._eval_rng_seed = (seed, 0xE7A1)   # fixed eval batches
         self.num_devices = ltfl.num_devices
 
-        self.devices = sample_devices(ltfl.wireless, ltfl.num_devices,
-                                      ltfl.samples_min, ltfl.samples_max,
-                                      self.np_rng)
-        sizes = [d.num_samples for d in self.devices]
+        self.channel = ChannelState.sample(ltfl.wireless, ltfl.num_devices,
+                                           ltfl.samples_min, ltfl.samples_max,
+                                           self.np_rng)
+        self._channel_epoch = 0
+        self._per_cache: Optional[Tuple[Tuple[int, bytes], np.ndarray]] = None
+        sizes = self.channel.num_samples.tolist()
         if non_iid_alpha > 0:
             parts = dirichlet_partition(train.arrays[label_key], sizes,
                                         non_iid_alpha, self.np_rng)
@@ -123,12 +144,40 @@ class FedRunner:
         self._cum_energy = 0.0
 
     # ------------------------------------------------------------------ #
+    @property
+    def devices(self):
+        """Legacy tuple-of-DeviceChannel view of the channel state."""
+        return self.channel.to_devices()
+
+    @property
+    def channel_epoch(self) -> int:
+        """Bumped whenever the channel realization changes (block fading);
+        PER caches and control decisions are valid for one epoch."""
+        return self._channel_epoch
+
+    def _packet_error_rates(self, ctl) -> np.ndarray:
+        """(U,) PERs at ctl.power — from the scheme's decision when fresh,
+        else cached per (channel epoch, power vector)."""
+        if ctl.per is not None:
+            return np.asarray(ctl.per, np.float64)
+        power = np.asarray(ctl.power, np.float64)
+        key = (self._channel_epoch, power.tobytes())
+        if self._per_cache is not None and self._per_cache[0] == key:
+            return self._per_cache[1]
+        per = packet_error_rate(self.ltfl.wireless, self.channel, power)
+        self._per_cache = (key, per)
+        return per
+
+    # ------------------------------------------------------------------ #
     def evaluate(self, max_batches: int = 4, batch: int = 256) -> float:
+        """Test accuracy over FIXED eval batches: the rng is re-seeded per
+        call, so scheme-comparison curves carry no eval sampling noise."""
         if self._eval_fn is None:
             return float("nan")
+        eval_rng = np.random.default_rng(self._eval_rng_seed)
         accs = []
         for _ in range(max_batches):
-            b = self.test.batch(batch, self.np_rng)
+            b = self.test.batch(batch, eval_rng)
             accs.append(float(self._eval_fn(
                 self.params, {k: jnp.asarray(v) for k, v in b.items()})))
         return float(np.mean(accs))
@@ -136,13 +185,19 @@ class FedRunner:
     # ------------------------------------------------------------------ #
     def run_round(self, rnd: int) -> RoundRecord:
         ltfl, w = self.ltfl, self.ltfl.wireless
+        if self.block_fading:
+            # re-draw the slow fading/interference state for this round
+            # (one vectorized redraw); invalidates PER caches + any
+            # stale LTFL decision PERs via the epoch bump
+            self.channel = self.channel.redraw_fading(w, self.np_rng)
+            self._channel_epoch += 1
         ctl = self.scheme.controls(rnd)
 
         batch = {k: jnp.asarray(v) for k, v in
                  self.batcher.batch(self.batch_size, self.np_rng).items()}
         key = jax.random.PRNGKey(
             int(self.np_rng.integers(0, 2 ** 31 - 1)))
-        alpha = sample_transmissions(w, self.devices, ctl.power, self.np_rng)
+        alpha = sample_transmissions(w, self.channel, ctl.power, self.np_rng)
         controls = {
             "rho": jnp.asarray(ctl.rho, jnp.float32),
             "delta": jnp.asarray(ctl.delta, jnp.float32),
@@ -157,24 +212,21 @@ class FedRunner:
         rsqs = np.asarray(m["range_sq"], np.float64).tolist()
         self.range_sq_estimates = rsqs
 
-        # ---- accounting (Eq. 31-37) ---------------------------------- #
+        # ---- accounting (Eq. 31-37): one array op over the device axis - #
         payloads = np.asarray(self.scheme.payload_bits(ctl), np.float64)
-        per_delay = [device_round_delay(w, d, float(b), float(r), float(p))
-                     for d, b, r, p in zip(self.devices, payloads, ctl.rho,
-                                           ctl.power)]
-        delay = max(per_delay) + ltfl.server_delay
-        energy = sum(device_round_energy(w, d, float(b), float(r), float(p))
-                     for d, b, r, p in zip(self.devices, payloads, ctl.rho,
-                                           ctl.power))
+        rho = np.asarray(ctl.rho, np.float64)
+        power = np.asarray(ctl.power, np.float64)
+        delay = float(np.max(device_round_delay(
+            w, self.channel, payloads, rho, power))) + ltfl.server_delay
+        energy = float(np.sum(device_round_energy(
+            w, self.channel, payloads, rho, power)))
         self._cum_delay += delay
         self._cum_energy += energy
 
-        from repro.core.channel import packet_error_rate
-        pers = [float(packet_error_rate(w, d, np.asarray(float(p))))
-                for d, p in zip(self.devices, ctl.power)]
+        pers = self._packet_error_rates(ctl)
         deltas_for_gap = np.where(ctl.delta > 0, ctl.delta, 32.0)
-        g_terms = gap_terms(ltfl, rsqs, deltas_for_gap, ctl.rho, pers,
-                            [d.num_samples for d in self.devices])
+        g_terms = gap_terms(ltfl, rsqs, deltas_for_gap, rho, pers,
+                            self.channel.num_samples)
 
         rec = RoundRecord(
             round=rnd,

@@ -42,6 +42,10 @@ class Controls:
     rho: np.ndarray       # (U,) pruning ratios
     delta: np.ndarray     # (U,) quantization bits (0 => no quantization)
     power: np.ndarray     # (U,) W
+    # (U,) packet error rates at ``power`` under the CURRENT channel, if the
+    # scheme already computed them (e.g. Algorithm 1's decision); None lets
+    # the runner's per-round cache fill them in.
+    per: Optional[np.ndarray] = None
 
 
 class BaseScheme:
@@ -88,6 +92,7 @@ class LTFLScheme(BaseScheme):
                             ("-nopower", not use_power)) if on)
         self.name = "ltfl" + suffix
         self._decision: Optional[controller_mod.ControlDecision] = None
+        self._solved_epoch: int = -1
 
     def compressor(self, *, use_kernels: bool = False) -> Compressor:
         if not self.use_quant:
@@ -97,32 +102,27 @@ class LTFLScheme(BaseScheme):
     def _solve(self):
         r = self.runner
         ltfl = r.ltfl
+        ch = r.channel
         if not self.use_power:
-            # fixed mid power, closed-form rho/delta only
+            # fixed mid power, closed-form rho/delta only (one batched
+            # Theorem-2/3 call over the device axis)
             w = ltfl.wireless
+            from repro.core.quantization import payload_bits_host
             powers = np.full(r.num_devices, 0.5 * w.p_max)
-            rhos, deltas = [], []
-            from repro.core.quantization import payload_bits
-            for i, dev in enumerate(r.devices):
-                rho = controller_mod.optimal_rho(
-                    ltfl, dev,
-                    float(payload_bits(r.num_params, ltfl.delta_max,
-                                       ltfl.xi_bits)),
-                    float(powers[i]))
-                delta = controller_mod.optimal_delta(
-                    ltfl, dev, rho, float(powers[i]), r.num_params)
-                rhos.append(rho)
-                deltas.append(delta)
-            pers = np.array([float(packet_error_rate(w, d, np.asarray(p)))
-                             for d, p in zip(r.devices, powers)])
+            payload = payload_bits_host(r.num_params, ltfl.delta_max,
+                                        ltfl.xi_bits)
+            rhos = controller_mod.optimal_rho(ltfl, ch, payload, powers)
+            deltas = controller_mod.optimal_delta(ltfl, ch, rhos, powers,
+                                                  r.num_params)
+            pers = packet_error_rate(w, ch, powers)
             self._decision = controller_mod.ControlDecision(
-                rho=np.asarray(rhos), delta=np.asarray(deltas),
-                power=powers, per=pers, gamma=float("nan"),
-                alternations=0, gamma_trace=np.zeros(0))
+                rho=rhos, delta=deltas, power=powers, per=pers,
+                gamma=float("nan"), alternations=0, gamma_trace=np.zeros(0))
         else:
             self._decision = controller_mod.solve(
-                ltfl, r.devices, r.num_params,
+                ltfl, ch, r.num_params,
                 range_sq_sums=r.range_sq_estimates, rng=r.np_rng)
+        self._solved_epoch = r.channel_epoch
 
     def controls(self, rnd: int) -> Controls:
         if self._decision is None or (
@@ -132,7 +132,11 @@ class LTFLScheme(BaseScheme):
         rho = d.rho if self.uses_prune else np.zeros_like(d.rho)
         delta = (d.delta.astype(np.float64) if self.use_quant
                  else np.zeros_like(d.rho))
-        return Controls(rho=rho, delta=delta, power=d.power)
+        # the decision's PERs are only valid for the channel they were
+        # solved against; under block fading the runner recomputes
+        per = (d.per if self._solved_epoch == self.runner.channel_epoch
+               else None)
+        return Controls(rho=rho, delta=delta, power=d.power, per=per)
 
     def payload_bits(self, ctl: Controls) -> np.ndarray:
         if not self.use_quant:

@@ -1,0 +1,296 @@
+"""Vectorized control plane pinned to the scalar reference.
+
+Every stage of Algorithm 1 — rates, PER, delay/energy, Gamma, Theorems
+2/3, the batched feasibility evaluation and the end-to-end seeded solve —
+is compared device-by-device against the legacy per-device scalar path.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.base import LTFLConfig, WirelessConfig
+from repro.core import bayesopt, controller
+from repro.core.channel import (
+    ChannelState,
+    DeviceChannel,
+    expected_rate,
+    packet_error_rate,
+    sample_devices,
+    sample_transmissions,
+)
+from repro.core.convergence import gap_terms
+from repro.core.delay_energy import (
+    device_round_delay,
+    device_round_energy,
+    round_delay,
+    round_energy,
+)
+from repro.core.quantization import payload_bits, payload_bits_host
+
+CFG = WirelessConfig()
+LTFL = LTFLConfig(bo_iters=5, alt_max_iters=3)
+V = 300_000
+U = 7
+
+
+@pytest.fixture
+def devs(rng):
+    return sample_devices(CFG, U, 400, 600, rng)
+
+
+@pytest.fixture
+def state(devs):
+    return ChannelState.from_devices(devs)
+
+
+# --------------------------------------------------------------------------- #
+# channel
+# --------------------------------------------------------------------------- #
+def test_rate_and_per_parity(devs, state, rng):
+    powers = rng.uniform(CFG.p_min, CFG.p_max, U)
+    r_vec = expected_rate(CFG, state, powers)
+    q_vec = packet_error_rate(CFG, state, powers)
+    assert r_vec.shape == (U,) and q_vec.shape == (U,)
+    for i, d in enumerate(devs):
+        assert r_vec[i] == pytest.approx(
+            float(expected_rate(CFG, d, np.asarray(powers[i]))), rel=1e-12)
+        assert q_vec[i] == pytest.approx(
+            float(packet_error_rate(CFG, d, np.asarray(powers[i]))),
+            rel=1e-12, abs=1e-15)
+
+
+def test_rate_and_per_candidate_batching(state, rng):
+    """(K, U) candidate powers broadcast to (K, U) rates/PERs that match
+    the row-by-row evaluation."""
+    k = 5
+    p_mat = rng.uniform(CFG.p_min, CFG.p_max, (k, U))
+    r = expected_rate(CFG, state, p_mat)
+    q = packet_error_rate(CFG, state, p_mat)
+    assert r.shape == (k, U) and q.shape == (k, U)
+    for j in range(k):
+        np.testing.assert_allclose(r[j], expected_rate(CFG, state, p_mat[j]),
+                                   rtol=1e-13)
+        np.testing.assert_allclose(q[j],
+                                   packet_error_rate(CFG, state, p_mat[j]),
+                                   rtol=1e-13, atol=1e-15)
+
+
+def test_channel_state_roundtrip_and_sample(rng):
+    st = ChannelState.sample(CFG, 50, 400, 600, rng)
+    assert st.num_devices == 50 and len(st) == 50
+    assert np.all((st.distance >= CFG.dist_min)
+                  & (st.distance <= CFG.dist_max))
+    assert np.all((st.cpu_hz >= CFG.cpu_min) & (st.cpu_hz <= CFG.cpu_max))
+    assert np.all((st.num_samples >= 400) & (st.num_samples <= 600))
+    back = ChannelState.from_devices(st.to_devices())
+    np.testing.assert_array_equal(back.distance, st.distance)
+    np.testing.assert_array_equal(back.num_samples, st.num_samples)
+
+
+def test_redraw_fading_changes_only_channel_realization(rng):
+    st = ChannelState.sample(CFG, 16, 400, 600, rng)
+    re = st.redraw_fading(CFG, rng)
+    assert not np.array_equal(re.fading_mean, st.fading_mean)
+    assert not np.array_equal(re.interference, st.interference)
+    np.testing.assert_array_equal(re.distance, st.distance)
+    np.testing.assert_array_equal(re.cpu_hz, st.cpu_hz)
+    np.testing.assert_array_equal(re.num_samples, st.num_samples)
+    assert np.all(re.fading_mean > 0)
+    assert np.all((re.interference >= CFG.interference_min)
+                  & (re.interference <= CFG.interference_max))
+
+
+def test_sample_transmissions_state_matches_devices(devs, state):
+    powers = np.full(U, 0.05)
+    a1 = sample_transmissions(CFG, devs, powers, np.random.default_rng(3))
+    a2 = sample_transmissions(CFG, state, powers, np.random.default_rng(3))
+    np.testing.assert_array_equal(a1, a2)
+
+
+# --------------------------------------------------------------------------- #
+# delay / energy / Gamma
+# --------------------------------------------------------------------------- #
+def test_delay_energy_parity(devs, state, rng):
+    payloads = rng.uniform(1e5, 1e7, U)
+    rhos = rng.uniform(0.0, 0.5, U)
+    powers = rng.uniform(CFG.p_min, CFG.p_max, U)
+    t_vec = device_round_delay(CFG, state, payloads, rhos, powers)
+    e_vec = device_round_energy(CFG, state, payloads, rhos, powers)
+    for i, d in enumerate(devs):
+        assert t_vec[i] == pytest.approx(float(device_round_delay(
+            CFG, d, float(payloads[i]), float(rhos[i]), float(powers[i]))),
+            rel=1e-12)
+        assert e_vec[i] == pytest.approx(float(device_round_energy(
+            CFG, d, float(payloads[i]), float(rhos[i]), float(powers[i]))),
+            rel=1e-12)
+    assert round_delay(LTFL, state, payloads, rhos, powers) \
+        == pytest.approx(float(np.max(t_vec)) + LTFL.server_delay, rel=1e-12)
+    assert round_energy(LTFL, state, payloads, rhos, powers) \
+        == pytest.approx(float(np.sum(e_vec)), rel=1e-12)
+
+
+def test_gap_terms_batched_matches_rowwise(state, rng):
+    k = 4
+    rsqs = rng.uniform(1.0, 10.0, U)
+    deltas = rng.integers(1, 9, U)
+    rhos = rng.uniform(0.0, 0.5, U)
+    pers = rng.uniform(0.0, 0.3, (k, U))
+    ns = state.num_samples
+    batched = gap_terms(LTFL, rsqs, deltas, rhos, pers, ns)
+    assert batched.total.shape == (k,)
+    for j in range(k):
+        row = gap_terms(LTFL, rsqs, deltas, rhos, pers[j], ns)
+        assert batched.quantization[j] == pytest.approx(row.quantization,
+                                                        rel=1e-13)
+        assert batched.transmission[j] == pytest.approx(row.transmission,
+                                                        rel=1e-13)
+        assert batched.total[j] == pytest.approx(row.total, rel=1e-13)
+
+
+def test_payload_bits_host_matches_jnp():
+    for v in (300_000, 4_900_000):
+        deltas = np.arange(1, 9)
+        host = payload_bits_host(v, deltas, 64)
+        for i, d in enumerate(deltas):
+            assert host[i] == float(payload_bits(v, int(d), 64))
+
+
+# --------------------------------------------------------------------------- #
+# Theorems 2/3 + feasibility evaluation
+# --------------------------------------------------------------------------- #
+def test_theorem23_parity(devs, state, rng):
+    powers = rng.uniform(CFG.p_min, CFG.p_max, U)
+    payloads = payload_bits_host(V, np.full(U, LTFL.delta_max), LTFL.xi_bits)
+    rho_vec = controller.optimal_rho(LTFL, state, payloads, powers)
+    delta_vec = controller.optimal_delta(LTFL, state, rho_vec, powers, V)
+    assert rho_vec.shape == (U,) and delta_vec.shape == (U,)
+    assert delta_vec.dtype == np.int64
+    for i, d in enumerate(devs):
+        rho_s = controller.optimal_rho(LTFL, d, float(payloads[i]),
+                                       float(powers[i]))
+        assert isinstance(rho_s, float)
+        assert rho_vec[i] == pytest.approx(rho_s, rel=1e-12, abs=1e-15)
+        delta_s = controller.optimal_delta(LTFL, d, rho_s, float(powers[i]),
+                                           V)
+        assert isinstance(delta_s, int)
+        assert int(delta_vec[i]) == delta_s
+
+
+def test_evaluate_batched_matches_reference(devs, state, rng):
+    k = 6
+    rsqs = np.full(U, 1e-2 * V)
+    rhos = rng.uniform(0.0, 0.5, U)
+    deltas = rng.integers(1, 9, U)
+    p_mat = rng.uniform(CFG.p_min, CFG.p_max, (k, U))
+    g_b, f_b = controller._evaluate(LTFL, state, rsqs, rhos, deltas, p_mat, V)
+    assert g_b.shape == (k,) and f_b.shape == (k,)
+    for j in range(k):
+        g_r, f_r = controller._evaluate_reference(
+            LTFL, devs, rsqs, rhos, deltas, p_mat[j], V)
+        assert g_b[j] == pytest.approx(g_r, rel=1e-12)
+        assert bool(f_b[j]) == f_r
+
+
+def test_solve_matches_reference_end_to_end(devs, state):
+    """Same seed => the vectorized Algorithm 1 reproduces the scalar
+    reference decision exactly (identical rng stream, identical math)."""
+    ref = controller.solve_reference(LTFL, devs, V,
+                                     rng=np.random.default_rng(11))
+    vec = controller.solve(LTFL, state, V, rng=np.random.default_rng(11))
+    np.testing.assert_array_equal(ref.delta, vec.delta)
+    np.testing.assert_allclose(ref.rho, vec.rho, rtol=1e-12, atol=1e-15)
+    np.testing.assert_allclose(ref.power, vec.power, rtol=1e-12)
+    np.testing.assert_allclose(ref.per, vec.per, rtol=1e-12, atol=1e-15)
+    np.testing.assert_allclose(ref.gamma_trace, vec.gamma_trace, rtol=1e-10)
+    assert vec.gamma == pytest.approx(ref.gamma, rel=1e-10)
+    assert vec.alternations == ref.alternations
+
+
+# --------------------------------------------------------------------------- #
+# edge cases: infeasible budgets must clamp, never NaN
+# --------------------------------------------------------------------------- #
+BAD_DEV = DeviceChannel(distance=300.0, fading_mean=1e-9,
+                        interference=2e-8, cpu_hz=3e7, num_samples=600)
+
+
+def _edge_configs():
+    return [
+        LTFLConfig(t_max=1.5, e_max=1e-4),      # budgets below compute cost
+        LTFLConfig(t_max=3000.0, e_max=1e-9),   # energy infeasible
+        LTFLConfig(t_max=1e-6, e_max=10.0),     # delay infeasible
+    ]
+
+
+@pytest.mark.parametrize("ltfl", _edge_configs())
+def test_optimal_rho_clamps_at_infeasible_budgets(ltfl):
+    rho = controller.optimal_rho(ltfl, BAD_DEV,
+                                 float(payload_bits_host(V, ltfl.delta_max,
+                                                         ltfl.xi_bits)),
+                                 CFG.p_min)
+    assert math.isfinite(rho)
+    assert 0.0 <= rho <= ltfl.rho_max
+
+
+@pytest.mark.parametrize("ltfl", _edge_configs())
+def test_optimal_delta_clamps_at_infeasible_budgets(ltfl):
+    """phi3/phi4 <= xi_bits and near-zero expected rate: delta clamps into
+    [1, delta_max] and never goes NaN."""
+    rate = float(expected_rate(CFG, BAD_DEV, np.asarray(CFG.p_min)))
+    assert rate < 1.0      # the near-zero-rate regime is actually exercised
+    for rho in (0.0, 0.5, ltfl.rho_max):
+        delta = controller.optimal_delta(ltfl, BAD_DEV, rho, CFG.p_min, V)
+        assert 1 <= delta <= ltfl.delta_max
+
+
+def test_vectorized_edge_cases_no_nan():
+    """A whole state of pathological devices stays finite and clamped."""
+    ltfl = LTFLConfig(t_max=2.0, e_max=1e-6)
+    st = ChannelState(
+        distance=np.array([300.0, 300.0, 100.0]),
+        fading_mean=np.array([1e-12, 1e-6, 0.015]),
+        interference=np.array([2e-8, 2e-8, 1e-8]),
+        cpu_hz=np.array([3e7, 3e7, 1.1e8]),
+        num_samples=np.array([600, 600, 400]),
+    )
+    payload = payload_bits_host(V, np.full(3, ltfl.delta_max), ltfl.xi_bits)
+    powers = np.full(3, CFG.p_min)
+    rho = controller.optimal_rho(ltfl, st, payload, powers)
+    assert np.all(np.isfinite(rho))
+    assert np.all((rho >= 0.0) & (rho <= ltfl.rho_max))
+    delta = controller.optimal_delta(ltfl, st, rho, powers, V)
+    assert np.all((delta >= 1) & (delta <= ltfl.delta_max))
+    g, feas = controller._evaluate(ltfl, st, np.full(3, 1e-2 * V), rho,
+                                   delta, powers, V)
+    assert np.isfinite(g)
+    assert not bool(feas)   # budgets this tight cannot be met
+
+
+# --------------------------------------------------------------------------- #
+# bayesopt
+# --------------------------------------------------------------------------- #
+def test_norm_cdf_vectorized_matches_erf():
+    x = np.linspace(-6.0, 6.0, 101).reshape(101, 1)[:, 0]
+    ref = np.array([0.5 * (1.0 + math.erf(t / math.sqrt(2.0))) for t in x])
+    np.testing.assert_allclose(bayesopt._norm_cdf(x), ref, atol=1e-12)
+
+
+def test_minimize_vectorized_matches_scalar_path():
+    """vectorized=True consumes the same rng stream and lands on the same
+    minimizer as the per-point path."""
+    target = np.array([0.3, 0.7, 0.5])
+
+    def f(x):
+        return float(np.sum((x - target) ** 2))
+
+    def f_batched(x_mat):
+        return np.sum((x_mat - target) ** 2, axis=-1)
+
+    bounds = np.tile([[0.0, 1.0]], (3, 1))
+    res_s = bayesopt.minimize(f, bounds, iters=12,
+                              rng=np.random.default_rng(5))
+    res_v = bayesopt.minimize(f_batched, bounds, iters=12,
+                              rng=np.random.default_rng(5), vectorized=True)
+    np.testing.assert_allclose(res_v.x_best, res_s.x_best, rtol=1e-12)
+    assert res_v.y_best == pytest.approx(res_s.y_best, rel=1e-12)
+    np.testing.assert_allclose(res_v.history, res_s.history, rtol=1e-12)

@@ -87,3 +87,74 @@ def test_non_iid_partition_runs(world):
                        batch_size=32, non_iid_alpha=0.1, seed=0)
     rec = runner.run_round(0)
     assert np.isfinite(rec.train_loss)
+
+
+def test_evaluate_deterministic(world):
+    """evaluate() draws FIXED eval batches: repeated calls agree exactly,
+    even after training rounds have advanced the main rng stream."""
+    model, params, train, test = world
+    runner = FedRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                       batch_size=32, seed=0)
+    a = runner.evaluate()
+    b = runner.evaluate()
+    assert a == b
+    runner.run_round(0)     # advances np_rng; must not perturb evaluation
+    assert runner.evaluate() == runner.evaluate()
+    # two runners with the same seed score identical params identically
+    other = FedRunner(model, params, LTFL, train, test, LTFLScheme(),
+                      batch_size=32, seed=0)
+    other.params = runner.params
+    assert other.evaluate() == runner.evaluate()
+
+
+def test_per_cache_reused_when_power_static(world):
+    """Fixed-power schemes hit the PER cache after round 0."""
+    model, params, train, test = world
+    runner = FedRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                       batch_size=32, seed=0)
+    runner.run_round(0)
+    cached = runner._per_cache
+    assert cached is not None
+    runner.run_round(1)
+    assert runner._per_cache is cached      # same key: no recompute
+    assert np.all(np.isfinite(cached[1]))
+    assert np.all((cached[1] >= 0) & (cached[1] <= 1))
+
+
+def test_block_fading_recontrol_every_round(world):
+    """LTFL with per-round re-control completes under block fading: the
+    channel realization changes every round and Algorithm 1 re-solves
+    against it."""
+    model, params, train, test = world
+    runner = FedRunner(model, params, LTFL, train, test,
+                       LTFLScheme(recontrol_every=1), batch_size=32, seed=0,
+                       block_fading=True)
+    fading0 = runner.channel.fading_mean.copy()
+    hist = runner.run(3)
+    assert runner.channel_epoch == 3
+    assert not np.array_equal(runner.channel.fading_mean, fading0)
+    assert runner.scheme._solved_epoch == runner.channel_epoch
+    for rec in hist:
+        assert np.isfinite(rec.train_loss)
+        assert np.isfinite(rec.delay) and rec.delay > 0
+        assert np.isfinite(rec.energy) and rec.energy > 0
+        assert np.isfinite(rec.gamma)
+
+
+def test_block_fading_stale_decision_per_recomputed(world):
+    """Without re-control the scheme's decision PERs go stale; the runner
+    must recompute them against each round's channel."""
+    model, params, train, test = world
+    runner = FedRunner(model, params, LTFL, train, test, LTFLScheme(),
+                       batch_size=32, seed=0, block_fading=True)
+    runner.run_round(0)
+    decision_per = runner.scheme._decision.per.copy()
+    assert runner.scheme._solved_epoch == 1    # solved against round-0 draw
+    runner.run_round(1)
+    # round 1 redrew the channel (epoch 2) but the one-shot scheme did not
+    # re-solve: its decision PERs are stale, so the round was charged from
+    # the runner's recomputed cache instead
+    assert runner.channel_epoch == 2
+    assert runner.scheme._solved_epoch == 1
+    assert runner._per_cache is not None
+    assert not np.array_equal(runner._per_cache[1], decision_per)
