@@ -4,14 +4,31 @@
 #                      handled (same command the PR driver runs).
 #   make bench-smoke — one tiny round-engine benchmark round: proves the
 #                      unified batched step compiles and beats the legacy
-#                      per-device loop on this machine.
+#                      per-device loop on this machine. Writes
+#                      artifacts/bench/round_engine_smoke.json.
+#   make bench-check — bench-smoke + the regression gate: fails when the
+#                      unified-engine speedup regressed >30% vs the
+#                      committed artifacts/bench/round_engine.json.
+#   make bench-population — the population-scale sweep (per-round wall
+#                      clock flat in N at fixed cohort U).
+#   make lint        — ruff, check-only (no reformatting); rule set in
+#                      ruff.toml.
 
 PY ?= python
 
-.PHONY: test bench-smoke
+.PHONY: test bench-smoke bench-check bench-population lint
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
 
 bench-smoke:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.round_engine --smoke
+
+bench-check: bench-smoke
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.check_regression
+
+bench-population:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.population_scale
+
+lint:
+	ruff check .

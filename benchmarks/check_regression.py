@@ -1,0 +1,90 @@
+"""CI bench-regression gate for the unified round engine.
+
+Compares a fresh ``make bench-smoke`` measurement
+(artifacts/bench/round_engine_smoke.json) against the COMMITTED baseline
+(artifacts/bench/round_engine.json, the full client-count sweep measured
+when the engine landed — it includes the smoke config's U=8 row exactly so
+the gate compares like with like) and fails when the unified-engine
+speedup over the legacy per-device loop has regressed by more than
+``--tolerance`` (default 30%).
+
+The gated metric is the *speedup ratio* (legacy_s / engine_s), not wall
+clock: the ratio is dispatch-bound and transfers across machines, where
+absolute times on shared CI runners do not. Rows are matched by client
+count — a U=8 smoke run gates against the baseline's U=8 row; mismatched
+configs would silently widen the effective tolerance. When the files
+share no client count the gate falls back to min-vs-min with a warning.
+
+Run:  PYTHONPATH=src python -m benchmarks.check_regression
+Exit: 0 pass, 1 regression, 2 missing/invalid input.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# benchmarks.common's ART_DIR would do, but importing it drags in the
+# whole jax/repro stack — this gate only reads two JSON files and must
+# stay runnable (exit 2, not ImportError) on a bare-python machine
+ART_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "artifacts", "bench")
+
+
+def _speedups(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    rows = {int(r["clients"]): float(r["speedup"]) for r in payload["rows"]}
+    if not rows:
+        raise ValueError(f"{path}: no benchmark rows")
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current",
+                    default=os.path.join(ART_DIR, "round_engine_smoke.json"),
+                    help="fresh measurement (written by make bench-smoke)")
+    ap.add_argument("--baseline",
+                    default=os.path.join(ART_DIR, "round_engine.json"),
+                    help="committed baseline artifact")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed fractional speedup regression (0.30 = "
+                         "fail on >30%% slowdown)")
+    args = ap.parse_args()
+
+    try:
+        cur = _speedups(args.current)
+        base = _speedups(args.baseline)
+    except (OSError, KeyError, TypeError, ValueError,
+            json.JSONDecodeError) as e:
+        print(f"check_regression: cannot read benchmark JSON: {e}")
+        return 2
+
+    shared = sorted(set(cur) & set(base))
+    if shared:
+        pairs = [(f"U={u}", cur[u], base[u]) for u in shared]
+    else:
+        print("check_regression: WARNING — no shared client count between "
+              f"{sorted(cur)} and {sorted(base)}; falling back to "
+              "min-vs-min (configs differ, tolerance is approximate)")
+        pairs = [("min", min(cur.values()), min(base.values()))]
+
+    failed = False
+    for label, c, b in pairs:
+        floor = b * (1.0 - args.tolerance)
+        ok = c >= floor
+        failed |= not ok
+        print(f"check_regression: {label}: speedup {c:.2f}x "
+              f"(baseline {b:.2f}x, floor {floor:.2f}x at tolerance "
+              f"{args.tolerance:.0%}) -> {'PASS' if ok else 'FAIL'}")
+    if failed:
+        print("check_regression: the unified round engine has regressed "
+              "vs the committed artifacts/bench/round_engine.json baseline")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

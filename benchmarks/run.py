@@ -14,7 +14,7 @@ def main() -> None:
                     help="EXPERIMENTS.md-scale rounds (slow on CPU)")
     ap.add_argument("--only", default="",
                     help="comma list: ablation,schemes,channel,devices,"
-                         "noniid,controller,kernels,roofline")
+                         "noniid,controller,kernels,roofline,population")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     rounds = 24 if args.full else 10
@@ -26,6 +26,7 @@ def main() -> None:
         device_count,
         kernels_bench,
         non_iid,
+        population_scale,
         roofline,
         schemes,
     )
@@ -45,6 +46,16 @@ def main() -> None:
         channel_sweep.run_block_fading(rounds=max(rounds // 2, 3))
     if only is None or "devices" in only:
         device_count.run(rounds=max(rounds // 2, 3))
+    if only is None or "population" in only:
+        # only a --full run (the whole N sweep) may rewrite the committed
+        # population_scale.json baseline; the reduced sweep writes its
+        # own artifact (same anti-clobber convention as the bench smokes)
+        population_scale.run(
+            pop_sizes=(64, 256, 1024, 4096) if args.full
+            else (64, 256, 1024),
+            rounds=max(rounds // 2, 3),
+            artifact=("population_scale" if args.full
+                      else "population_scale_reduced"))
     if only is None or "noniid" in only:
         non_iid.run(rounds=max(rounds // 2, 3))
     if only is None or "roofline" in only:

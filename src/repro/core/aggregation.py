@@ -5,10 +5,17 @@ g^n = sum_u N_u alpha_u Q(g_u) / sum_u N_u alpha_u
 If every packet drops (sum alpha = 0) the round contributes a zero update
 (the server keeps the current model), matching the paper's semantics of a
 wasted round.
+
+Partial participation (population layer): with a sampled cohort the server
+may instead divide by a FIXED denominator — pass ``denom`` = the population
+sample total sum_j N_j and weights N_i / pi_i (pi_i the inclusion
+probability) for the Horvitz-Thompson-style unbiased estimate of the
+full-population update; the default (``denom=None``) renormalizes over the
+received cohort, the paper's Eq. 19 convention.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,16 +24,20 @@ PyTree = Any
 
 
 def aggregate(client_grads: PyTree, weights: jax.Array,
-              alpha: jax.Array) -> PyTree:
+              alpha: jax.Array,
+              denom: Optional[jax.Array] = None) -> PyTree:
     """client_grads: pytree with leading client axis C on every leaf;
-    weights (C,) = N_u; alpha (C,) in {0, 1} (float ok)."""
+    weights (C,) = N_u (or N_u / pi_u for unbiased partial participation);
+    alpha (C,) in {0, 1} (float ok); ``denom`` fixes the normalizer
+    instead of sum(weights * alpha)."""
     w = (weights * alpha).astype(jnp.float32)
-    denom = jnp.sum(w)
-    safe = jnp.maximum(denom, 1e-12)
+    received = jnp.sum(w)
+    norm = received if denom is None else jnp.asarray(denom, jnp.float32)
+    safe = jnp.maximum(norm, 1e-12)
 
     def leaf(g):
         wg = jnp.tensordot(w.astype(g.dtype), g, axes=([0], [0]))
         out = wg / safe.astype(g.dtype)
-        return jnp.where(denom > 0, out, jnp.zeros_like(out))
+        return jnp.where(received > 0, out, jnp.zeros_like(out))
 
     return jax.tree_util.tree_map(leaf, client_grads)

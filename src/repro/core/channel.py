@@ -108,6 +108,36 @@ class ChannelState:
             for i in range(self.num_devices))
 
     # ------------------------------------------------------------------ #
+    def take(self, idx) -> "ChannelState":
+        """Gather a cohort view: (U,) copies of every field at ``idx``.
+
+        This is how the population layer (repro.fed.population) hands the
+        control plane a per-round cohort — Algorithm 1, the delay/energy
+        accounting and the Gamma gap all run on the (U,) view, so per-round
+        work is governed by the cohort size U, not the population size N.
+        """
+        idx = np.asarray(idx, dtype=np.int64)
+        return ChannelState(
+            distance=self.distance[idx],
+            fading_mean=self.fading_mean[idx],
+            interference=self.interference[idx],
+            cpu_hz=self.cpu_hz[idx],
+            num_samples=self.num_samples[idx],
+        )
+
+    @staticmethod
+    def draw_fading(cfg: WirelessConfig, rng: np.random.Generator,
+                    size: int):
+        """One block-fading draw for ``size`` devices: (fading_mean,
+        interference) arrays. The SINGLE source of truth for the slow
+        fading/interference distributions — both the full ``redraw_fading``
+        and the population layer's lazy per-cohort refresh
+        (repro.fed.population) consume it, which is what keeps their rng
+        streams bit-identical for a full cohort."""
+        return (cfg.fading_scale * rng.exponential(1.0, size),
+                rng.uniform(cfg.interference_min, cfg.interference_max,
+                            size))
+
     def redraw_fading(self, cfg: WirelessConfig,
                       rng: np.random.Generator) -> "ChannelState":
         """Block fading of the SLOW channel components: per round, the
@@ -119,13 +149,9 @@ class ChannelState:
         CPUs and dataset sizes stay fixed — they are device attributes,
         not channel state.
         """
-        u = self.num_devices
+        fading, interference = self.draw_fading(cfg, rng, self.num_devices)
         return dataclasses.replace(
-            self,
-            fading_mean=cfg.fading_scale * rng.exponential(1.0, u),
-            interference=rng.uniform(cfg.interference_min,
-                                     cfg.interference_max, u),
-        )
+            self, fading_mean=fading, interference=interference)
 
 
 Devices = Union[ChannelState, DeviceChannel, Sequence[DeviceChannel]]

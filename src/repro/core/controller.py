@@ -21,6 +21,12 @@ the original scalar per-device implementation (same seeded rng stream,
 same results) as the parity/benchmark baseline. The scalar
 DeviceChannel signatures of ``optimal_rho``/``optimal_delta`` keep
 working via thin wrappers around the batched math.
+
+Under the population layer (repro.fed.population) the ``devices``
+argument is the (U,) COHORT view gathered from the (N,) population
+(``ChannelState.take``): Algorithm 1's cost — and every closed-form
+Theorem-2/3 call — is governed by the scheduled cohort size U, never by
+the registered population size N.
 """
 from __future__ import annotations
 

@@ -11,11 +11,23 @@ the gap to its sources.
 e.g. K candidate power vectors' packet error rates — give (K,) terms in
 one array op. Unbatched (U,) inputs (range_sq_sums, num_samples) broadcast
 against batched ones.
+
+Partial participation (beyond the paper)
+----------------------------------------
+Theorem 1 assumes all U devices transmit. Under the population layer
+(repro.fed.population) only a sampled cohort participates; passing the
+cohort members' ``inclusion`` probabilities pi_i and the population sample
+total ``population_samples`` makes ``gap_terms`` report the
+Horvitz-Thompson estimate of the POPULATION Gamma (each per-device summand
+scaled by 1 / pi_i), plus a ``participation`` term — the leading HT
+variance proxy 12 v1 / N^2 * sum_i N_i^2 (1 - pi_i) / pi_i^2 — that
+charges the gap for client-sampling noise. With pi = 1 everywhere both
+reduce exactly to the full-participation Eq. 29.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -28,11 +40,12 @@ class GapTerms:
     pruning: float        # 3 L^2 D^2 * sum_u rho_u
     transmission: float   # 12 v1 / N * sum_u N_u q_u
     scale: float          # 1 / (1 - 12 v2)
+    participation: float = 0.0   # client-sampling variance proxy (HT)
 
     @property
     def total(self) -> float:
         return self.scale * (self.quantization + self.pruning
-                             + self.transmission)
+                             + self.transmission + self.participation)
 
 
 def gap_terms(ltfl: LTFLConfig,
@@ -40,34 +53,62 @@ def gap_terms(ltfl: LTFLConfig,
               deltas: Sequence[float],
               rhos: Sequence[float],
               pers: Sequence[float],
-              num_samples: Sequence[int]) -> GapTerms:
+              num_samples: Sequence[int],
+              *,
+              inclusion: Optional[Sequence[float]] = None,
+              population_samples: Optional[float] = None) -> GapTerms:
     """Evaluate Eq. 29; the device axis is the LAST axis of each input.
 
     range_sq_sums[u] = sum_v (g_max - g_min)^2 for device u's gradient.
     deltas/rhos/pers may carry leading batch axes (e.g. (K, U)); the
     returned terms then have shape (K,). (U,)-shaped inputs return floats.
+
+    ``inclusion`` (pi_i per cohort member) and ``population_samples``
+    (sum_j N_j over the whole population) switch on the partial-
+    participation convention documented in the module docstring.
     """
     deltas = np.asarray(deltas, dtype=np.float64)
+    ns = np.asarray(num_samples, np.float64)
+    if (inclusion is None) != (population_samples is None):
+        raise ValueError(
+            "inclusion and population_samples go together: HT-scaled "
+            "summands divided by a cohort-only total (or vice versa) "
+            "would silently mix conventions")
+    if inclusion is not None:
+        inv = 1.0 / np.maximum(np.asarray(inclusion, np.float64), 1e-12)
+    else:
+        inv = 1.0
     steps = np.maximum(2.0 ** deltas - 1.0, 1e-12)
-    quant = 3.0 * np.sum(np.asarray(range_sq_sums)
+    quant = 3.0 * np.sum(np.asarray(range_sq_sums) * inv
                          / (4.0 * steps * steps), axis=-1)
     prune = 3.0 * ltfl.lipschitz ** 2 * ltfl.d_sq \
-        * np.sum(np.asarray(rhos, np.float64), axis=-1)
-    n_total = float(np.sum(num_samples))
+        * np.sum(np.asarray(rhos, np.float64) * inv, axis=-1)
+    n_total = (float(population_samples) if population_samples is not None
+               else float(np.sum(ns)))
     trans = 12.0 * ltfl.v1 / n_total * np.sum(
-        np.asarray(num_samples) * np.asarray(pers, np.float64), axis=-1)
+        ns * np.asarray(pers, np.float64) * inv, axis=-1)
+    if inclusion is not None:
+        part = 12.0 * ltfl.v1 / n_total ** 2 * np.sum(
+            ns * ns * (np.asarray(inv) - 1.0) * inv, axis=-1)
+    else:
+        part = np.float64(0.0)
     scale = 1.0 / (1.0 - 12.0 * ltfl.v2)
-    if quant.ndim == 0 and prune.ndim == 0 and trans.ndim == 0:
-        return GapTerms(float(quant), float(prune), float(trans), scale)
-    quant, prune, trans = np.broadcast_arrays(quant, prune, trans)
-    return GapTerms(quant, prune, trans, scale)
+    if quant.ndim == 0 and prune.ndim == 0 and trans.ndim == 0 \
+            and np.ndim(part) == 0:
+        return GapTerms(float(quant), float(prune), float(trans), scale,
+                        float(part))
+    quant, prune, trans, part = np.broadcast_arrays(quant, prune, trans,
+                                                    part)
+    return GapTerms(quant, prune, trans, scale, part)
 
 
 def gamma(ltfl: LTFLConfig, range_sq_sums, deltas, rhos, pers,
-          num_samples):
-    """Gamma^n (Eq. 29); scalar for (U,) inputs, (K,) for (K, U) inputs."""
+          num_samples, **kw):
+    """Gamma^n (Eq. 29); scalar for (U,) inputs, (K,) for (K, U) inputs.
+    Partial-participation kwargs (``inclusion``/``population_samples``)
+    pass through to ``gap_terms``."""
     return gap_terms(ltfl, range_sq_sums, deltas, rhos, pers,
-                     num_samples).total
+                     num_samples, **kw).total
 
 
 def theorem1_bound(ltfl: LTFLConfig, f0_minus_fstar: float,

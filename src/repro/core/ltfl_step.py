@@ -166,7 +166,11 @@ def make_fl_train_step(model, optimizer: Optimizer, n_clients: int,
         else:
             alpha = jnp.ones((n_clients,), jnp.float32)
 
-        g = aggregate(grads, controls["weights"], alpha)             # Eq. 19
+        # Eq. 19; "agg_denom" (population layer, unbiased partial
+        # participation) fixes the normalizer at the population sample
+        # total instead of renormalizing over the received cohort
+        g = aggregate(grads, controls["weights"], alpha,
+                      denom=controls.get("agg_denom"))
         g = comp.server_transform(g)
         updates, opt_state = optimizer.update(g, opt_state, params)
         params = apply_updates(params, updates)                      # Eq. 20

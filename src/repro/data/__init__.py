@@ -2,6 +2,7 @@ from repro.data.partition import (
     class_histogram,
     dirichlet_partition,
     iid_partition,
+    population_partition,
 )
 from repro.data.pipeline import ArrayDataset, ClientBatcher
 from repro.data.synthetic import synthetic_cifar, synthetic_lm
@@ -13,5 +14,6 @@ __all__ = [
     "synthetic_lm",
     "iid_partition",
     "dirichlet_partition",
+    "population_partition",
     "class_histogram",
 ]

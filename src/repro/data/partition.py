@@ -21,6 +21,44 @@ def iid_partition(num_samples: int, client_sizes: Sequence[int],
     return out
 
 
+def population_partition(num_samples: int, client_sizes: Sequence[int],
+                         rng: np.random.Generator) -> List[np.ndarray]:
+    """Population-indexed shards over a FIXED simulation pool.
+
+    A registered population of N devices needs N shards, but a simulation
+    pool rarely holds sum(sizes) distinct samples at N in the thousands.
+    Clients are assigned contiguous slices of successively re-drawn
+    permutations: shards are disjoint while the pool lasts and wrap onto a
+    fresh permutation once exhausted (DIFFERENT shards then share samples
+    — the standard population-scale simulation compromise — but within
+    one shard indices stay unique, so no client silently overweights a
+    sample). With sum(sizes) <= num_samples this reduces exactly to
+    ``iid_partition`` (one permutation, disjoint slices, identical rng
+    draws).
+    """
+    if max(client_sizes, default=0) > num_samples:
+        raise ValueError(
+            f"a shard of {max(client_sizes)} samples cannot be unique "
+            f"within a pool of {num_samples}")
+    perm, ofs = rng.permutation(num_samples), 0
+    out: List[np.ndarray] = []
+    for s in client_sizes:
+        chunks: List[np.ndarray] = [perm[:0]]   # s == 0 => empty shard
+        have = 0
+        while have < s:
+            if ofs == num_samples:
+                perm, ofs = rng.permutation(num_samples), 0
+            k = min(int(s) - have, num_samples - ofs)
+            cand = perm[ofs:ofs + k]
+            ofs += k
+            # a wrapped shard drops indices it already holds
+            cand = cand[~np.isin(cand, np.concatenate(chunks))]
+            chunks.append(cand)
+            have += cand.size
+        out.append(np.sort(np.concatenate(chunks)))
+    return out
+
+
 def dirichlet_partition(labels: np.ndarray, client_sizes: Sequence[int],
                         alpha: float, rng: np.random.Generator
                         ) -> List[np.ndarray]:

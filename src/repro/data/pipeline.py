@@ -63,13 +63,23 @@ class ClientBatcher:
                 raise ValueError(f"client {u} has an empty partition")
         self.num_clients = len(self.parts)
 
-    def batch(self, batch_size: int, rng: np.random.Generator
+    def batch(self, batch_size: int, rng: np.random.Generator,
+              clients: Optional[Sequence[int]] = None
               ) -> Dict[str, np.ndarray]:
-        """One stacked (C, B, ...) random batch across all clients."""
+        """One stacked (C, B, ...) random batch.
+
+        ``clients`` restricts the gather to a cohort of population indices
+        (population layer): only the scheduled shards are sampled and
+        gathered, so the per-round cost is O(U * B) regardless of how many
+        clients the batcher registers. ``None`` batches every client, in
+        registration order.
+        """
+        parts = self.parts if clients is None \
+            else [self.parts[int(c)] for c in clients]
         idx = np.stack([
             p[rng.choice(p.size, size=batch_size,
                          replace=batch_size > p.size)]
-            for p in self.parts])
+            for p in parts])
         return {k: v[idx] for k, v in self.base.arrays.items()}
 
     def client_sizes(self) -> np.ndarray:

@@ -1,3 +1,10 @@
+from repro.fed.population import (
+    ChannelAwareSampler,
+    CohortSampler,
+    EnergyAwareSampler,
+    Population,
+    UniformSampler,
+)
 from repro.fed.rounds import FedRunner, RoundRecord
 from repro.fed.schemes import (
     BaseScheme,
@@ -20,6 +27,11 @@ ALL_SCHEMES = {
 __all__ = [
     "FedRunner",
     "RoundRecord",
+    "Population",
+    "CohortSampler",
+    "UniformSampler",
+    "ChannelAwareSampler",
+    "EnergyAwareSampler",
     "BaseScheme",
     "Controls",
     "LTFLScheme",

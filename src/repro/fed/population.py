@@ -1,0 +1,238 @@
+"""Population-scale partial participation: N registered devices, U scheduled.
+
+The paper's experiments fix U devices that all transmit every round. Real
+wireless FL at the ROADMAP's scale instead has a large *population* of N
+registered devices with persistent per-device state, from which the base
+station schedules a per-round *cohort* of U << N under its limited radio
+resources (cf. "Towards Scalable Wireless Federated Learning" and the
+client-scheduling literature). This module is that layer:
+
+* ``Population`` holds the (N,) struct-of-arrays ``ChannelState`` (PR 2)
+  plus per-device persistent state that must survive across rounds even
+  when a device is not scheduled: the fading epoch of its last channel
+  realization, its data shard size and CPU frequency (the latter two live
+  inside the ChannelState arrays).  Block fading advances a population
+  epoch; realizations are refreshed *lazily*, only for scheduled devices
+  (``refresh_fading``), so per-round host work stays O(U) — and unscheduled
+  devices carry realistically stale CSI.
+* ``CohortSampler`` is the pluggable scheduler protocol: ``select`` maps
+  (population, cohort_size, round, rng, ltfl) to the (U,) population
+  indices of this round's cohort plus, when well-defined, each member's
+  inclusion probability pi_i (what the unbiased 1/(N pi_i)-style
+  aggregation in ``FedRunner`` divides by).
+* Three schedulers ship: ``UniformSampler`` (uniform without replacement,
+  exact pi = U/N), ``ChannelAwareSampler`` (top-U by expected uplink rate
+  at a reference power — deterministic, so no inclusion probabilities) and
+  ``EnergyAwareSampler`` (probability proportional to per-round energy
+  headroom, first-order pi ~ U * w_i).
+
+``FedRunner`` gathers the cohort's (U,) ``ChannelState`` view each round
+(``ChannelState.take``); Algorithm 1, delay/energy and the Gamma gap run
+on the view, and the jitted train step keeps its static (U,)-shaped
+controls — changing the sampled cohort never retriggers compilation.
+"""
+from __future__ import annotations
+
+import weakref
+from dataclasses import dataclass, field
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import LTFLConfig, WirelessConfig
+from repro.core.channel import ChannelState, expected_rate
+from repro.core.delay_energy import local_train_energy
+
+
+@dataclass
+class Population:
+    """Persistent state for N registered devices.
+
+    ``channel`` is the (N,) struct-of-arrays device state (distances, mean
+    fading powers, interference, CPU frequencies, shard sizes).
+    ``fading_epoch[i]`` records the population epoch at which device i's
+    slow fading/interference realization was last drawn; ``epoch`` is the
+    current population epoch (bumped once per block-fading round).  A
+    device's realization is refreshed only when it is scheduled AND its
+    epoch is stale — O(U) per round, never O(N).
+    """
+
+    channel: ChannelState          # (N,) persistent per-device state
+    fading_epoch: np.ndarray       # (N,) epoch of each device's realization
+    epoch: int = 0                 # current population (channel) epoch
+
+    @classmethod
+    def sample(cls, cfg: WirelessConfig, num: int, samples_min: int,
+               samples_max: int, rng: np.random.Generator) -> "Population":
+        """Register N devices with one vectorized Table-2 draw (identical
+        rng stream to ``ChannelState.sample``, so a population of N == U
+        sees the exact devices the pre-population runner saw)."""
+        state = ChannelState.sample(cfg, num, samples_min, samples_max, rng)
+        return cls(channel=state,
+                   fading_epoch=np.zeros(num, dtype=np.int64))
+
+    @property
+    def num_devices(self) -> int:
+        return self.channel.num_devices
+
+    def __len__(self) -> int:
+        return self.num_devices
+
+    # ------------------------------------------------------------------ #
+    def advance_epoch(self) -> int:
+        """Start a new block-fading epoch; realizations refresh lazily."""
+        self.epoch += 1
+        return self.epoch
+
+    def refresh_fading(self, cfg: WirelessConfig, idx: np.ndarray,
+                       rng: np.random.Generator) -> np.ndarray:
+        """Re-draw the slow fading/interference realization for the
+        scheduled devices ``idx`` whose realization predates the current
+        epoch (same per-device draws as ``ChannelState.redraw_fading``:
+        fading_scale * Exp(1) mean fading power, Table-2 interference).
+        Returns the refreshed indices.  With a full cohort this consumes
+        the identical rng stream as the PR-2 full redraw.
+        """
+        idx = np.asarray(idx, dtype=np.int64)
+        stale = idx[self.fading_epoch[idx] < self.epoch]
+        if stale.size:
+            fading, interference = ChannelState.draw_fading(
+                cfg, rng, stale.size)
+            self.channel.fading_mean[stale] = fading
+            self.channel.interference[stale] = interference
+            self.fading_epoch[stale] = self.epoch
+        return stale
+
+    def view(self, idx: np.ndarray) -> ChannelState:
+        """(U,) cohort view of the channel state (a gathered copy)."""
+        return self.channel.take(idx)
+
+
+# --------------------------------------------------------------------------- #
+# Cohort samplers (the scheduler protocol)
+# --------------------------------------------------------------------------- #
+SelectResult = Tuple[np.ndarray, Optional[np.ndarray]]
+
+
+class CohortSampler:
+    """Scheduler protocol: pick this round's cohort out of the population.
+
+    ``select(population, cohort_size, rnd, rng, ltfl)`` returns
+
+    * ``idx``   — (U,) int64 population indices, ascending (a canonical
+      order keeps the cohort's identity comparable across rounds and the
+      jitted step's control vectors deterministic);
+    * ``probs`` — (U,) per-member inclusion probabilities pi_i when the
+      scheduler defines them (required by ``FedRunner``'s ``"unbiased"``
+      participation mode, which weights device i by N_i / pi_i against the
+      fixed population total), or ``None`` for deterministic schedulers.
+
+    Samplers see the *last-known* channel state: under lazy block fading,
+    unscheduled devices carry stale CSI — exactly the staleness a real
+    scheduler faces.
+    """
+
+    def select(self, population: Population, cohort_size: int, rnd: int,
+               rng: np.random.Generator, ltfl: LTFLConfig) -> SelectResult:
+        raise NotImplementedError
+
+
+@dataclass
+class UniformSampler(CohortSampler):
+    """Uniform without replacement: exact inclusion probability U/N.
+
+    The full-participation case (U == N) is a fast path that returns the
+    identity cohort WITHOUT consuming rng state — a population of N with
+    cohort U == N therefore reproduces the pre-population ``FedRunner``
+    trajectory bit-for-bit.
+    """
+
+    def select(self, population, cohort_size, rnd, rng, ltfl):
+        n = population.num_devices
+        if cohort_size == n:            # full participation: identity cohort
+            return np.arange(n, dtype=np.int64), np.ones(n)
+        idx = np.sort(rng.choice(n, size=cohort_size, replace=False))
+        return idx.astype(np.int64), np.full(cohort_size, cohort_size / n)
+
+
+@dataclass
+class ChannelAwareSampler(CohortSampler):
+    """Top-U by expected uplink rate at a reference power (opportunistic
+    scheduling on last-known CSI).
+
+    ``explore`` in [0, 1) reserves that fraction of the cohort (at least
+    one slot whenever explore > 0) for uniform picks outside the top set
+    — without it, lazy block fading never refreshes unscheduled devices'
+    CSI and the top set can starve. Deterministic selection has no
+    well-defined inclusion probabilities (``probs`` is None): combine
+    with ``participation="cohort"``.
+    """
+
+    power: Optional[float] = None      # reference power; default mid-range
+    explore: float = 0.0
+
+    def select(self, population, cohort_size, rnd, rng, ltfl):
+        w = ltfl.wireless
+        p_ref = self.power if self.power is not None \
+            else 0.5 * (w.p_min + w.p_max)
+        rate = expected_rate(w, population.channel,
+                             np.full(population.num_devices, p_ref))
+        # an explicit explore opt-in must always explore: small cohorts
+        # would otherwise truncate explore * U to zero slots and freeze
+        # the top set on stale CSI forever
+        n_explore = 0 if self.explore <= 0.0 else min(
+            cohort_size, max(1, round(self.explore * cohort_size)))
+        n_top = cohort_size - n_explore
+        order = np.argsort(-rate, kind="stable")
+        idx = order[:n_top]
+        if n_explore:
+            rest = order[n_top:]
+            idx = np.concatenate(
+                [idx, rng.choice(rest, size=n_explore, replace=False)])
+        return np.sort(idx).astype(np.int64), None
+
+
+@dataclass
+class EnergyAwareSampler(CohortSampler):
+    """Probability proportional to per-round energy headroom.
+
+    A device's headroom is E^max minus its full (rho = 0) local-training
+    energy (Eq. 35): devices whose compute alone (nearly) exhausts the
+    budget are (nearly) never scheduled.  Sampling is weighted without
+    replacement; the reported inclusion probabilities use the standard
+    first-order approximation pi_i ~ min(1, U * w_i) for Horvitz-Thompson
+    style unbiased aggregation.
+
+    Headroom depends only on static device attributes (CPU frequency,
+    shard size), so the O(N) weight vector is computed once per
+    (population, config) and cached — select() stays O(U log N) per
+    round. The cache holds a weakref to the population (never a bare
+    id(), which CPython reuses after garbage collection) so a sampler
+    instance shared across successive runners always recomputes.
+    """
+
+    min_headroom: float = 1e-6         # floor so every pi_i stays positive
+    _cache: Optional[Tuple[Any, Any, np.ndarray]] = \
+        field(default=None, repr=False, compare=False)
+
+    def headroom(self, population: Population, ltfl: LTFLConfig
+                 ) -> np.ndarray:
+        e_comp = local_train_energy(ltfl.wireless, population.channel, 0.0)
+        return np.maximum(ltfl.e_max - e_comp, self.min_headroom)
+
+    def _norm_weights(self, population, ltfl) -> np.ndarray:
+        if self._cache is not None:
+            pop_ref, cfg, w = self._cache
+            if pop_ref() is population and cfg is ltfl:
+                return w
+        head = self.headroom(population, ltfl)
+        w = head / np.sum(head)
+        self._cache = (weakref.ref(population), ltfl, w)
+        return w
+
+    def select(self, population, cohort_size, rnd, rng, ltfl):
+        w = self._norm_weights(population, ltfl)
+        idx = np.sort(rng.choice(population.num_devices, size=cohort_size,
+                                 replace=False, p=w))
+        pi = np.clip(cohort_size * w[idx], 1e-9, 1.0)
+        return idx.astype(np.int64), pi

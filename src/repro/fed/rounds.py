@@ -27,14 +27,32 @@ the vectorized sampler; with ``LTFLScheme(recontrol_every=1)`` the
 Algorithm-1 controller re-optimizes controls against each round's
 channel.
 
+Population-scale partial participation
+--------------------------------------
+``population_size=N`` registers N >> U devices with persistent per-device
+state (repro.fed.population.Population); each round a pluggable
+``cohort_sampler`` schedules a cohort of ``cohort_size=U`` devices, and
+ONLY the cohort is touched: Algorithm 1 solves controls for the (U,)
+cohort view of the channel, the batcher gathers U shards, the jitted step
+keeps its static (U,)-shaped inputs (sampling never retriggers
+compilation), and accounting/Gamma run on the view — per-round work is
+governed by U, not N (benchmarks/population_scale.py). Aggregation follows
+``participation``: ``"cohort"`` renormalizes over the received cohort
+(Eq. 19 as-is) and ``"unbiased"`` weights device i by N_i / pi_i against
+the fixed population total (Horvitz-Thompson; requires a sampler that
+reports inclusion probabilities). The default (no population args) is the
+degenerate N == U identity cohort with an rng stream bit-identical to the
+pre-population engine.
+
 This replaces the former per-device Python loop (O(U) jit dispatches +
 host-side compression per round) — the same compiled operator chain now
 serves both this edge engine and the datacenter launcher/dry-run.
 """
 from __future__ import annotations
 
-from dataclasses import asdict, dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from collections import OrderedDict
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +60,6 @@ import numpy as np
 
 from repro.configs.base import LTFLConfig
 from repro.core.channel import (
-    ChannelState,
     packet_error_rate,
     sample_transmissions,
 )
@@ -53,11 +70,19 @@ from repro.core.delay_energy import (
 )
 from repro.core.ltfl_step import make_fl_train_step
 from repro.data import ArrayDataset, ClientBatcher, dirichlet_partition, \
-    iid_partition
+    iid_partition, population_partition
+from repro.fed.population import CohortSampler, Population, UniformSampler
 from repro.fed.schemes import BaseScheme
 from repro.optim import sgd
 
 PyTree = Any
+
+# PER cache bound: distinct power vectors cached per channel/cohort epoch.
+# One epoch rarely sees more than a couple (the decision vector and maybe
+# a probe), but block-fading runs over thousands of rounds must not let
+# old epochs' entries accumulate — the cache is cleared on every epoch
+# change and LRU-bounded within one.
+_PER_CACHE_MAX = 8
 
 
 @dataclass
@@ -74,6 +99,12 @@ class RoundRecord:
     rho_mean: float
     delta_mean: float
     power_mean: float
+    # population layer: which devices were scheduled, and what fraction of
+    # the registered population they are — history_dict curves stay
+    # analyzable per scheme under partial participation. Empty under full
+    # participation (the identity cohort is derivable from the record).
+    cohort: List[int] = field(default_factory=list)
+    participation: float = 1.0
 
 
 class FedRunner:
@@ -84,16 +115,31 @@ class FedRunner:
     ``use_kernels`` routes the 2-D quantization fast path through the
     Pallas kernels (intended for real TPU; interpret mode on CPU);
     ``block_fading`` re-draws the per-device slow fading/interference
-    state at the start of every round through the vectorized channel
-    sampler — combined with ``LTFLScheme(recontrol_every=1)`` the
-    controller re-optimizes against each round's channel."""
+    state at the start of every round (lazily, for the scheduled cohort)
+    — combined with ``LTFLScheme(recontrol_every=1)`` the controller
+    re-optimizes against each round's channel.
+
+    Population layer: ``population_size`` registers N devices (default:
+    ``ltfl.num_devices``), ``cohort_size`` schedules U of them per round
+    (default: all N — classic full participation), ``cohort_sampler``
+    picks them (default ``UniformSampler``), and ``participation``
+    chooses the aggregation convention: ``"cohort"`` (renormalize over
+    the received cohort, Eq. 19) or ``"unbiased"`` (Horvitz-Thompson
+    N_i / pi_i weights against the fixed population sample total)."""
 
     def __init__(self, model, params: PyTree, ltfl: LTFLConfig,
                  train: ArrayDataset, test: ArrayDataset,
                  scheme: BaseScheme, *, batch_size: int = 64,
                  non_iid_alpha: float = 0.0, label_key: str = "labels",
                  seed: int = 0, eval_every: int = 1,
-                 use_kernels: bool = False, block_fading: bool = False):
+                 use_kernels: bool = False, block_fading: bool = False,
+                 population_size: Optional[int] = None,
+                 cohort_size: Optional[int] = None,
+                 cohort_sampler: Optional[CohortSampler] = None,
+                 participation: str = "cohort"):
+        if participation not in ("cohort", "unbiased"):
+            raise ValueError(f"participation={participation!r} "
+                             "(want 'cohort' or 'unbiased')")
         self.model = model
         self.params = params
         self.ltfl = ltfl
@@ -103,25 +149,55 @@ class FedRunner:
         self.block_fading = block_fading
         self.np_rng = np.random.default_rng(seed)
         self._eval_rng_seed = (seed, 0xE7A1)   # fixed eval batches
-        self.num_devices = ltfl.num_devices
 
-        self.channel = ChannelState.sample(ltfl.wireless, ltfl.num_devices,
-                                           ltfl.samples_min, ltfl.samples_max,
-                                           self.np_rng)
+        n_pop = (int(population_size) if population_size is not None
+                 else ltfl.num_devices)
+        u = int(cohort_size) if cohort_size is not None else n_pop
+        if n_pop < 1:
+            raise ValueError(f"population_size={n_pop} must be >= 1")
+        if not 1 <= u <= n_pop:
+            raise ValueError(f"cohort_size={u} must be in [1, {n_pop}]")
+        self.population_size = n_pop
+        self.cohort_size = u
+        self.num_devices = u          # the engine's static client width
+        self.participation = participation
+        self.sampler = cohort_sampler or UniformSampler()
+
+        self.population = Population.sample(
+            ltfl.wireless, n_pop, ltfl.samples_min, ltfl.samples_max,
+            self.np_rng)
+        self._pop_samples_total = float(
+            np.sum(self.population.channel.num_samples))
         self._channel_epoch = 0
-        self._per_cache: Optional[Tuple[Tuple[int, bytes], np.ndarray]] = None
-        sizes = self.channel.num_samples.tolist()
+        self._cohort_epoch = 0
+        self.cohort = np.arange(u, dtype=np.int64)
+        self._cohort_probs: Optional[np.ndarray] = None   # set per round
+        self.channel = self.population.view(self.cohort)
+        self._per_cache: "OrderedDict[bytes, np.ndarray]" = OrderedDict()
+        self._per_cache_epoch = (-1, -1)
+
+        sizes = self.population.channel.num_samples.tolist()
         if non_iid_alpha > 0:
             parts = dirichlet_partition(train.arrays[label_key], sizes,
                                         non_iid_alpha, self.np_rng)
-        else:
+        elif population_size is None:
+            # classic runner: disjoint shards, fail fast when the pool
+            # cannot supply them (iid_partition's oversubscription guard)
             parts = iid_partition(train.size, sizes, self.np_rng)
+        else:
+            # explicit population: shards over a fixed simulation pool
+            # (bit-identical to iid_partition while the pool suffices;
+            # N-device populations don't need N * size distinct samples)
+            parts = population_partition(train.size, sizes, self.np_rng)
         self.batcher = ClientBatcher(train, parts)
         self.test = test
 
         self.num_params = int(sum(
             np.prod(l.shape) for l in jax.tree_util.tree_leaves(params)))
-        self.range_sq_estimates = [1e-2 * self.num_params] * self.num_devices
+        # per-device gradient-range mass, persistent across rounds: cohort
+        # members update theirs from the measured metrics; the rest keep
+        # the conservative prior until first scheduled
+        self._range_sq_pop = np.full(n_pop, 1e-2 * self.num_params)
 
         self.opt = sgd(ltfl.learning_rate)
         self.opt_state = self.opt.init(params)
@@ -129,7 +205,8 @@ class FedRunner:
             else None
         scheme.setup(self)
 
-        # the unified engine: every scheme's round is ONE compiled call
+        # the unified engine: every scheme's round is ONE compiled call,
+        # shaped (U,) — cohort sampling swaps values, never shapes
         step_fn = make_fl_train_step(
             model, self.opt, self.num_devices,
             prune=scheme.uses_prune, prune_kind="magnitude",
@@ -137,7 +214,6 @@ class FedRunner:
             simulate_drops=False, use_kernels=use_kernels)
         self.comp_state = step_fn.init_comp_state(params)
         self._step = jax.jit(step_fn)
-        self._weights = jnp.asarray(sizes, jnp.float32)
 
         self.history: List[RoundRecord] = []
         self._cum_delay = 0.0
@@ -146,7 +222,7 @@ class FedRunner:
     # ------------------------------------------------------------------ #
     @property
     def devices(self):
-        """Legacy tuple-of-DeviceChannel view of the channel state."""
+        """Legacy tuple-of-DeviceChannel view of the cohort channel."""
         return self.channel.to_devices()
 
     @property
@@ -155,18 +231,62 @@ class FedRunner:
         PER caches and control decisions are valid for one epoch."""
         return self._channel_epoch
 
+    @property
+    def cohort_epoch(self) -> int:
+        """Bumped whenever the scheduled cohort's composition changes; a
+        per-device control decision is only valid for the cohort it was
+        solved for."""
+        return self._cohort_epoch
+
+    @property
+    def range_sq_estimates(self) -> np.ndarray:
+        """(U,) gradient-range mass for the CURRENT cohort (what the
+        Algorithm-1 controller consumes)."""
+        return self._range_sq_pop[self.cohort]
+
     def _packet_error_rates(self, ctl) -> np.ndarray:
         """(U,) PERs at ctl.power — from the scheme's decision when fresh,
-        else cached per (channel epoch, power vector)."""
+        else from a per-epoch LRU cache keyed on the power vector. The
+        cache is cleared whenever the channel or cohort epoch changes and
+        bounded to ``_PER_CACHE_MAX`` entries, so thousands of
+        block-fading rounds never accumulate stale epochs' entries."""
         if ctl.per is not None:
             return np.asarray(ctl.per, np.float64)
+        epoch = (self._channel_epoch, self._cohort_epoch)
+        if self._per_cache_epoch != epoch:
+            self._per_cache.clear()
+            self._per_cache_epoch = epoch
         power = np.asarray(ctl.power, np.float64)
-        key = (self._channel_epoch, power.tobytes())
-        if self._per_cache is not None and self._per_cache[0] == key:
-            return self._per_cache[1]
+        key = power.tobytes()
+        hit = self._per_cache.get(key)
+        if hit is not None:
+            self._per_cache.move_to_end(key)
+            return hit
         per = packet_error_rate(self.ltfl.wireless, self.channel, power)
-        self._per_cache = (key, per)
+        self._per_cache[key] = per
+        if len(self._per_cache) > _PER_CACHE_MAX:
+            self._per_cache.popitem(last=False)
         return per
+
+    def _aggregation_weights(self):
+        """Per-round aggregation weights for the cohort view, plus the
+        fixed denominator (or None => renormalize over received).
+
+        ``"cohort"``: w_i = N_i, denominator sum_received N_i — the
+        paper's Eq. 19 applied to the cohort. ``"unbiased"``: w_i =
+        N_i / pi_i, denominator sum_population N_j — the Horvitz-Thompson
+        estimate of the full-population update (equal in expectation,
+        over cohort draws, to full participation)."""
+        ns = self.channel.num_samples.astype(np.float64)
+        if self.participation == "cohort":
+            return ns, None
+        if self._cohort_probs is None:
+            raise ValueError(
+                "participation='unbiased' needs a cohort sampler that "
+                f"reports inclusion probabilities; "
+                f"{type(self.sampler).__name__} does not")
+        return ns / np.maximum(self._cohort_probs, 1e-12), \
+            self._pop_samples_total
 
     # ------------------------------------------------------------------ #
     def evaluate(self, max_batches: int = 4, batch: int = 256) -> float:
@@ -186,33 +306,50 @@ class FedRunner:
     def run_round(self, rnd: int) -> RoundRecord:
         ltfl, w = self.ltfl, self.ltfl.wireless
         if self.block_fading:
-            # re-draw the slow fading/interference state for this round
-            # (one vectorized redraw); invalidates PER caches + any
-            # stale LTFL decision PERs via the epoch bump
-            self.channel = self.channel.redraw_fading(w, self.np_rng)
+            # new block-fading epoch: realizations refresh lazily below,
+            # only for the scheduled cohort; the epoch bump invalidates
+            # PER caches + any stale LTFL decision PERs
+            self.population.advance_epoch()
             self._channel_epoch += 1
+
+        # ---- schedule this round's cohort (population layer) ----------- #
+        cohort, probs = self.sampler.select(
+            self.population, self.cohort_size, rnd, self.np_rng, ltfl)
+        cohort = np.asarray(cohort, np.int64)
+        if not np.array_equal(cohort, self.cohort):
+            self._cohort_epoch += 1      # per-device decisions now stale
+        self.cohort = cohort
+        self._cohort_probs = None if probs is None \
+            else np.asarray(probs, np.float64)
+        self.population.refresh_fading(w, cohort, self.np_rng)
+        self.channel = self.population.view(cohort)
+
         ctl = self.scheme.controls(rnd)
+        weights, agg_denom = self._aggregation_weights()
 
         batch = {k: jnp.asarray(v) for k, v in
-                 self.batcher.batch(self.batch_size, self.np_rng).items()}
+                 self.batcher.batch(self.batch_size, self.np_rng,
+                                    clients=cohort).items()}
         key = jax.random.PRNGKey(
             int(self.np_rng.integers(0, 2 ** 31 - 1)))
         alpha = sample_transmissions(w, self.channel, ctl.power, self.np_rng)
         controls = {
             "rho": jnp.asarray(ctl.rho, jnp.float32),
             "delta": jnp.asarray(ctl.delta, jnp.float32),
-            "weights": self._weights,
+            "weights": jnp.asarray(weights, jnp.float32),
             "alpha": jnp.asarray(alpha, jnp.float32),
         }
+        if agg_denom is not None:
+            controls["agg_denom"] = jnp.float32(agg_denom)
 
         # all tensor work for the round: one jit dispatch (Eq. 8-20)
         self.params, self.opt_state, self.comp_state, m = self._step(
             self.params, self.opt_state, self.comp_state, batch, controls,
             key)
-        rsqs = np.asarray(m["range_sq"], np.float64).tolist()
-        self.range_sq_estimates = rsqs
+        rsqs = np.asarray(m["range_sq"], np.float64)
+        self._range_sq_pop[cohort] = rsqs
 
-        # ---- accounting (Eq. 31-37): one array op over the device axis - #
+        # ---- accounting (Eq. 31-37): one array op over the cohort axis - #
         payloads = np.asarray(self.scheme.payload_bits(ctl), np.float64)
         rho = np.asarray(ctl.rho, np.float64)
         power = np.asarray(ctl.power, np.float64)
@@ -225,8 +362,13 @@ class FedRunner:
 
         pers = self._packet_error_rates(ctl)
         deltas_for_gap = np.where(ctl.delta > 0, ctl.delta, 32.0)
+        # unbiased mode: HT estimate of the POPULATION Gamma + a
+        # client-sampling variance term
+        gap_kw = ({"inclusion": self._cohort_probs,
+                   "population_samples": self._pop_samples_total}
+                  if self.participation == "unbiased" else {})
         g_terms = gap_terms(ltfl, rsqs, deltas_for_gap, rho, pers,
-                            self.channel.num_samples)
+                            self.channel.num_samples, **gap_kw)
 
         rec = RoundRecord(
             round=rnd,
@@ -243,6 +385,12 @@ class FedRunner:
             rho_mean=float(np.mean(ctl.rho)),
             delta_mean=float(np.mean(ctl.delta)),
             power_mean=float(np.mean(ctl.power)),
+            # full participation (U == N) always schedules the identity
+            # cohort — elide it so classic histories don't carry N ints
+            # of derivable data per round
+            cohort=(cohort.tolist()
+                    if self.cohort_size < self.population_size else []),
+            participation=self.cohort_size / self.population_size,
         )
         self.history.append(rec)
         self.scheme.post_round(rnd, {"train_loss": rec.train_loss,

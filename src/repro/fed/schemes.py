@@ -93,6 +93,7 @@ class LTFLScheme(BaseScheme):
         self.name = "ltfl" + suffix
         self._decision: Optional[controller_mod.ControlDecision] = None
         self._solved_epoch: int = -1
+        self._solved_cohort: int = -1
 
     def compressor(self, *, use_kernels: bool = False) -> Compressor:
         if not self.use_quant:
@@ -123,10 +124,15 @@ class LTFLScheme(BaseScheme):
                 ltfl, ch, r.num_params,
                 range_sq_sums=r.range_sq_estimates, rng=r.np_rng)
         self._solved_epoch = r.channel_epoch
+        self._solved_cohort = r.cohort_epoch
 
     def controls(self, rnd: int) -> Controls:
+        # a decision is per-device: solved against one cohort's channel
+        # view, it is meaningless for a differently-composed cohort
+        # (population layer bumps cohort_epoch on composition change)
         if self._decision is None or (
-                self.recontrol_every and rnd % self.recontrol_every == 0):
+                self.recontrol_every and rnd % self.recontrol_every == 0) \
+                or self._solved_cohort != self.runner.cohort_epoch:
             self._solve()
         d = self._decision
         rho = d.rho if self.uses_prune else np.zeros_like(d.rho)
@@ -187,7 +193,11 @@ class SignSGDScheme(BaseScheme):
 class FedMPScheme(BaseScheme):
     """Jiang et al. 2023: per-device multi-armed-bandit pruning-rate
     selection (UCB1 over a discrete rho grid, reward = loss decrease per
-    unit round delay). No quantization; full-precision kept entries."""
+    unit round delay). No quantization; full-precision kept entries.
+
+    Bandit state is POPULATION-indexed: each registered device keeps its
+    own UCB counters across rounds, and only this round's cohort pulls an
+    arm — a device resumes its bandit where it left off when rescheduled."""
 
     name = "fedmp"
     uses_prune = True
@@ -198,16 +208,16 @@ class FedMPScheme(BaseScheme):
 
     def setup(self, runner):
         super().setup(runner)
-        u, a = runner.num_devices, len(self.arms)
-        self._counts = np.zeros((u, a))
-        self._rewards = np.zeros((u, a))
-        self._choice = np.zeros(u, dtype=np.int64)
+        n, a = runner.population_size, len(self.arms)
+        self._counts = np.zeros((n, a))
+        self._rewards = np.zeros((n, a))
+        self._choice = np.zeros(n, dtype=np.int64)
         self._prev_loss: Optional[float] = None
 
     def controls(self, rnd):
         r = self.runner
         t = rnd + 1
-        for u in range(r.num_devices):
+        for u in r.cohort:
             if np.any(self._counts[u] == 0):
                 self._choice[u] = int(np.argmin(self._counts[u]))
             else:
@@ -215,7 +225,7 @@ class FedMPScheme(BaseScheme):
                 ucb = mean + self.ucb_c * np.sqrt(
                     2.0 * np.log(t) / self._counts[u])
                 self._choice[u] = int(np.argmax(ucb))
-        rho = self.arms[self._choice]
+        rho = self.arms[self._choice[r.cohort]]
         p = np.full(r.num_devices, 0.5 * r.ltfl.wireless.p_max)
         return Controls(rho=rho, delta=np.zeros(r.num_devices), power=p)
 
@@ -227,12 +237,12 @@ class FedMPScheme(BaseScheme):
         if self._prev_loss is not None:
             gain = max(self._prev_loss - loss, 0.0)
             reward = gain / max(metrics["delay"], 1e-9)
-            for u in range(self.runner.num_devices):
+            for u in self.runner.cohort:
                 a = self._choice[u]
                 self._counts[u, a] += 1
                 self._rewards[u, a] += reward
         else:
-            for u in range(self.runner.num_devices):
+            for u in self.runner.cohort:
                 self._counts[u, self._choice[u]] += 1
         self._prev_loss = loss
 
@@ -241,7 +251,12 @@ class STCScheme(BaseScheme):
     """Sattler et al. 2020: sparse ternary compression — top-k
     sparsification + ternarization (mean magnitude of kept entries) +
     client-side error accumulation. The residual is the engine's carried
-    comp_state pytree; Golomb-coded payload estimate."""
+    comp_state pytree; Golomb-coded payload estimate.
+
+    Population caveat: the carried residual is per cohort SLOT, not per
+    registered device — under partial participation with a changing
+    cohort, a slot's error feedback mixes devices (the usual engine-side
+    approximation; exact per-device residuals would need (N, ...) state)."""
 
     name = "stc"
 

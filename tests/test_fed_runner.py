@@ -113,12 +113,29 @@ def test_per_cache_reused_when_power_static(world):
     runner = FedRunner(model, params, LTFL, train, test, FedSGDScheme(),
                        batch_size=32, seed=0)
     runner.run_round(0)
-    cached = runner._per_cache
-    assert cached is not None
+    assert len(runner._per_cache) == 1
+    (key, cached), = runner._per_cache.items()
     runner.run_round(1)
-    assert runner._per_cache is cached      # same key: no recompute
-    assert np.all(np.isfinite(cached[1]))
-    assert np.all((cached[1] >= 0) & (cached[1] <= 1))
+    assert len(runner._per_cache) == 1
+    assert runner._per_cache[key] is cached      # same key: no recompute
+    assert np.all(np.isfinite(cached))
+    assert np.all((cached >= 0) & (cached <= 1))
+
+
+def test_per_cache_never_outlives_one_epoch(world):
+    """Block fading for many rounds must not accumulate stale epochs'
+    entries: the cache is cleared on every epoch bump, so it only ever
+    holds the current epoch's power vectors (one, for a fixed-power
+    scheme) and its epoch tag tracks the runner's epochs."""
+    model, params, train, test = world
+    runner = FedRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                       batch_size=32, seed=0, block_fading=True,
+                       eval_every=0)
+    for rnd in range(6):
+        runner.run_round(rnd)
+        assert len(runner._per_cache) == 1
+        assert runner._per_cache_epoch == (runner.channel_epoch,
+                                           runner.cohort_epoch)
 
 
 def test_block_fading_recontrol_every_round(world):
@@ -156,5 +173,6 @@ def test_block_fading_stale_decision_per_recomputed(world):
     # the runner's recomputed cache instead
     assert runner.channel_epoch == 2
     assert runner.scheme._solved_epoch == 1
-    assert runner._per_cache is not None
-    assert not np.array_equal(runner._per_cache[1], decision_per)
+    assert len(runner._per_cache) == 1
+    (recomputed,) = runner._per_cache.values()
+    assert not np.array_equal(recomputed, decision_per)

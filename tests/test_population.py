@@ -1,0 +1,350 @@
+"""Population layer: sampled cohorts over a persistent N-device state.
+
+Covers the PR's acceptance points: a population of N with a uniform
+sampler and cohort U == N reproduces the full-participation FedRunner
+trajectory bit-for-bit; changing the sampled cohort (same U) never
+retriggers compilation of the jitted step; the samplers schedule what
+they claim; and both participation-weighting conventions (cohort-
+normalized vs unbiased Horvitz-Thompson) behave as documented.
+"""
+from dataclasses import asdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LTFLConfig
+from repro.configs.ltfl_paper import ResNetConfig
+from repro.core.aggregation import aggregate
+from repro.core.channel import expected_rate
+from repro.core.convergence import gap_terms
+from repro.data import (
+    ArrayDataset,
+    iid_partition,
+    population_partition,
+    synthetic_cifar,
+)
+from repro.fed import (
+    ChannelAwareSampler,
+    EnergyAwareSampler,
+    FedRunner,
+    FedSGDScheme,
+    LTFLScheme,
+    Population,
+    UniformSampler,
+)
+from repro.models.resnet import ResNet
+
+LTFL = LTFLConfig(num_devices=5, samples_min=100, samples_max=150,
+                  bo_iters=3, alt_max_iters=2)
+
+
+@pytest.fixture(scope="module")
+def world():
+    imgs, labels = synthetic_cifar(900, seed=0)
+    timgs, tlabels = synthetic_cifar(300, seed=1)
+    train = ArrayDataset({"images": imgs, "labels": labels})
+    test = ArrayDataset({"images": timgs, "labels": tlabels})
+    model = ResNet(ResNetConfig(stem_channels=8,
+                                group_channels=(8, 16, 16, 32)))
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params, train, test
+
+
+def _tree_equal(a, b) -> bool:
+    eq = jax.tree_util.tree_map(
+        lambda x, y: bool(np.array_equal(np.asarray(x), np.asarray(y))),
+        a, b)
+    return all(jax.tree_util.tree_leaves(eq))
+
+
+# --------------------------------------------------------------------------- #
+# full-participation parity
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("block_fading", [False, True])
+def test_full_cohort_reproduces_full_participation(world, block_fading):
+    """Population of N, uniform sampler, cohort U == N: identical rng
+    stream and bit-for-bit identical trajectory vs the plain runner."""
+    model, params, train, test = world
+    plain = FedRunner(model, params, LTFL, train, test, LTFLScheme(),
+                      batch_size=32, seed=0, block_fading=block_fading)
+    pop = FedRunner(model, params, LTFL, train, test, LTFLScheme(),
+                    batch_size=32, seed=0, block_fading=block_fading,
+                    population_size=LTFL.num_devices,
+                    cohort_size=LTFL.num_devices,
+                    cohort_sampler=UniformSampler())
+    h_plain = plain.run(3)
+    h_pop = pop.run(3)
+    for a, b in zip(h_plain, h_pop):
+        assert asdict(a) == asdict(b)
+    assert _tree_equal(plain.params, pop.params)
+    assert np.array_equal(plain.channel.fading_mean, pop.channel.fading_mean)
+
+
+# --------------------------------------------------------------------------- #
+# static cohort shape: sampling never recompiles the step
+# --------------------------------------------------------------------------- #
+def test_changing_cohort_does_not_recompile(world):
+    model, params, train, test = world
+    runner = FedRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                       batch_size=16, seed=0, eval_every=0,
+                       population_size=12, cohort_size=4)
+    if not hasattr(runner._step, "_cache_size"):
+        pytest.skip("jit cache-size introspection unavailable")
+    cohorts = set()
+    for rnd in range(4):
+        rec = runner.run_round(rnd)
+        cohorts.add(tuple(rec.cohort))
+        assert runner._step._cache_size() == 1   # one (U,) compilation
+    assert len(cohorts) > 1        # the cohort actually changed between rounds
+    assert runner.cohort_epoch >= 1
+
+
+# --------------------------------------------------------------------------- #
+# population state: lazy fading refresh
+# --------------------------------------------------------------------------- #
+def test_lazy_fading_refresh_touches_only_cohort(rng):
+    wl = LTFL.wireless
+    pop = Population.sample(wl, 10, 100, 150, rng)
+    before = pop.channel.fading_mean.copy()
+    pop.advance_epoch()
+    cohort = np.array([1, 4, 7])
+    refreshed = pop.refresh_fading(wl, cohort, rng)
+    assert np.array_equal(np.sort(refreshed), cohort)
+    changed = pop.channel.fading_mean != before
+    assert set(np.flatnonzero(changed)) <= {1, 4, 7}
+    assert np.all(pop.fading_epoch[cohort] == 1)
+    assert np.all(pop.fading_epoch[[0, 2, 3, 5, 6, 8, 9]] == 0)
+    # already-fresh devices are NOT redrawn again within the epoch
+    after = pop.channel.fading_mean.copy()
+    assert pop.refresh_fading(wl, cohort, rng).size == 0
+    assert np.array_equal(pop.channel.fading_mean, after)
+
+
+# --------------------------------------------------------------------------- #
+# population-indexed shards
+# --------------------------------------------------------------------------- #
+def test_population_partition_wraps_without_within_shard_duplicates(rng):
+    """Shards beyond the pool wrap onto fresh permutations: different
+    shards may share samples, but each shard stays duplicate-free."""
+    sizes = [12] * 10                      # 120 needed from a pool of 50
+    parts = population_partition(50, sizes, rng)
+    for p, s in zip(parts, sizes):
+        assert p.size == s
+        assert np.unique(p).size == s      # unique within the shard
+        assert np.all((p >= 0) & (p < 50))
+    with pytest.raises(ValueError, match="cannot be unique"):
+        population_partition(10, [11], rng)
+
+
+def test_population_partition_matches_iid_when_pool_suffices():
+    sizes = [7, 5, 9]
+    a = population_partition(100, sizes, np.random.default_rng(3))
+    b = iid_partition(100, sizes, np.random.default_rng(3))
+    for x, y in zip(a, b):
+        assert np.array_equal(x, y)
+
+
+def test_population_partition_zero_size_shard():
+    """A zero-size shard yields an empty array, matching iid_partition."""
+    sizes = [5, 0, 7]
+    a = population_partition(100, sizes, np.random.default_rng(3))
+    b = iid_partition(100, sizes, np.random.default_rng(3))
+    assert a[1].size == 0
+    for x, y in zip(a, b):
+        assert np.array_equal(x, y)
+
+
+# --------------------------------------------------------------------------- #
+# samplers
+# --------------------------------------------------------------------------- #
+def test_uniform_sampler_probs_and_bounds(rng):
+    pop = Population.sample(LTFL.wireless, 20, 100, 150, rng)
+    idx, probs = UniformSampler().select(pop, 6, 0, rng, LTFL)
+    assert idx.shape == (6,) and probs.shape == (6,)
+    assert np.all(np.diff(idx) > 0)              # sorted, unique
+    assert np.all((idx >= 0) & (idx < 20))
+    np.testing.assert_allclose(probs, 6 / 20)
+    # full participation: identity cohort, no rng consumption
+    state = rng.bit_generator.state
+    idx_full, probs_full = UniformSampler().select(pop, 20, 0, rng, LTFL)
+    assert rng.bit_generator.state == state
+    assert np.array_equal(idx_full, np.arange(20))
+    np.testing.assert_allclose(probs_full, 1.0)
+
+
+def test_channel_aware_sampler_picks_top_rate(rng):
+    pop = Population.sample(LTFL.wireless, 16, 100, 150, rng)
+    w = LTFL.wireless
+    p_ref = 0.5 * (w.p_min + w.p_max)
+    rate = expected_rate(w, pop.channel, np.full(16, p_ref))
+    top = set(np.argsort(-rate)[:5].tolist())
+    idx, probs = ChannelAwareSampler().select(pop, 5, 0, rng, LTFL)
+    assert probs is None               # deterministic: no inclusion probs
+    assert set(idx.tolist()) == top
+
+
+def test_channel_aware_explore_never_truncates_to_zero(rng):
+    """An explicit explore opt-in must reserve at least one slot even when
+    explore * U < 1 — otherwise stale-CSI starvation returns silently."""
+    pop = Population.sample(LTFL.wireless, 16, 100, 150, rng)
+    w = LTFL.wireless
+    rate = expected_rate(w, pop.channel,
+                         np.full(16, 0.5 * (w.p_min + w.p_max)))
+    top4 = set(np.argsort(-rate)[:4].tolist())
+    sampler = ChannelAwareSampler(explore=0.2)   # int(0.2 * 4) == 0
+    explored = False
+    for rnd in range(40):
+        idx, _ = sampler.select(pop, 4, rnd, rng, LTFL)
+        if set(idx.tolist()) != top4:
+            explored = True
+            break
+    assert explored
+
+
+def test_energy_aware_sampler_avoids_exhausted_devices(rng):
+    pop = Population.sample(LTFL.wireless, 8, 100, 150, rng)
+    # device 3's compute alone exhausts E^max: headroom floors out
+    pop.channel.cpu_hz[3] = 1e9
+    sampler = EnergyAwareSampler()
+    assert sampler.headroom(pop, LTFL)[3] == sampler.min_headroom
+    for rnd in range(25):
+        idx, probs = sampler.select(pop, 4, rnd, rng, LTFL)
+        assert 3 not in idx.tolist()
+        assert np.all((probs > 0) & (probs <= 1))
+
+
+def test_energy_aware_sampler_cache_follows_population(rng):
+    """A sampler instance reused across populations (the sweep pattern)
+    must recompute its cached headroom weights for each population — a
+    stale cache would silently bias cohorts AND the reported pi_i that
+    feed unbiased Horvitz-Thompson aggregation."""
+    sampler = EnergyAwareSampler()
+    pop1 = Population.sample(LTFL.wireless, 8, 100, 150, rng)
+    pop1.channel.cpu_hz[3] = 1e9           # exhausted under pop1 only
+    sampler.select(pop1, 4, 0, rng, LTFL)
+    del pop1                               # id() may now be reused
+    pop2 = Population.sample(LTFL.wireless, 8, 100, 150, rng)
+    pop2.channel.cpu_hz[5] = 1e9           # a DIFFERENT exhausted device
+    for rnd in range(25):
+        idx, _ = sampler.select(pop2, 4, rnd, rng, LTFL)
+        assert 5 not in idx.tolist()       # stale pop1 weights would pick 5
+
+
+# --------------------------------------------------------------------------- #
+# participation weighting conventions
+# --------------------------------------------------------------------------- #
+def test_unbiased_aggregation_fixed_denominator():
+    """Equal shards, uniform sampling (pi = U/N): the HT estimate with
+    weights N_i/pi against denom sum_pop N_j recovers the plain mean for
+    ANY cohort — and, unlike cohort renormalization, shrinks (not
+    re-inflates) when a sampled packet drops."""
+    n_pop, u, n_i = 10, 2, 50.0
+    g = {"w": jnp.stack([jnp.full((4,), 1.0), jnp.full((4,), 3.0)])}
+    weights = jnp.full((u,), n_i / (u / n_pop))         # N_i / pi_i
+    denom = jnp.float32(n_pop * n_i)                    # sum_pop N_j
+    got = aggregate(g, weights, jnp.ones(u), denom=denom)
+    np.testing.assert_allclose(np.asarray(got["w"]), 2.0, rtol=1e-6)
+
+    one_drop = jnp.array([1.0, 0.0])
+    unbiased = aggregate(g, weights, one_drop, denom=denom)
+    cohort_norm = aggregate(g, jnp.full((u,), n_i), one_drop)
+    np.testing.assert_allclose(np.asarray(unbiased["w"]), 0.5, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(cohort_norm["w"]), 1.0, rtol=1e-6)
+
+
+def test_runner_arg_validation(world):
+    """Zero-valued population args must error, never silently default,
+    and the CLASSIC runner keeps iid_partition's oversubscription guard
+    (an explicit population opts into pool wrapping instead)."""
+    model, params, train, test = world
+    for bad in ({"cohort_size": 0}, {"population_size": 0}):
+        with pytest.raises(ValueError, match="must be"):
+            FedRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                      batch_size=16, seed=0, eval_every=0, **bad)
+    big = LTFLConfig(num_devices=5, samples_min=300, samples_max=400,
+                     bo_iters=3, alt_max_iters=2)   # > the 900-sample pool
+    with pytest.raises(ValueError, match="need .* samples"):
+        FedRunner(model, params, big, train, test, FedSGDScheme(),
+                  batch_size=16, seed=0, eval_every=0)
+    FedRunner(model, params, big, train, test, FedSGDScheme(),
+              batch_size=16, seed=0, eval_every=0,
+              population_size=5)     # explicit population: wrapping OK
+
+
+def test_unbiased_runner_needs_inclusion_probs(world):
+    model, params, train, test = world
+    runner = FedRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                       batch_size=16, seed=0, eval_every=0,
+                       population_size=10, cohort_size=3,
+                       cohort_sampler=ChannelAwareSampler(),
+                       participation="unbiased")
+    with pytest.raises(ValueError, match="inclusion probabilities"):
+        runner.run_round(0)
+
+
+def test_both_participation_modes_run(world):
+    model, params, train, test = world
+    for mode in ("cohort", "unbiased"):
+        runner = FedRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                           batch_size=16, seed=0, eval_every=0,
+                           population_size=10, cohort_size=3,
+                           participation=mode)
+        hist = runner.run(2)
+        for rec in hist:
+            assert np.isfinite(rec.train_loss) and np.isfinite(rec.gamma)
+            assert len(rec.cohort) == 3
+            assert rec.participation == pytest.approx(0.3)
+
+
+# --------------------------------------------------------------------------- #
+# Gamma gap under partial participation
+# --------------------------------------------------------------------------- #
+def test_gap_terms_partial_participation():
+    u = 4
+    rs, deltas = [100.0] * u, [4] * u
+    rhos, pers, ns = [0.2] * u, [0.05] * u, [500] * u
+    base = gap_terms(LTFL, rs, deltas, rhos, pers, ns)
+    # pi = 1 with the population total equal to the cohort total reduces
+    # exactly to the full-participation Eq. 29
+    full = gap_terms(LTFL, rs, deltas, rhos, pers, ns,
+                     inclusion=[1.0] * u,
+                     population_samples=float(np.sum(ns)))
+    assert full.participation == 0.0
+    assert full.total == pytest.approx(base.total)
+    # pi = 0.5 over a 2x population: HT doubles each summand and charges a
+    # positive client-sampling term
+    half = gap_terms(LTFL, rs, deltas, rhos, pers, ns,
+                     inclusion=[0.5] * u,
+                     population_samples=2.0 * float(np.sum(ns)))
+    assert half.participation > 0
+    assert half.quantization == pytest.approx(2.0 * base.quantization)
+    assert half.pruning == pytest.approx(2.0 * base.pruning)
+    assert half.transmission == pytest.approx(base.transmission)  # /N doubles too
+    assert half.total > base.total
+    # half a convention is an error, not a silently inflated Gamma
+    for partial_kw in ({"inclusion": [0.5] * u},
+                       {"population_samples": 2.0 * float(np.sum(ns))}):
+        with pytest.raises(ValueError, match="go together"):
+            gap_terms(LTFL, rs, deltas, rhos, pers, ns, **partial_kw)
+
+
+# --------------------------------------------------------------------------- #
+# scheme integration: per-cohort control decisions
+# --------------------------------------------------------------------------- #
+def test_ltfl_resolves_when_cohort_changes(world):
+    """A control decision is per-device: when the sampled cohort's
+    composition changes, Algorithm 1 must re-solve even without
+    recontrol_every/block fading."""
+    model, params, train, test = world
+    runner = FedRunner(model, params, LTFL, train, test, LTFLScheme(),
+                       batch_size=16, seed=0, eval_every=0,
+                       population_size=12, cohort_size=4)
+    seen = set()
+    for rnd in range(3):
+        rec = runner.run_round(rnd)
+        seen.add(tuple(rec.cohort))
+        assert runner.scheme._solved_cohort == runner.cohort_epoch
+        assert np.isfinite(rec.gamma)
+    assert len(seen) > 1
