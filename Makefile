@@ -2,33 +2,41 @@
 #
 #   make test        — tier-1 verify: the full pytest suite with PYTHONPATH
 #                      handled (same command the PR driver runs).
-#   make bench-smoke — one tiny round-engine benchmark round: proves the
-#                      unified batched step compiles and beats the legacy
-#                      per-device loop on this machine. Writes
-#                      artifacts/bench/round_engine_smoke.json.
-#   make bench-check — bench-smoke + the regression gate: fails when the
-#                      unified-engine speedup regressed >30% vs the
-#                      committed artifacts/bench/round_engine.json.
-#   make bench-population — the population-scale sweep (per-round wall
-#                      clock flat in N at fixed cohort U).
+#   make bench-smoke — one tiny run of each gated benchmark (unified round
+#                      engine, population scaling, scanned engine); writes
+#                      artifacts/bench/*_smoke.json (never the committed
+#                      baselines).
+#   make bench-check — bench-smoke + the regression gates: fails when the
+#                      unified-engine or scanned-engine speedup regressed
+#                      >30%, or the population flat-in-N ratio drifted
+#                      >30%, vs the committed artifacts/bench baselines.
+#   make bench-population — the full population-scale sweep (per-round
+#                      wall clock flat in N at fixed cohort U).
+#   make bench-scan  — the full scanned-vs-loop engine sweep
+#                      (U x R grid; writes artifacts/bench/scan_engine.json).
 #   make lint        — ruff, check-only (no reformatting); rule set in
 #                      ruff.toml.
 
 PY ?= python
 
-.PHONY: test bench-smoke bench-check bench-population lint
+.PHONY: test bench-smoke bench-check bench-population bench-scan lint
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
 
 bench-smoke:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.round_engine --smoke
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.population_scale --smoke
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.scan_engine --smoke
 
 bench-check: bench-smoke
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.check_regression
 
 bench-population:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.population_scale
+
+bench-scan:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.scan_engine
 
 lint:
 	ruff check .

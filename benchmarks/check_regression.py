@@ -1,19 +1,23 @@
-"""CI bench-regression gate for the unified round engine.
+"""CI bench-regression gates for the round engines.
 
-Compares a fresh ``make bench-smoke`` measurement
-(artifacts/bench/round_engine_smoke.json) against the COMMITTED baseline
-(artifacts/bench/round_engine.json, the full client-count sweep measured
-when the engine landed — it includes the smoke config's U=8 row exactly so
-the gate compares like with like) and fails when the unified-engine
-speedup over the legacy per-device loop has regressed by more than
-``--tolerance`` (default 30%).
+Three gates, each comparing a fresh ``make bench-smoke`` measurement
+against its COMMITTED baseline artifact:
 
-The gated metric is the *speedup ratio* (legacy_s / engine_s), not wall
-clock: the ratio is dispatch-bound and transfers across machines, where
-absolute times on shared CI runners do not. Rows are matched by client
-count — a U=8 smoke run gates against the baseline's U=8 row; mismatched
-configs would silently widen the effective tolerance. When the files
-share no client count the gate falls back to min-vs-min with a warning.
+* **round_engine** — unified-step speedup over the legacy per-device
+  loop (rows matched by client count; fresh speedup must stay within
+  ``--tolerance`` of the baseline's).
+* **population_scale** — flat-in-N scaling: for each cohort size U the
+  per-round time ratio between the largest and smallest population size
+  SHARED by both files must not grow more than ``--tolerance`` over the
+  baseline ratio (a drift above ~1 means per-round cost picked up an
+  O(N) term).
+* **scan_engine** — scanned-segment speedup over the per-round FedRunner
+  loop (rows matched by (clients, rounds)).
+
+The gated metrics are unitless ratios, not wall clock: ratios are
+dispatch-/shape-bound and transfer across machines, where absolute times
+on shared CI runners do not. A missing or malformed input is exit 2 (the
+smoke targets write all three fresh artifacts).
 
 Run:  PYTHONPATH=src python -m benchmarks.check_regression
 Exit: 0 pass, 1 regression, 2 missing/invalid input.
@@ -26,64 +30,161 @@ import os
 import sys
 
 # benchmarks.common's ART_DIR would do, but importing it drags in the
-# whole jax/repro stack — this gate only reads two JSON files and must
+# whole jax/repro stack — this gate only reads JSON files and must
 # stay runnable (exit 2, not ImportError) on a bare-python machine
 ART_DIR = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "artifacts", "bench")
 
 
-def _speedups(path: str) -> dict:
+def _load(path: str) -> dict:
     with open(path) as f:
-        payload = json.load(f)
-    rows = {int(r["clients"]): float(r["speedup"]) for r in payload["rows"]}
+        return json.load(f)
+
+
+def _speedup_rows(payload: dict, label) -> dict:
+    """{row label: speedup} keyed by the per-benchmark config columns."""
+    rows = {label(r): float(r["speedup"]) for r in payload["rows"]}
     if not rows:
-        raise ValueError(f"{path}: no benchmark rows")
+        raise ValueError("no benchmark rows")
     return rows
+
+
+def _check_speedup_floor(name: str, cur: dict, base: dict, tol: float,
+                         min_fallback: bool = False) -> bool:
+    """The shared speedup gate: per row label present in BOTH files, the
+    fresh speedup must stay above baseline * (1 - tol). ``min_fallback``
+    (the historical round_engine behavior) compares min-vs-min with a
+    warning when the configs share no row; without it, no shared row is
+    a failure."""
+    shared = sorted(set(cur) & set(base))
+    if shared:
+        pairs = [(label, cur[label], base[label]) for label in shared]
+    elif min_fallback:
+        print(f"check_regression: WARNING — no shared {name} row between "
+              f"{sorted(cur)} and {sorted(base)}; falling back to "
+              "min-vs-min (configs differ, tolerance is approximate)")
+        pairs = [("min", min(cur.values()), min(base.values()))]
+    else:
+        print(f"check_regression: {name}: no shared row between "
+              f"{sorted(cur)} and {sorted(base)} -> FAIL")
+        return False
+    ok = True
+    for label, c, b in pairs:
+        floor = b * (1.0 - tol)
+        good = c >= floor
+        ok &= good
+        print(f"check_regression: {name} {label}: speedup {c:.2f}x "
+              f"(baseline {b:.2f}x, floor {floor:.2f}x at tolerance "
+              f"{tol:.0%}) -> {'PASS' if good else 'FAIL'}")
+    return ok
+
+
+def check_round_engine(cur: dict, base: dict, tol: float) -> bool:
+    def label(r):
+        return f"U={int(r['clients'])}"
+    return _check_speedup_floor(
+        "round_engine", _speedup_rows(cur, label),
+        _speedup_rows(base, label), tol, min_fallback=True)
+
+
+def _population_times(payload: dict) -> dict:
+    """{cohort: {population: s_per_round}}"""
+    out = {}
+    for g in payload["groups"]:
+        out[int(g["cohort"])] = {int(r["population"]): float(r["s_per_round"])
+                                 for r in g["rows"]}
+    if not out:
+        raise ValueError("no population groups")
+    return out
+
+
+def check_population(cur: dict, base: dict, tol: float) -> bool:
+    """Flat-in-N ceiling: per shared U, the maxN/minN per-round ratio over
+    the N values SHARED by both files must not exceed the baseline's
+    ratio by more than the tolerance."""
+    cur, base = _population_times(cur), _population_times(base)
+    shared_u = sorted(set(cur) & set(base))
+    if not shared_u:
+        print("check_regression: population_scale: no shared cohort size "
+              f"between {sorted(cur)} and {sorted(base)} -> FAIL")
+        return False
+    ok = True
+    for u in shared_u:
+        ns = sorted(set(cur[u]) & set(base[u]))
+        if len(ns) < 2:
+            print(f"check_regression: population_scale U={u}: fewer than "
+                  f"two shared population sizes ({ns}) -> FAIL")
+            ok = False
+            continue
+        lo, hi = ns[0], ns[-1]
+        c = cur[u][hi] / cur[u][lo]
+        b = base[u][hi] / base[u][lo]
+        ceiling = b * (1.0 + tol)
+        good = c <= ceiling
+        ok &= good
+        print(f"check_regression: population_scale U={u}: "
+              f"N={hi} vs N={lo} per-round ratio {c:.2f}x (baseline "
+              f"{b:.2f}x, ceiling {ceiling:.2f}x at tolerance {tol:.0%}) "
+              f"-> {'PASS' if good else 'FAIL'}")
+    return ok
+
+
+def check_scan(cur: dict, base: dict, tol: float) -> bool:
+    def label(r):
+        return f"U={int(r['clients'])} R={int(r['rounds'])}"
+    return _check_speedup_floor(
+        "scan_engine", _speedup_rows(cur, label),
+        _speedup_rows(base, label), tol)
+
+
+GATES = {
+    "round_engine": ("round_engine_smoke.json", "round_engine.json",
+                     check_round_engine),
+    "population_scale": ("population_scale_smoke.json",
+                         "population_scale.json", check_population),
+    "scan_engine": ("scan_engine_smoke.json", "scan_engine.json",
+                    check_scan),
+}
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--current",
-                    default=os.path.join(ART_DIR, "round_engine_smoke.json"),
-                    help="fresh measurement (written by make bench-smoke)")
-    ap.add_argument("--baseline",
-                    default=os.path.join(ART_DIR, "round_engine.json"),
-                    help="committed baseline artifact")
     ap.add_argument("--tolerance", type=float, default=0.30,
-                    help="allowed fractional speedup regression (0.30 = "
-                         "fail on >30%% slowdown)")
+                    help="allowed fractional regression per gate (0.30 = "
+                         "fail on >30%% drift)")
+    ap.add_argument("--only", default="",
+                    help=f"comma list of gates ({','.join(GATES)}); "
+                         "default all")
+    ap.add_argument("--art-dir", default=ART_DIR,
+                    help="directory holding the smoke + baseline JSONs")
     args = ap.parse_args()
-
-    try:
-        cur = _speedups(args.current)
-        base = _speedups(args.baseline)
-    except (OSError, KeyError, TypeError, ValueError,
-            json.JSONDecodeError) as e:
-        print(f"check_regression: cannot read benchmark JSON: {e}")
+    names = [n.strip() for n in args.only.split(",") if n.strip()] \
+        or list(GATES)
+    unknown = [n for n in names if n not in GATES]
+    if unknown:
+        print(f"check_regression: unknown gate(s) {unknown}; "
+              f"have {sorted(GATES)}")
         return 2
 
-    shared = sorted(set(cur) & set(base))
-    if shared:
-        pairs = [(f"U={u}", cur[u], base[u]) for u in shared]
-    else:
-        print("check_regression: WARNING — no shared client count between "
-              f"{sorted(cur)} and {sorted(base)}; falling back to "
-              "min-vs-min (configs differ, tolerance is approximate)")
-        pairs = [("min", min(cur.values()), min(base.values()))]
-
-    failed = False
-    for label, c, b in pairs:
-        floor = b * (1.0 - args.tolerance)
-        ok = c >= floor
-        failed |= not ok
-        print(f"check_regression: {label}: speedup {c:.2f}x "
-              f"(baseline {b:.2f}x, floor {floor:.2f}x at tolerance "
-              f"{args.tolerance:.0%}) -> {'PASS' if ok else 'FAIL'}")
+    failed = invalid = False
+    for name in names:
+        smoke, baseline, check = GATES[name]
+        try:
+            cur = _load(os.path.join(args.art_dir, smoke))
+            base = _load(os.path.join(args.art_dir, baseline))
+            failed |= not check(cur, base, args.tolerance)
+        except (OSError, KeyError, TypeError, ValueError,
+                json.JSONDecodeError) as e:
+            # keep evaluating the remaining gates: a detected regression
+            # must still exit 1 even when another artifact is unreadable
+            print(f"check_regression: {name}: cannot read benchmark "
+                  f"JSON: {e}")
+            invalid = True
     if failed:
-        print("check_regression: the unified round engine has regressed "
-              "vs the committed artifacts/bench/round_engine.json baseline")
+        print("check_regression: a round-engine benchmark has regressed "
+              "vs its committed artifacts/bench baseline")
         return 1
-    return 0
+    return 2 if invalid else 0
 
 
 if __name__ == "__main__":

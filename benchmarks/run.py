@@ -14,7 +14,8 @@ def main() -> None:
                     help="EXPERIMENTS.md-scale rounds (slow on CPU)")
     ap.add_argument("--only", default="",
                     help="comma list: ablation,schemes,channel,devices,"
-                         "noniid,controller,kernels,roofline,population")
+                         "noniid,controller,kernels,roofline,population,"
+                         "scan")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     rounds = 24 if args.full else 10
@@ -28,12 +29,20 @@ def main() -> None:
         non_iid,
         population_scale,
         roofline,
+        scan_engine,
         schemes,
     )
 
     print("name,us_per_call,derived")
     if only is None or "kernels" in only:
         kernels_bench.run()
+    if only is None or "scan" in only:
+        # only a --full run may rewrite the committed scan_engine.json
+        # baseline that check_regression gates on
+        scan_engine.run(
+            client_counts=(8, 16, 32) if args.full else (16,),
+            round_counts=(16, 64),
+            artifact=("scan_engine" if args.full else "scan_engine_reduced"))
     if only is None or "controller" in only:
         controller_bench.run(
             device_counts=(16, 32, 64) if args.full else (16,))

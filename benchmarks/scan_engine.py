@@ -1,0 +1,133 @@
+"""Scanned round engine vs the per-round FedRunner loop.
+
+Times full experiment segments — R rounds of federated training with
+channel outcomes, delay/energy accounting and Gamma — through (a) the
+classic ``FedRunner`` loop (one jit dispatch + host accounting per round)
+and (b) ``ScanRunner`` with a single compiled ``lax.scan`` over all R
+rounds (``rng="device"``: cohort draw, packet outcomes, batch indices and
+accounting all inside the scan; ``rng="host"`` is also measured — the
+seeded-parity mode that still precomputes the host rng stream per round).
+
+The model is the library's small ``MLP`` — the paper's many-round edge
+regime, where per-round tensor work is tiny and the per-round loop's cost
+IS dispatch + host accounting. That is the regime the scan engine exists
+for; with a conv model large enough to be compute-bound the two paths
+converge (same tensor work either way — pass --width to explore via
+hidden size).
+
+Run:  PYTHONPATH=src python -m benchmarks.scan_engine [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from benchmarks.common import emit, save_artifact
+from repro.configs.base import LTFLConfig
+from repro.data import ArrayDataset, synthetic_cifar
+from repro.fed import FedRunner, FedSGDScheme, ScanRunner
+from repro.models import MLP, MLPConfig
+
+
+def _world(hidden: int = 16, downsample: int = 4, seed: int = 0):
+    imgs, labels = synthetic_cifar(2048, seed=seed)
+    timgs, tlabels = synthetic_cifar(256, seed=seed + 1)
+    train = ArrayDataset({"images": imgs, "labels": labels})
+    test = ArrayDataset({"images": timgs, "labels": tlabels})
+    model = MLP(MLPConfig(hidden=(hidden,), downsample=downsample))
+    params = model.init(jax.random.PRNGKey(seed))
+    return model, params, train, test
+
+
+def _runner(cls, world, clients, batch, **kw):
+    model, params, train, test = world
+    ltfl = LTFLConfig(num_devices=clients, samples_min=40, samples_max=60,
+                      learning_rate=0.1)
+    return cls(model, params, ltfl, train, test, FedSGDScheme(),
+               batch_size=batch, seed=0, eval_every=0, **kw)
+
+
+def _time_loop(world, clients, rounds, trials, batch):
+    runner = _runner(FedRunner, world, clients, batch)
+    runner.run(1)                              # warmup: compile the step
+    times = []
+    for _ in range(trials):
+        t0 = time.time()
+        runner.run(rounds)
+        times.append((time.time() - t0) / rounds)
+    return min(times)
+
+
+def _time_scan(world, clients, rounds, trials, batch, rng):
+    runner = _runner(ScanRunner, world, clients, batch, rng=rng)
+    runner.run(rounds)                         # warmup: trace length R once
+    times = []
+    for _ in range(trials):
+        t0 = time.time()
+        runner.run(rounds)                     # same length: cached trace
+        times.append((time.time() - t0) / rounds)
+    return min(times)
+
+
+def run(client_counts=(8, 16, 32), round_counts=(16, 64), trials: int = 3,
+        batch: int = 4, hidden: int = 16, downsample: int = 4,
+        artifact: str = "scan_engine") -> dict:
+    """Min-of-trials per-round wall clock across the (U, R) grid.
+
+    FedSGD keeps controls trivial (no Algorithm-1 solve) so the
+    comparison isolates exactly what the scan removes: per-round
+    dispatch, host<->device transfers, rng and numpy accounting. Each
+    path is warmed (compiled) before timing; the scanned path re-runs the
+    SAME segment length so timing never includes a retrace."""
+    rows = []
+    for clients in client_counts:
+        world = _world(hidden=hidden, downsample=downsample)
+        for rounds in round_counts:
+            t_loop = _time_loop(world, clients, rounds, trials, batch)
+            t_dev = _time_scan(world, clients, rounds, trials, batch,
+                               "device")
+            t_host = _time_scan(world, clients, rounds, trials, batch,
+                                "host")
+            speedup = t_loop / t_dev
+            emit(f"scan_engine/loop_U{clients}_R{rounds}", t_loop * 1e6,
+                 f"per-round FedRunner, min of {trials}")
+            emit(f"scan_engine/scan_U{clients}_R{rounds}", t_dev * 1e6,
+                 f"one lax.scan, device rng, speedup={speedup:.2f}x "
+                 f"(host-rng mode {t_loop / t_host:.2f}x)")
+            rows.append({"clients": clients, "rounds": rounds,
+                         "loop_s_per_round": t_loop,
+                         "scan_s_per_round": t_dev,
+                         "scan_host_s_per_round": t_host,
+                         "speedup": speedup,
+                         "speedup_host": t_loop / t_host})
+    payload = {"trials": trials, "batch": batch, "hidden": hidden,
+               "downsample": downsample, "model": "mlp", "rows": rows}
+    save_artifact(artifact, payload)
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single (U=16, R=64) run for make bench-smoke")
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--width", type=int, default=16,
+                    help="MLP hidden width (grow it to push the bench "
+                         "toward the compute-bound regime)")
+    ap.add_argument("--downsample", type=int, default=4,
+                    help="input downsample stride (1 = full 3072-feature "
+                         "inputs, where per-round compute dominates)")
+    args = ap.parse_args()
+    if args.smoke:
+        # smoke writes its OWN artifact (never clobbers the committed
+        # baseline) and measures the exact (U, R) row the regression gate
+        # compares: U=16, R=64 — the acceptance row
+        run(client_counts=(16,), round_counts=(64,), trials=args.trials,
+            batch=args.batch, hidden=args.width,
+            downsample=args.downsample, artifact="scan_engine_smoke")
+    else:
+        run(trials=args.trials, batch=args.batch, hidden=args.width,
+            downsample=args.downsample)

@@ -1,8 +1,13 @@
-"""End-to-end driver: federated LM training with the datacenter LTFL step.
+"""End-to-end driver: federated LM training with the SCANNED datacenter
+LTFL step.
 
 Trains a llama-family (granite-architecture) language model with the full
 LTFL operator chain — per-client block pruning, stochastic quantization,
-packet drops, weighted aggregation — on synthetic token data.
+packet drops, weighted aggregation — on synthetic token data, executing
+``--scan-rounds`` federated rounds per compiled call via the scanned
+round engine (repro.fed.make_scanned_step wraps the unified step in one
+``lax.scan``): host work per segment is one batch-index draw and one
+dispatch, not one per round.
 
 The default model is CPU-sized (~10M params) so a few hundred steps finish
 in minutes on this container; ``--hundred-m`` switches to a ~100M-param
@@ -22,6 +27,7 @@ from repro import configs
 from repro.checkpoint import save
 from repro.core import make_fl_train_step
 from repro.data import synthetic_lm
+from repro.fed import make_scanned_step
 from repro.models import build_model
 from repro.optim import sgd
 
@@ -42,6 +48,9 @@ def main():
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--per-client-batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--scan-rounds", type=int, default=10,
+                    help="federated rounds per compiled lax.scan segment "
+                         "(1 = the legacy per-step loop)")
     ap.add_argument("--hundred-m", action="store_true")
     ap.add_argument("--ckpt", default="")
     args = ap.parse_args()
@@ -58,7 +67,8 @@ def main():
     C = args.clients
     step_fn = make_fl_train_step(model, opt, C, prune_block=64)
     comp_state = step_fn.init_comp_state(params)
-    step = jax.jit(step_fn)
+    # the scanned engine: R rounds per dispatch, batches stacked (R, C, B)
+    scan_fn = jax.jit(make_scanned_step(step_fn))
 
     toks = synthetic_lm(C * args.per_client_batch * 8, args.seq + 1,
                         cfg.vocab_size, seed=0)
@@ -70,18 +80,28 @@ def main():
     }
     rng = np.random.default_rng(0)
     t0 = time.time()
-    for i in range(args.steps):
-        idx = rng.choice(len(toks), C * args.per_client_batch, replace=False)
-        b = jnp.asarray(toks[idx]).reshape(C, args.per_client_batch, -1)
+    done = 0
+    log_interval = max(args.steps // 10, 1)
+    next_log = 0
+    while done < args.steps:
+        n = min(args.scan_rounds, args.steps - done)
+        idx = np.stack([rng.choice(len(toks), C * args.per_client_batch,
+                                   replace=False) for _ in range(n)])
+        b = jnp.asarray(toks[idx]).reshape(n, C, args.per_client_batch, -1)
         # model.loss shifts internally (predict t+1 from t)
-        batch = {"tokens": b[:, :, :-1], "labels": b[:, :, :-1]}
-        params, opt_state, comp_state, m = step(
-            params, opt_state, comp_state, batch, controls,
-            jax.random.PRNGKey(i))
-        if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
-            print(f"step {i:4d} loss={float(m['loss']):.4f} "
-                  f"recv={int(m['clients_received'])}/{C} "
-                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+        batch = {"tokens": b[..., :-1], "labels": b[..., :-1]}
+        keys = jnp.stack([jax.random.PRNGKey(done + i) for i in range(n)])
+        params, opt_state, comp_state, m = scan_fn(
+            params, opt_state, comp_state, batch, controls, keys)
+        done += n
+        # ~10 log lines per run regardless of segment length; reading the
+        # loss is the only host sync, so it only happens on log steps
+        if done > next_log or done >= args.steps:
+            next_log = done + log_interval
+            print(f"step {done - 1:4d} loss={float(m['loss'][-1]):.4f} "
+                  f"recv={int(m['clients_received'][-1])}/{C} "
+                  f"({(time.time()-t0)/done:.2f}s/step, "
+                  f"{n} rounds/dispatch)")
     if args.ckpt:
         path = save(args.ckpt, args.steps, {"params": params})
         print("checkpoint:", path)

@@ -24,13 +24,28 @@ dataclasses. ``expected_rate`` / ``packet_error_rate`` accept either form:
 ``ChannelState.sample`` is the vectorized device sampler and
 ``ChannelState.redraw_fading`` re-draws per-round fading/interference
 realizations (block fading), cheap enough to run every round.
+
+Device-resident twins (the scan engine's hot path)
+--------------------------------------------------
+``ChannelArrays`` is the jnp pytree twin of ``ChannelState``
+(``ChannelState.to_arrays()`` converts), and ``expected_rate_dev`` /
+``packet_error_rate_dev`` / ``sample_transmissions_dev`` /
+``draw_fading_dev`` are jnp-native twins of the per-round host paths:
+identical formulas (same Gauss-Laguerre nodes), but traceable, so the
+scanned round engine (repro.fed.scan_engine) evaluates them INSIDE one
+compiled ``lax.scan`` with a ``jax.random`` key stream instead of one
+host dispatch per round. The host functions stay float64 (the control
+plane's precision); the twins run at the accelerator's default f32 and
+are pinned to the host path by tolerance tests (tests/test_scan_engine).
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Sequence, Tuple, Union
+from typing import NamedTuple, Sequence, Tuple, Union
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import WirelessConfig
@@ -153,6 +168,29 @@ class ChannelState:
         return dataclasses.replace(
             self, fading_mean=fading, interference=interference)
 
+    def to_arrays(self) -> "ChannelArrays":
+        """Device-resident jnp twin (the scan engine's carry/consts)."""
+        return ChannelArrays(
+            distance=jnp.asarray(self.distance, jnp.float32),
+            fading_mean=jnp.asarray(self.fading_mean, jnp.float32),
+            interference=jnp.asarray(self.interference, jnp.float32),
+            cpu_hz=jnp.asarray(self.cpu_hz, jnp.float32),
+            num_samples=jnp.asarray(self.num_samples, jnp.float32),
+        )
+
+
+class ChannelArrays(NamedTuple):
+    """jnp pytree twin of ``ChannelState``: each field is a (U,) (or (N,))
+    jax array, so the whole struct flows through ``jit`` / ``lax.scan`` /
+    ``vmap`` as a carry or constant. ``num_samples`` is f32 (it only ever
+    enters weighted sums on device)."""
+
+    distance: jax.Array
+    fading_mean: jax.Array
+    interference: jax.Array
+    cpu_hz: jax.Array
+    num_samples: jax.Array
+
 
 Devices = Union[ChannelState, DeviceChannel, Sequence[DeviceChannel]]
 
@@ -230,3 +268,65 @@ def sample_transmissions(cfg: WirelessConfig, devices: Devices,
     state = as_channel_state(devices)
     qs = packet_error_rate(cfg, state, np.asarray(powers, np.float64))
     return (rng.random(state.num_devices) >= qs).astype(np.int64)
+
+
+# --------------------------------------------------------------------------- #
+# jnp-native twins (traceable; used inside the scanned round engine)
+# --------------------------------------------------------------------------- #
+def _mean_gain_dev(ch: ChannelArrays) -> jax.Array:
+    return ch.fading_mean * ch.distance ** -2.0
+
+
+def _noise_dev(cfg: WirelessConfig, ch: ChannelArrays) -> jax.Array:
+    return ch.interference + jnp.float32(cfg.bandwidth_ul * cfg.n0)
+
+
+def expected_rate_dev(cfg: WirelessConfig, ch: ChannelArrays,
+                      power: jax.Array) -> jax.Array:
+    """Traced twin of ``expected_rate``: same Gauss-Laguerre quadrature,
+    f32, broadcasting over the device axis (and any leading axes)."""
+    p = jnp.asarray(power, jnp.float32)
+    c = p * _mean_gain_dev(ch) / _noise_dev(cfg, ch)
+    val = jnp.log2(1.0 + c[..., None] * jnp.asarray(_GL_X, jnp.float32))
+    return cfg.bandwidth_ul * jnp.sum(
+        jnp.asarray(_GL_W, jnp.float32) * val, axis=-1)
+
+
+def packet_error_rate_dev(cfg: WirelessConfig, ch: ChannelArrays,
+                          power: jax.Array) -> jax.Array:
+    """Traced twin of ``packet_error_rate`` (Eq. 3), f32."""
+    p = jnp.asarray(power, jnp.float32)
+    c = cfg.waterfall * _noise_dev(cfg, ch) / (p * _mean_gain_dev(ch))
+    x = jnp.maximum(jnp.asarray(_GL_X, jnp.float32), 1e-12)
+    val = 1.0 - jnp.exp(-c[..., None] / x)
+    return jnp.clip(jnp.sum(jnp.asarray(_GL_W, jnp.float32) * val, axis=-1),
+                    0.0, 1.0)
+
+
+def sample_transmissions_dev(cfg: WirelessConfig, ch: ChannelArrays,
+                             power: jax.Array, key: jax.Array) -> jax.Array:
+    """Traced twin of ``sample_transmissions``: alpha ~ Bernoulli(1 - q)
+    from a jax.random key. Returns f32 (U,) in {0, 1} (what the unified
+    step's ``controls["alpha"]`` consumes)."""
+    qs = packet_error_rate_dev(cfg, ch, power)
+    u = jax.random.uniform(key, qs.shape)
+    return (u >= qs).astype(jnp.float32)
+
+
+def draw_fading_dev(cfg: WirelessConfig, key: jax.Array,
+                    size: int) -> Tuple[jax.Array, jax.Array]:
+    """Traced twin of ``ChannelState.draw_fading``: one block-fading epoch's
+    (fading_mean, interference) draws for ``size`` devices. Distributions
+    match the host sampler (fading_scale * Exp(1), Table-2 interference);
+    the realized stream is jax.random's, not numpy's — the scan engine's
+    device rng mode is statistically, not bitwise, identical to the host
+    loop."""
+    k_f, k_i = jax.random.split(key)
+    # explicit f32: the scan carry is f32, and dtype-default draws would
+    # widen to f64 (and break the carry structure) under JAX_ENABLE_X64
+    fading = cfg.fading_scale * jax.random.exponential(
+        k_f, (size,), dtype=jnp.float32)
+    interference = jax.random.uniform(
+        k_i, (size,), dtype=jnp.float32, minval=cfg.interference_min,
+        maxval=cfg.interference_max)
+    return fading, interference

@@ -23,12 +23,20 @@ scaled by 1 / pi_i), plus a ``participation`` term — the leading HT
 variance proxy 12 v1 / N^2 * sum_i N_i^2 (1 - pi_i) / pi_i^2 — that
 charges the gap for client-sampling noise. With pi = 1 everywhere both
 reduce exactly to the full-participation Eq. 29.
+
+``gamma_dev`` is the jnp-native twin of ``gamma`` — the identical Eq. 29
+arithmetic (including the partial-participation HT terms), but traceable,
+so the scanned round engine evaluates each round's Gamma from the
+*measured* in-jit gradient ranges without a host round trip (f32;
+tolerance-pinned to the float64 host path by tests/test_scan_engine).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import LTFLConfig
@@ -109,6 +117,46 @@ def gamma(ltfl: LTFLConfig, range_sq_sums, deltas, rhos, pers,
     pass through to ``gap_terms``."""
     return gap_terms(ltfl, range_sq_sums, deltas, rhos, pers,
                      num_samples, **kw).total
+
+
+def gamma_dev(ltfl: LTFLConfig,
+              range_sq_sums: jax.Array,
+              deltas: jax.Array,
+              rhos: jax.Array,
+              pers: jax.Array,
+              num_samples: jax.Array,
+              *,
+              inclusion: Optional[jax.Array] = None,
+              population_samples: Optional[float] = None) -> jax.Array:
+    """Traced twin of ``gamma``: the scalar Gamma^n (Eq. 29) from (U,)
+    inputs, f32, inside jit/scan. Inputs mirror ``gap_terms``; the
+    partial-participation kwargs follow the same convention (both or
+    neither — the caller is compiled code, so the mixed-convention guard
+    lives on the host path it is pinned to)."""
+    deltas = jnp.asarray(deltas, jnp.float32)
+    ns = jnp.asarray(num_samples, jnp.float32)
+    if inclusion is not None:
+        inv = 1.0 / jnp.maximum(jnp.asarray(inclusion, jnp.float32), 1e-12)
+    else:
+        inv = jnp.float32(1.0)
+    steps = jnp.maximum(2.0 ** deltas - 1.0, 1e-12)
+    quant = 3.0 * jnp.sum(jnp.asarray(range_sq_sums, jnp.float32) * inv
+                          / (4.0 * steps * steps), axis=-1)
+    prune = 3.0 * ltfl.lipschitz ** 2 * ltfl.d_sq \
+        * jnp.sum(jnp.asarray(rhos, jnp.float32) * inv, axis=-1)
+    if population_samples is not None:
+        n_total = jnp.asarray(population_samples, jnp.float32)
+    else:
+        n_total = jnp.sum(ns, axis=-1)
+    trans = 12.0 * ltfl.v1 / n_total * jnp.sum(
+        ns * jnp.asarray(pers, jnp.float32) * inv, axis=-1)
+    if inclusion is not None:
+        part = 12.0 * ltfl.v1 / n_total ** 2 * jnp.sum(
+            ns * ns * (inv - 1.0) * inv, axis=-1)
+    else:
+        part = jnp.float32(0.0)
+    scale = 1.0 / (1.0 - 12.0 * ltfl.v2)
+    return scale * (quant + prune + trans + part)
 
 
 def theorem1_bound(ltfl: LTFLConfig, f0_minus_fstar: float,

@@ -5,15 +5,29 @@ signature: floats in, float out) or a ``ChannelState`` of (U,) arrays, in
 which case ``payload_bits`` / ``rho`` / ``power`` broadcast over the device
 axis and any leading candidate axes — e.g. (K, U) powers produce (K, U)
 delays. ``round_delay`` / ``round_energy`` reduce over the device axis.
+
+``device_round_delay_dev`` / ``device_round_energy_dev`` are jnp-native
+twins over a ``ChannelArrays`` view — identical Eq. 31-37 formulas, but
+traceable, so the scanned round engine charges delay/energy INSIDE the
+compiled ``lax.scan`` (f32; tolerance-pinned to the float64 host path by
+tests/test_scan_engine). ``rate=`` lets one expected-rate quadrature
+serve both the delay and energy evaluations on either path.
 """
 from __future__ import annotations
 
-from typing import Sequence
+from typing import Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import LTFLConfig, WirelessConfig
-from repro.core.channel import as_channel_state, expected_rate
+from repro.core.channel import (
+    ChannelArrays,
+    as_channel_state,
+    expected_rate,
+    expected_rate_dev,
+)
 
 
 def local_train_delay(cfg: WirelessConfig, dev, rho) -> np.ndarray:
@@ -81,3 +95,65 @@ def round_energy(ltfl: LTFLConfig, devices, payload_bits: Sequence[float],
         ltfl.wireless, state, np.asarray(payload_bits, np.float64),
         np.asarray(rhos, np.float64), np.asarray(powers, np.float64))
     return float(np.sum(per_dev))
+
+
+# --------------------------------------------------------------------------- #
+# jnp-native twins (traceable; used inside the scanned round engine)
+# --------------------------------------------------------------------------- #
+def local_train_delay_dev(cfg: WirelessConfig, ch: ChannelArrays,
+                          rho: jax.Array) -> jax.Array:
+    """Eq. 31, traced: T_lt = N_u c0 (1 - rho) / f_u."""
+    return (ch.num_samples * jnp.float32(cfg.cycles_per_sample)
+            * (1.0 - rho) / ch.cpu_hz)
+
+
+def upload_delay_dev(cfg: WirelessConfig, ch: ChannelArrays,
+                     payload_bits: jax.Array, rho: jax.Array,
+                     power: jax.Array, *,
+                     rate: Optional[jax.Array] = None) -> jax.Array:
+    """Eq. 32, traced: T_lu = delta~ (1 - rho) / R(p)."""
+    if rate is None:
+        rate = expected_rate_dev(cfg, ch, power)
+    return payload_bits * (1.0 - rho) / jnp.maximum(rate, 1e-9)
+
+
+def local_train_energy_dev(cfg: WirelessConfig, ch: ChannelArrays,
+                           rho: jax.Array) -> jax.Array:
+    """Eq. 35, traced: E_lt = k f^(sigma-1) N c0 (1 - rho)."""
+    return (cfg.k_eff * ch.cpu_hz ** jnp.float32(cfg.sigma_exp - 1.0)
+            * ch.num_samples * jnp.float32(cfg.cycles_per_sample)
+            * (1.0 - rho))
+
+
+def device_round_delay_dev(cfg: WirelessConfig, ch: ChannelArrays,
+                           payload_bits: jax.Array, rho: jax.Array,
+                           power: jax.Array, *,
+                           rate: Optional[jax.Array] = None) -> jax.Array:
+    return (local_train_delay_dev(cfg, ch, rho)
+            + upload_delay_dev(cfg, ch, payload_bits, rho, power, rate=rate))
+
+
+def device_round_energy_dev(cfg: WirelessConfig, ch: ChannelArrays,
+                            payload_bits: jax.Array, rho: jax.Array,
+                            power: jax.Array, *,
+                            rate: Optional[jax.Array] = None) -> jax.Array:
+    """Eq. 37, traced: E = E_lt + p * T_lu."""
+    return (local_train_energy_dev(cfg, ch, rho)
+            + power * upload_delay_dev(cfg, ch, payload_bits, rho, power,
+                                       rate=rate))
+
+
+def round_accounting_dev(ltfl: LTFLConfig, ch: ChannelArrays,
+                         payload_bits: jax.Array, rho: jax.Array,
+                         power: jax.Array
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """One round's (delay, energy) scalars over a cohort view, traced:
+    Eq. 34 (stragglers gate the round, + server delay) and Eq. 37 summed.
+    Shares a single expected-rate quadrature across both."""
+    cfg = ltfl.wireless
+    rate = expected_rate_dev(cfg, ch, power)
+    delay = jnp.max(device_round_delay_dev(
+        cfg, ch, payload_bits, rho, power, rate=rate)) + ltfl.server_delay
+    energy = jnp.sum(device_round_energy_dev(
+        cfg, ch, payload_bits, rho, power, rate=rate))
+    return delay, energy

@@ -84,22 +84,35 @@ def quant_error_bound(range_sq_sum: jax.Array, bits: jax.Array) -> jax.Array:
     return range_sq_sum / (4.0 * n * n)
 
 
+def _payload_bits_impl(xp, num_params, bits, xi_bits):
+    """Eq. 18 in float32, namespace-generic: total uplink bits
+    delta~ = V * delta + xi.
+
+    The SINGLE source of the payload formula — ``payload_bits`` (jnp, the
+    controller/scan-engine traced path) and ``payload_bits_host`` (numpy,
+    the host accounting) both evaluate exactly this f32 arithmetic, so
+    the two sides cannot drift (pinned by tests/test_quantization's
+    parity test)."""
+    return (xp.asarray(num_params, xp.float32)
+            * xp.asarray(bits, xp.float32)
+            + xp.asarray(xi_bits, xp.float32))
+
+
 def payload_bits(num_params: jax.Array, bits: jax.Array,
                  xi_bits: int) -> jax.Array:
     """Eq. 18: total uplink bits  delta~ = V * delta + xi."""
-    return num_params * jnp.asarray(bits, jnp.float32) + xi_bits
+    return _payload_bits_impl(jnp, num_params, bits, xi_bits)
 
 
 def payload_bits_host(num_params, bits, xi_bits) -> np.ndarray:
     """Numpy twin of ``payload_bits`` for the host-side control plane.
 
-    Keeps the same float32 arithmetic so controller decisions agree
-    bitwise with the jnp path, but broadcasts over (U,) delta arrays
-    without a jax dispatch per device.
-    """
-    out = (np.float32(num_params) * np.asarray(bits, np.float32)
-           + np.float32(xi_bits))
-    return np.asarray(out, np.float64)
+    The same shared f32 formula (``_payload_bits_impl``) so controller
+    decisions agree bitwise with the jnp path, broadcast over (U,) delta
+    arrays without a jax dispatch per device; returned as float64 for the
+    host accounting chain."""
+    return np.asarray(_payload_bits_impl(np, num_params, bits, xi_bits),
+                      np.float64)
 
 
 # --------------------------------------------------------------------------- #

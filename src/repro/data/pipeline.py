@@ -63,6 +63,23 @@ class ClientBatcher:
                 raise ValueError(f"client {u} has an empty partition")
         self.num_clients = len(self.parts)
 
+    def batch_indices(self, batch_size: int, rng: np.random.Generator,
+                      clients: Optional[Sequence[int]] = None
+                      ) -> np.ndarray:
+        """The (C, B) GLOBAL index matrix one stacked batch would gather.
+
+        This is the host half of ``batch`` split out so the scanned round
+        engine (repro.fed.scan_engine) can precompute a segment's per-round
+        index matrices on the identical rng stream and hand the gather to
+        the device — the returned matrix indexes ``base`` directly.
+        """
+        parts = self.parts if clients is None \
+            else [self.parts[int(c)] for c in clients]
+        return np.stack([
+            p[rng.choice(p.size, size=batch_size,
+                         replace=batch_size > p.size)]
+            for p in parts])
+
     def batch(self, batch_size: int, rng: np.random.Generator,
               clients: Optional[Sequence[int]] = None
               ) -> Dict[str, np.ndarray]:
@@ -74,12 +91,7 @@ class ClientBatcher:
         clients the batcher registers. ``None`` batches every client, in
         registration order.
         """
-        parts = self.parts if clients is None \
-            else [self.parts[int(c)] for c in clients]
-        idx = np.stack([
-            p[rng.choice(p.size, size=batch_size,
-                         replace=batch_size > p.size)]
-            for p in parts])
+        idx = self.batch_indices(batch_size, rng, clients)
         return {k: v[idx] for k, v in self.base.arrays.items()}
 
     def client_sizes(self) -> np.ndarray:

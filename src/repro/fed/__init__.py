@@ -6,6 +6,7 @@ from repro.fed.population import (
     UniformSampler,
 )
 from repro.fed.rounds import FedRunner, RoundRecord
+from repro.fed.scan_engine import RoundLog, ScanRunner, make_scanned_step
 from repro.fed.schemes import (
     BaseScheme,
     Controls,
@@ -27,6 +28,9 @@ ALL_SCHEMES = {
 __all__ = [
     "FedRunner",
     "RoundRecord",
+    "RoundLog",
+    "ScanRunner",
+    "make_scanned_step",
     "Population",
     "CohortSampler",
     "UniformSampler",

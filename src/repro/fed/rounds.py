@@ -52,7 +52,7 @@ from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import asdict, dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -83,6 +83,22 @@ PyTree = Any
 # old epochs' entries accumulate — the cache is cleared on every epoch
 # change and LRU-bounded within one.
 _PER_CACHE_MAX = 8
+
+
+class HostRoundInputs(NamedTuple):
+    """Everything the host decides for one round, in the exact np_rng
+    consumption order of ``FedRunner.run_round``. Splitting this out of
+    ``run_round`` is what lets the scanned engine (repro.fed.scan_engine)
+    precompute a whole segment's rounds on an IDENTICAL rng stream and
+    stay seeded-parity with the classic per-round loop by construction."""
+
+    cohort: np.ndarray          # (U,) scheduled population indices
+    ctl: Any                    # the scheme's Controls for this round
+    weights: np.ndarray         # (U,) aggregation weights
+    agg_denom: Optional[float]  # fixed normalizer (unbiased) or None
+    batch_idx: np.ndarray       # (U, B) global sample indices
+    key: Any                    # the round's jax PRNGKey
+    alpha: np.ndarray           # (U,) transmission outcomes (Eq. 4)
 
 
 @dataclass
@@ -213,6 +229,7 @@ class FedRunner:
             compressor=scheme.compressor(use_kernels=use_kernels),
             simulate_drops=False, use_kernels=use_kernels)
         self.comp_state = step_fn.init_comp_state(params)
+        self._step_fn = step_fn          # pure step (the scan engine's body)
         self._step = jax.jit(step_fn)
 
         self.history: List[RoundRecord] = []
@@ -303,7 +320,12 @@ class FedRunner:
         return float(np.mean(accs))
 
     # ------------------------------------------------------------------ #
-    def run_round(self, rnd: int) -> RoundRecord:
+    def _host_round_inputs(self, rnd: int) -> HostRoundInputs:
+        """Advance all host-side per-round state (block-fading epoch,
+        cohort schedule, scheme controls, batch draw, round key, channel
+        outcomes) and return the round's inputs. The np_rng consumption
+        order here IS the engine's seeded contract: the scanned engine
+        replays this exact method per round when precomputing a segment."""
         ltfl, w = self.ltfl, self.ltfl.wireless
         if self.block_fading:
             # new block-fading epoch: realizations refresh lazily below,
@@ -326,13 +348,24 @@ class FedRunner:
 
         ctl = self.scheme.controls(rnd)
         weights, agg_denom = self._aggregation_weights()
-
-        batch = {k: jnp.asarray(v) for k, v in
-                 self.batcher.batch(self.batch_size, self.np_rng,
-                                    clients=cohort).items()}
+        batch_idx = self.batcher.batch_indices(self.batch_size, self.np_rng,
+                                               clients=cohort)
         key = jax.random.PRNGKey(
             int(self.np_rng.integers(0, 2 ** 31 - 1)))
         alpha = sample_transmissions(w, self.channel, ctl.power, self.np_rng)
+        return HostRoundInputs(cohort=cohort, ctl=ctl, weights=weights,
+                               agg_denom=agg_denom, batch_idx=batch_idx,
+                               key=key, alpha=alpha)
+
+    def run_round(self, rnd: int) -> RoundRecord:
+        ltfl = self.ltfl
+        h = self._host_round_inputs(rnd)
+        cohort, ctl, weights, agg_denom, alpha = \
+            h.cohort, h.ctl, h.weights, h.agg_denom, h.alpha
+        key = h.key
+
+        batch = {k: jnp.asarray(v[h.batch_idx])
+                 for k, v in self.batcher.base.arrays.items()}
         controls = {
             "rho": jnp.asarray(ctl.rho, jnp.float32),
             "delta": jnp.asarray(ctl.delta, jnp.float32),
@@ -350,6 +383,7 @@ class FedRunner:
         self._range_sq_pop[cohort] = rsqs
 
         # ---- accounting (Eq. 31-37): one array op over the cohort axis - #
+        w = ltfl.wireless
         payloads = np.asarray(self.scheme.payload_bits(ctl), np.float64)
         rho = np.asarray(ctl.rho, np.float64)
         power = np.asarray(ctl.power, np.float64)

@@ -1,0 +1,588 @@
+"""The device-resident experiment engine: ``lax.scan`` over rounds,
+``vmap`` over seeds.
+
+The classic ``FedRunner`` pays one host<->device round trip per round:
+channel sampling, cohort selection, PER lookup, delay/energy accounting
+and Gamma all run in numpy between single-round jit dispatches. For the
+paper's experiment regime — many-round, many-seed accuracy-vs-round
+sweeps over small edge models — that dispatch overhead IS the cost.
+``ScanRunner`` folds whole *segments* of rounds into ONE compiled
+``lax.scan`` whose body is the unified train step (repro.core.ltfl_step)
+plus the jnp-native accounting twins (``packet_error_rate_dev``,
+``device_round_delay_dev`` / ``_energy_dev``, ``gamma_dev``), and
+``run_sweep`` batches S seeded replicas of the whole experiment through
+``vmap`` so a scheme-comparison curve costs one compile.
+
+Segmentation
+------------
+Host-side work that cannot be traced — Algorithm 1's Bayesian-optimized
+power control and ``evaluate()`` — runs BETWEEN scans: the round range is
+split at recontrol/eval boundaries, so ``LTFLScheme(recontrol_every=k)``
+scans segments of length k and the classic per-round ``FedRunner`` is
+exactly the ``max_segment=1`` degenerate case. One trace is paid per
+DISTINCT segment length (the scan body compiles once regardless of trip
+count); equal-length segments reuse the compiled executable.
+
+Two rng modes
+-------------
+* ``rng="host"`` (default): every random decision (cohort draw, fading
+  refresh, batch indices, round key, transmission outcomes) is
+  precomputed on the host by replaying ``FedRunner._host_round_inputs``
+  on the IDENTICAL np_rng stream and fed to the scan as stacked per-round
+  inputs. Histories are seeded-parity with ``FedRunner.run`` by
+  construction (accounting is f32 on device vs float64 on host, so
+  delay/energy/Gamma agree to tolerance; the tensor trajectory is
+  bit-comparable for stateless schemes).
+* ``rng="device"``: the scan body carries a ``jax.random`` key stream and
+  draws everything on device — uniform cohort sampling via
+  ``jax.random.choice``, block-fading redraw via ``draw_fading_dev``,
+  batch draws via ``randint``, packet outcomes via
+  ``sample_transmissions_dev``. Zero per-round host work; an independent
+  (jax, not numpy) rng stream over the same distributions, with one
+  deliberate simplification: per-client minibatches are drawn WITH
+  replacement (bootstrap), where the host batcher draws without
+  replacement whenever a shard covers the batch — a slightly different
+  within-round gradient-noise profile. Under block fading a recontrol
+  decision sees the LAST segment's channel realization (one round of CSI
+  lag — what a real controller has anyway). Channel-aware / energy-aware
+  samplers and per-cohort recontrol remain host-only (ROADMAP open
+  items); ``rng="host"`` supports them via replay.
+
+NOTE the inherited default ``eval_every=1`` evaluates after EVERY round,
+which (by the segmentation rule) degenerates every segment to length 1 —
+correct, but no faster than ``FedRunner``. Pass ``eval_every=0`` (or a
+cadence of k rounds) to actually amortize; ``run`` warns once otherwise.
+"""
+from __future__ import annotations
+
+import copy
+import warnings
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channel import (
+    ChannelArrays,
+    draw_fading_dev,
+    packet_error_rate_dev,
+    sample_transmissions_dev,
+)
+from repro.core.convergence import gamma_dev
+from repro.core.delay_energy import round_accounting_dev
+from repro.fed.population import UniformSampler
+from repro.fed.rounds import FedRunner, RoundRecord
+
+PyTree = Any
+
+
+class RoundLog(NamedTuple):
+    """Stacked per-round outputs of one scanned segment — the traced
+    mirror of ``RoundRecord``'s measured fields (leading axis = round).
+    Host-derivable fields (cum sums in f64, segment-constant control
+    means, eval accuracy) are filled in by the runner afterwards."""
+
+    train_loss: jax.Array   # (R,)
+    delay: jax.Array        # (R,)  Eq. 34 incl. server delay
+    energy: jax.Array       # (R,)  Eq. 37 summed
+    received: jax.Array     # (R,)  sum alpha
+    gamma: jax.Array        # (R,)  Eq. 29 at the measured ranges
+    cohort: jax.Array       # (R, U) scheduled population indices
+
+
+def make_scanned_step(step_fn: Callable) -> Callable:
+    """Wrap a unified FL step into one compiled multi-round segment.
+
+    ``scanned(params, opt_state, comp_state, batches, controls, keys)``
+    runs ``batches.shape[0]`` rounds in a single ``lax.scan``: ``batches``
+    leaves carry a leading round axis (R, C, B, ...), ``keys`` is (R, 2),
+    and ``controls`` is held constant across the segment. Returns the
+    final (params, opt_state, comp_state) plus the per-round stacked
+    metrics pytree. This is the minimal scanned API used by the
+    datacenter example / dry-run; ``ScanRunner`` is the full edge engine.
+    """
+
+    def scanned(params, opt_state, comp_state, batches, controls, keys):
+        def body(carry, x):
+            p, o, c = carry
+            batch, key = x
+            p, o, c, m = step_fn(p, o, c, batch, controls, key)
+            return (p, o, c), m
+
+        (params, opt_state, comp_state), metrics = jax.lax.scan(
+            body, (params, opt_state, comp_state), (batches, keys))
+        return params, opt_state, comp_state, metrics
+
+    return scanned
+
+
+class ScanRunner(FedRunner):
+    """``FedRunner`` with the per-round loop replaced by scanned segments.
+
+    Drop-in: construction args, ``history`` / ``history_dict`` and the
+    per-round ``RoundRecord`` semantics match ``FedRunner``; only ``run``
+    executes differently. Additional args:
+
+    * ``rng``: ``"host"`` (seeded-parity replay; default) or
+      ``"device"`` (fully device-resident rng — see module docstring);
+    * ``max_segment``: optional cap on scanned segment length
+      (``max_segment=1`` degenerates to the classic per-round engine,
+      used by the parity tests).
+
+    Schemes must declare ``scan_supported`` (FedMP's per-round host
+    bandit does not) and segment-constant controls via
+    ``scan_recontrol_every``.
+    """
+
+    def __init__(self, model, params, ltfl, train, test, scheme, *,
+                 rng: str = "host", max_segment: Optional[int] = None,
+                 **kwargs):
+        if rng not in ("host", "device"):
+            raise ValueError(f"rng={rng!r} (want 'host' or 'device')")
+        if not scheme.scan_supported:
+            raise ValueError(
+                f"{type(scheme).__name__} needs per-round host feedback "
+                "and cannot run scanned; use FedRunner")
+        if max_segment is not None and max_segment < 1:
+            raise ValueError(f"max_segment={max_segment} must be >= 1")
+        # capture construction inputs for run_sweep's seeded replicas
+        self._ctor = dict(model=model, params=params, ltfl=ltfl,
+                          train=train, test=test, kwargs=dict(kwargs))
+        self._scheme_proto = copy.deepcopy(scheme)   # pre-setup state
+        super().__init__(model, params, ltfl, train, test, scheme, **kwargs)
+        self.rng = rng
+        self.max_segment = max_segment
+        if rng == "device":
+            if not isinstance(self.sampler, UniformSampler):
+                raise ValueError(
+                    f"rng='device' draws cohorts in-scan (uniform); "
+                    f"{type(self.sampler).__name__} is host-only — use "
+                    "rng='host'")
+            if self.cohort_size < self.population_size and \
+                    scheme.scan_recontrol_every(self):
+                raise ValueError(
+                    "rng='device' cannot host-recontrol against a cohort "
+                    "drawn in-scan; use rng='host' (per-round segments) "
+                    "for per-cohort control")
+        self._scan_key = jax.random.PRNGKey(int(kwargs.get("seed", 0)))
+        self._data_dev: Optional[Dict[str, jax.Array]] = None
+        self._parts_padded: Optional[jax.Array] = None
+        self._part_sizes: Optional[jax.Array] = None
+        self._n_traces = 0   # one per (segment length, single|sweep) trace
+        self._seg_jit = jax.jit(self._segment, static_argnums=(3,))
+        self._sweep_jit = jax.jit(
+            jax.vmap(self._segment, in_axes=(0, 0, 0, None)),
+            static_argnums=(3,))
+
+    # ------------------------------------------------------------------ #
+    # device-resident world
+    # ------------------------------------------------------------------ #
+    def _ensure_device_world(self, pad_to: Optional[int] = None) -> None:
+        """Materialize the device-resident training pool (both modes) and,
+        for device rng, the padded per-device partition table. ``pad_to``
+        widens the table to a common width (run_sweep stacks lanes)."""
+        if self._data_dev is None:
+            self._data_dev = {k: jnp.asarray(v)
+                              for k, v in self.batcher.base.arrays.items()}
+        if self.rng != "device":
+            return
+        sizes = np.asarray([p.size for p in self.batcher.parts], np.int32)
+        width = int(sizes.max()) if pad_to is None else int(pad_to)
+        if self._parts_padded is not None and \
+                self._parts_padded.shape[1] >= width:
+            return
+        padded = np.empty((len(sizes), width), np.int32)
+        for i, p in enumerate(self.batcher.parts):
+            padded[i, :p.size] = p
+            padded[i, p.size:] = p[0]    # never drawn: randint < size
+        self._parts_padded = jnp.asarray(padded)
+        self._part_sizes = jnp.asarray(sizes)
+
+    # ------------------------------------------------------------------ #
+    # segmentation
+    # ------------------------------------------------------------------ #
+    def _segment_spans(self, start: int, end: int):
+        """Split [start, end) at host boundaries: a new segment starts at
+        every recontrol round, ends after every eval round, and never
+        exceeds ``max_segment`` rounds."""
+        rc = self.scheme.scan_recontrol_every(self)
+        spans = []
+        a = start
+        while a < end:
+            b = a + 1
+            while b < end:
+                if rc and b % rc == 0:
+                    break                 # host recontrol due at b
+                if self.eval_every and (b - 1) % self.eval_every == 0:
+                    break                 # eval due after round b-1
+                if self.max_segment and b - a >= self.max_segment:
+                    break
+                b += 1
+            spans.append((a, b))
+            a = b
+        return spans
+
+    # ------------------------------------------------------------------ #
+    # per-segment host preparation
+    # ------------------------------------------------------------------ #
+    def _segment_consts(self, ctl, agg_denom) -> Dict[str, jax.Array]:
+        consts = {
+            "rho": jnp.asarray(ctl.rho, jnp.float32),
+            "delta": jnp.asarray(ctl.delta, jnp.float32),
+            "power": jnp.asarray(ctl.power, jnp.float32),
+            "payload": jnp.asarray(
+                np.asarray(self.scheme.payload_bits(ctl), np.float64),
+                jnp.float32),
+            "gap_delta": jnp.asarray(
+                np.where(ctl.delta > 0, ctl.delta, 32.0), jnp.float32),
+        }
+        if agg_denom is not None:
+            consts["agg_denom"] = jnp.float32(agg_denom)
+        return consts
+
+    def _prepare_host_segment(self, a: int, b: int):
+        """Replay the host half of rounds [a, b) on the np_rng stream
+        (identical consumption order to ``FedRunner.run_round``) and stack
+        the per-round inputs for the scan."""
+        rows = []
+        ctl0 = None
+        agg_denom = None
+        for r in range(a, b):
+            h = self._host_round_inputs(r)
+            agg_denom = h.agg_denom
+            if ctl0 is None:
+                ctl0 = h.ctl
+            elif not (np.array_equal(ctl0.rho, h.ctl.rho)
+                      and np.array_equal(ctl0.delta, h.ctl.delta)
+                      and np.array_equal(ctl0.power, h.ctl.power)):
+                raise ValueError(
+                    f"{type(self.scheme).__name__} changed controls inside "
+                    f"a scan segment (round {r}); its scan_recontrol_every "
+                    "declaration is wrong")
+            view = self.channel          # cohort view set by the replay
+            row = {
+                "cohort": h.cohort.astype(np.int32),
+                "distance": view.distance,
+                "fading": view.fading_mean,
+                "interference": view.interference,
+                "cpu": view.cpu_hz,
+                "ns": view.num_samples,
+                "weights": h.weights,
+                "batch_idx": h.batch_idx.astype(np.int32),
+                "key": np.asarray(h.key),
+                "alpha": h.alpha,
+            }
+            if self.participation == "unbiased":
+                row["inclusion"] = self._cohort_probs
+            rows.append(row)
+        int_keys = {"cohort", "batch_idx", "key"}
+        xs = {}
+        for k in rows[0]:
+            stacked = np.stack([row[k] for row in rows])
+            xs[k] = jnp.asarray(stacked if k in int_keys
+                                else stacked.astype(np.float32))
+        return xs, self._segment_consts(ctl0, agg_denom), ctl0
+
+    def _prepare_device_segment(self, a: int, b: int):
+        """Segment-start controls + the (N,)-shaped device constants; all
+        per-round randomness comes from the carried key stream in-scan.
+
+        Unbiased aggregation is resolved here, not via FedRunner's
+        ``_aggregation_weights`` — that host path needs per-round sampler
+        probabilities, which device mode never materializes; the uniform
+        in-scan sampler's pi = U/N is exact, so the body builds the HT
+        weights itself and only the fixed denominator is a constant."""
+        ctl = self.scheme.controls(a)
+        agg_denom = (self._pop_samples_total
+                     if self.participation == "unbiased" else None)
+        ch = self.population.channel
+        consts = self._segment_consts(ctl, agg_denom)
+        consts.update(
+            distance=jnp.asarray(ch.distance, jnp.float32),
+            cpu=jnp.asarray(ch.cpu_hz, jnp.float32),
+            ns=jnp.asarray(ch.num_samples, jnp.float32),
+            part_sizes=self._part_sizes,
+            parts_padded=self._parts_padded,
+        )
+        return consts, ctl
+
+    def _host_carry(self):
+        return (self.params, self.opt_state, self.comp_state,
+                jnp.asarray(self._range_sq_pop, jnp.float32))
+
+    def _device_carry(self):
+        ch = self.population.channel
+        return (self.params, self.opt_state, self.comp_state,
+                jnp.asarray(self._range_sq_pop, jnp.float32),
+                jnp.asarray(ch.fading_mean, jnp.float32),
+                jnp.asarray(ch.interference, jnp.float32),
+                self._scan_key)
+
+    # ------------------------------------------------------------------ #
+    # the compiled segment
+    # ------------------------------------------------------------------ #
+    def _segment(self, carry, xs, consts, length: int):
+        """One scanned segment. Traced once per distinct ``length`` (and
+        once more inside the run_sweep vmap); ``self._n_traces`` counts
+        traces for the compile-cadence tests."""
+        self._n_traces += 1
+        ltfl = self.ltfl
+        w = ltfl.wireless
+        step_fn = self._step_fn
+        data = self._data_dev
+        unbiased = self.participation == "unbiased"
+        U, N, B = self.num_devices, self.population_size, self.batch_size
+        block_fading = self.block_fading
+
+        def finish(params, opt_state, comp_state, range_sq, batch, ch,
+                   cohort, weights, alpha, inclusion, key):
+            controls = {"rho": consts["rho"], "delta": consts["delta"],
+                        "weights": weights, "alpha": alpha}
+            if "agg_denom" in consts:
+                controls["agg_denom"] = consts["agg_denom"]
+            params, opt_state, comp_state, m = step_fn(
+                params, opt_state, comp_state, batch, controls, key)
+            range_sq = range_sq.at[cohort].set(m["range_sq"])
+            delay, energy = round_accounting_dev(
+                ltfl, ch, consts["payload"], consts["rho"], consts["power"])
+            pers = packet_error_rate_dev(w, ch, consts["power"])
+            # unbiased: the fixed HT denominator IS the population sample
+            # total — read it from consts (per-lane under run_sweep, where
+            # every replica's population draws a different total), never
+            # from a closure over this runner's own population
+            gkw = ({"inclusion": inclusion,
+                    "population_samples": consts["agg_denom"]}
+                   if unbiased else {})
+            gm = gamma_dev(ltfl, m["range_sq"], consts["gap_delta"],
+                           consts["rho"], pers, ch.num_samples, **gkw)
+            log = RoundLog(train_loss=m["loss"], delay=delay, energy=energy,
+                           received=jnp.sum(alpha), gamma=gm, cohort=cohort)
+            return params, opt_state, comp_state, range_sq, log
+
+        if xs is not None:               # host rng: stacked replay inputs
+            def body(carry, x):
+                params, opt_state, comp_state, range_sq = carry
+                ch = ChannelArrays(x["distance"], x["fading"],
+                                   x["interference"], x["cpu"], x["ns"])
+                batch = {k: arr[x["batch_idx"]] for k, arr in data.items()}
+                params, opt_state, comp_state, range_sq, log = finish(
+                    params, opt_state, comp_state, range_sq, batch, ch,
+                    x["cohort"], x["weights"], x["alpha"],
+                    x.get("inclusion"), x["key"])
+                return (params, opt_state, comp_state, range_sq), log
+
+            return jax.lax.scan(body, carry, xs)
+
+        # device rng: carried key stream, everything drawn in-scan
+        def body_dev(carry, _):
+            (params, opt_state, comp_state, range_sq,
+             fading, interference, key) = carry
+            key, k_fade, k_cohort, k_batch, k_alpha, k_step = \
+                jax.random.split(key, 6)
+            if block_fading:
+                # eager full-population redraw: O(N) vectorized on device
+                # (the host loop's LAZY per-cohort refresh is a host-side
+                # optimization; the realized distributions match)
+                fading, interference = draw_fading_dev(w, k_fade, N)
+            if U == N:
+                cohort = jnp.arange(N, dtype=jnp.int32)
+            else:
+                cohort = jnp.sort(jax.random.choice(
+                    k_cohort, N, (U,), replace=False)).astype(jnp.int32)
+            ch = ChannelArrays(
+                distance=jnp.take(consts["distance"], cohort),
+                fading_mean=jnp.take(fading, cohort),
+                interference=jnp.take(interference, cohort),
+                cpu_hz=jnp.take(consts["cpu"], cohort),
+                num_samples=jnp.take(consts["ns"], cohort))
+            sizes = jnp.take(consts["part_sizes"], cohort)
+            draws = jax.random.randint(k_batch, (U, B), 0, sizes[:, None])
+            gidx = jnp.take_along_axis(
+                jnp.take(consts["parts_padded"], cohort, axis=0),
+                draws, axis=1)
+            batch = {k: arr[gidx] for k, arr in data.items()}
+            alpha = sample_transmissions_dev(w, ch, consts["power"], k_alpha)
+            if unbiased:
+                pi = jnp.float32(U / N)   # UniformSampler's exact pi
+                weights, inclusion = ch.num_samples / pi, jnp.full((U,), pi)
+            else:
+                weights, inclusion = ch.num_samples, None
+            params, opt_state, comp_state, range_sq, log = finish(
+                params, opt_state, comp_state, range_sq, batch, ch,
+                cohort, weights, alpha, inclusion, k_step)
+            return (params, opt_state, comp_state, range_sq,
+                    fading, interference, key), log
+
+        return jax.lax.scan(body_dev, carry, None, length=length)
+
+    # ------------------------------------------------------------------ #
+    # post-segment host absorption
+    # ------------------------------------------------------------------ #
+    def _absorb_segment(self, a: int, b: int, ctl, carry, log) -> None:
+        """Pull the segment's carry/log back to host state and append the
+        per-round ``RoundRecord``s (cum sums in f64, eval at the segment's
+        final round when due — segmentation guarantees eval rounds are
+        segment-final)."""
+        self.params, self.opt_state, self.comp_state = carry[:3]
+        range_sq = np.asarray(carry[3], np.float64)
+        cohorts = np.asarray(log.cohort, np.int64)
+        touched = np.unique(cohorts)
+        self._range_sq_pop[touched] = range_sq[touched]
+
+        if self.rng == "device":
+            fading, interference, key = carry[4], carry[5], carry[6]
+            self._scan_key = key
+            ch = self.population.channel
+            ch.fading_mean[:] = np.asarray(fading, np.float64)
+            ch.interference[:] = np.asarray(interference, np.float64)
+            if self.block_fading:
+                # the scan advanced (b - a) fading epochs on device; keep
+                # the host epoch bookkeeping (PER caches, stale-decision
+                # checks) consistent
+                self._channel_epoch += b - a
+                self.population.epoch += b - a
+                self.population.fading_epoch[:] = self.population.epoch
+            self.cohort = cohorts[-1]
+            self.channel = self.population.view(self.cohort)
+
+        losses = np.asarray(log.train_loss, np.float64)
+        delays = np.asarray(log.delay, np.float64)
+        energies = np.asarray(log.energy, np.float64)
+        received = np.asarray(log.received, np.float64)
+        gammas = np.asarray(log.gamma, np.float64)
+        partial = self.cohort_size < self.population_size
+        for i, r in enumerate(range(a, b)):
+            self._cum_delay += float(delays[i])
+            self._cum_energy += float(energies[i])
+            eval_due = bool(self.eval_every and r % self.eval_every == 0)
+            assert not eval_due or i == (b - a - 1), \
+                "segmentation must end segments at eval rounds"
+            rec = RoundRecord(
+                round=r,
+                train_loss=float(losses[i]),
+                test_acc=self.evaluate() if eval_due else float("nan"),
+                delay=float(delays[i]),
+                energy=float(energies[i]),
+                cum_delay=self._cum_delay,
+                cum_energy=self._cum_energy,
+                received=int(received[i]),
+                gamma=float(gammas[i]),
+                rho_mean=float(np.mean(ctl.rho)),
+                delta_mean=float(np.mean(ctl.delta)),
+                power_mean=float(np.mean(ctl.power)),
+                cohort=cohorts[i].tolist() if partial else [],
+                participation=self.cohort_size / self.population_size,
+            )
+            self.history.append(rec)
+            self.scheme.post_round(r, {"train_loss": rec.train_loss,
+                                       "delay": rec.delay,
+                                       "test_acc": rec.test_acc})
+
+    # ------------------------------------------------------------------ #
+    # the public loop
+    # ------------------------------------------------------------------ #
+    def _run_segment(self, a: int, b: int) -> None:
+        if self.rng == "host":
+            xs, consts, ctl = self._prepare_host_segment(a, b)
+            carry, log = self._seg_jit(self._host_carry(), xs, consts, b - a)
+        else:
+            consts, ctl = self._prepare_device_segment(a, b)
+            carry, log = self._seg_jit(self._device_carry(), None, consts,
+                                       b - a)
+        self._absorb_segment(a, b, ctl, carry, log)
+
+    def run(self, num_rounds: int, log_every: int = 0) -> List[RoundRecord]:
+        if self.eval_every == 1 and self.max_segment != 1 \
+                and num_rounds > 1:
+            warnings.warn(
+                "ScanRunner with eval_every=1 (the FedRunner default) "
+                "evaluates after every round, so every scanned segment "
+                "has length 1 and nothing is amortized; pass eval_every=0 "
+                "or an eval cadence of k rounds", stacklevel=2)
+        self._ensure_device_world()
+        # round numbering restarts at 0 on every run() call, exactly like
+        # FedRunner.run (history keeps appending; eval cadence and LTFL's
+        # recontrol_every schedule restart with the numbering)
+        for a, b in self._segment_spans(0, num_rounds):
+            self._run_segment(a, b)
+            if log_every:
+                for rec in self.history[-(b - a):]:
+                    if rec.round % log_every == 0:
+                        print(f"[{self.scheme.name}] round={rec.round:4d} "
+                              f"loss={rec.train_loss:.4f} "
+                              f"acc={rec.test_acc:.3f} "
+                              f"delay={rec.delay:9.1f}s "
+                              f"energy={rec.energy:8.2f}J "
+                              f"recv={rec.received}/{self.num_devices}")
+        return self.history
+
+    # ------------------------------------------------------------------ #
+    # vmap over seeds
+    # ------------------------------------------------------------------ #
+    def run_sweep(self, seeds: Sequence[int], num_rounds: int,
+                  scheme_factory: Optional[Callable[[], Any]] = None
+                  ) -> List[List[RoundRecord]]:
+        """Run S seeded replicas of the experiment with ALL device work
+        batched: each segment executes as one jitted
+        ``vmap``-over-replicas scan, so an S-seed scheme-comparison curve
+        costs one compile per segment length. Host work between segments
+        (Algorithm 1, eval) runs per replica.
+
+        ``seeds`` seed each replica's np_rng / device population /
+        partitions / key stream (this runner's own state is untouched).
+        ``scheme_factory`` builds each replica's scheme; the default
+        deep-copies this runner's scheme as constructed (pre-setup).
+        Returns one ``RoundRecord`` history per seed.
+        """
+        if scheme_factory is None:
+            proto = self._scheme_proto
+
+            def scheme_factory():
+                return copy.deepcopy(proto)
+
+        c = self._ctor
+        lanes: List[ScanRunner] = []
+        for s in seeds:
+            kw = dict(c["kwargs"])
+            kw["seed"] = int(s)
+            lane = ScanRunner(c["model"], c["params"], c["ltfl"], c["train"],
+                              c["test"], scheme_factory(), rng=self.rng,
+                              max_segment=self.max_segment, **kw)
+            lane._eval_fn = self._eval_fn      # share the jitted eval
+            lanes.append(lane)
+        self._ensure_device_world()
+        pad = None
+        if self.rng == "device":
+            pad = max(max(p.size for p in lane.batcher.parts)
+                      for lane in lanes)
+        for lane in lanes:
+            lane._data_dev = self._data_dev    # one shared backing pool
+            lane._ensure_device_world(pad_to=pad)
+
+        def stack(trees):
+            return jax.tree_util.tree_map(lambda *x: jnp.stack(x), *trees)
+
+        def unstack(tree, i):
+            return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+        for a, b in self._segment_spans(0, num_rounds):
+            if self.rng == "host":
+                preps = [lane._prepare_host_segment(a, b) for lane in lanes]
+                xss = stack([p[0] for p in preps])
+                constss = stack([p[1] for p in preps])
+                carries = stack([lane._host_carry() for lane in lanes])
+                carries, logs = self._sweep_jit(carries, xss, constss, b - a)
+                ctls = [p[2] for p in preps]
+            else:
+                preps = [lane._prepare_device_segment(a, b)
+                         for lane in lanes]
+                constss = stack([p[0] for p in preps])
+                carries = stack([lane._device_carry() for lane in lanes])
+                carries, logs = self._sweep_jit(carries, None, constss,
+                                                b - a)
+                ctls = [p[1] for p in preps]
+            for i, lane in enumerate(lanes):
+                lane._absorb_segment(a, b, ctls[i], unstack(carries, i),
+                                     unstack(logs, i))
+        return [lane.history for lane in lanes]

@@ -51,9 +51,23 @@ class Controls:
 class BaseScheme:
     name = "base"
     uses_prune = False    # engine builds the prune stage only when True
+    # the scanned engine (repro.fed.scan_engine) folds whole segments of
+    # rounds into one compiled lax.scan; that requires the scheme's
+    # controls to be constant within a segment and its feedback hooks to
+    # tolerate running once per segment instead of once per round.
+    # Schemes that need per-round HOST feedback (FedMP's bandit) set this
+    # False and stay on the per-round FedRunner loop.
+    scan_supported = True
 
     def setup(self, runner) -> None:
         self.runner = runner
+
+    def scan_recontrol_every(self, runner) -> int:
+        """Host-recontrol cadence for the scanned engine: every k rounds
+        the host must recompute ``controls`` (a scan-segment boundary).
+        0 => controls are constant for the whole run (stateless schemes
+        scan arbitrarily long segments)."""
+        return 0
 
     def compressor(self, *, use_kernels: bool = False) -> Compressor:
         """The scheme's jit-able compression stage (default: identity)."""
@@ -99,6 +113,15 @@ class LTFLScheme(BaseScheme):
         if not self.use_quant:
             return identity_compressor()
         return ltfl_quantizer(use_kernels=use_kernels)
+
+    def scan_recontrol_every(self, runner) -> int:
+        # a decision is per-cohort: under partial participation the cohort
+        # recomposes every round, so Algorithm 1 must re-solve per round
+        # (segments degenerate to length 1, matching FedRunner's
+        # cohort_epoch-triggered re-solve)
+        if runner.cohort_size < runner.population_size:
+            return 1
+        return self.recontrol_every or 0
 
     def _solve(self):
         r = self.runner
@@ -201,6 +224,7 @@ class FedMPScheme(BaseScheme):
 
     name = "fedmp"
     uses_prune = True
+    scan_supported = False   # the UCB bandit needs per-round host feedback
 
     def __init__(self, arms=(0.0, 0.125, 0.25, 0.375, 0.5), ucb_c=1.0):
         self.arms = np.asarray(arms)

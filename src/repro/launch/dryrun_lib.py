@@ -188,6 +188,26 @@ def build_train(arch: ArchConfig, shape: ShapeConfig, mesh,
     ctrl_sh = {k: rep for k in ctrl_abs}
     key_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
 
+    # variant {"scan": R}: AOT-lower R federated rounds as ONE scanned
+    # segment (repro.fed.make_scanned_step) — the scanned engine's
+    # datacenter shape. Batches/keys gain a leading (replicated) round
+    # axis; controls stay segment-constant; the roofline analysis is
+    # already scan-aware (hlo_analysis multiplies loop bodies by trip
+    # count).
+    scan_rounds = int(variant.get("scan") or 0)
+    if scan_rounds:
+        from repro.fed.scan_engine import make_scanned_step
+        step = make_scanned_step(step)
+        batch_abs = {k: jax.ShapeDtypeStruct((scan_rounds,) + v.shape,
+                                             v.dtype)
+                     for k, v in batch_abs.items()}
+        batch_sh = {
+            k: jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(None, *s.spec))
+            for k, s in batch_sh.items()
+        }
+        key_abs = jax.ShapeDtypeStruct((scan_rounds, 2), jnp.uint32)
+
     # comp_state is the carried compressor pytree — () for the stateless
     # LTFL quantizer; stateful compressors (STC) would pin it like params.
     jf = jax.jit(step,

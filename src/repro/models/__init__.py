@@ -6,9 +6,12 @@ from repro.models.registry import (
     prefill_batch_struct,
     train_batch_struct,
 )
+from repro.models.mlp import MLP, MLPConfig
 from repro.models.resnet import ResNet
 
 __all__ = [
+    "MLP",
+    "MLPConfig",
     "build_model",
     "decode_inputs_struct",
     "make_decode_inputs",

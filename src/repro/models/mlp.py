@@ -1,0 +1,81 @@
+"""A deliberately small MLP classifier for the wireless-FL simulator.
+
+The paper's edge experiments (and the related wireless-FL literature,
+e.g. the logistic-regression / small-CNN baselines in the client-
+scheduling papers) run many thousands of rounds on models whose per-round
+tensor work is MICROSECONDS — in that regime the simulator's cost is pure
+per-round dispatch and host accounting, exactly what the scanned round
+engine (repro.fed.scan_engine) eliminates. ``MLP`` is that regime's
+model: same ``init`` / ``loss`` / ``accuracy`` contract as
+``repro.models.resnet.ResNet`` over the same ``{"images", "labels"}``
+batches, so every FedRunner/ScanRunner test and benchmark can swap it in
+when the round ENGINE (not the conv stack) is the thing under
+measurement.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class MLPConfig:
+    input_shape: Tuple[int, ...] = (32, 32, 3)   # flattened on entry
+    hidden: Tuple[int, ...] = (32,)
+    num_classes: int = 10
+    # spatial stride applied to (H, W, C) inputs before flattening
+    # (downsample=4 turns 32x32x3 into 8x8x3 = 192 features) — the
+    # logistic-regression-scale regime of the edge-FL literature, where
+    # thousands of rounds are cheap and the ROUND ENGINE is what's timed
+    downsample: int = 1
+
+
+class MLP:
+    """Flatten -> (dense -> relu)* -> dense logits, cross-entropy loss."""
+
+    def __init__(self, cfg: MLPConfig = MLPConfig()):
+        self.cfg = cfg
+
+    def _num_features(self) -> int:
+        shape = self.cfg.input_shape
+        d = self.cfg.downsample
+        if d > 1 and len(shape) == 3:
+            shape = (-(-shape[0] // d), -(-shape[1] // d), shape[2])
+        return int(jnp.prod(jnp.asarray(shape)))
+
+    def init(self, key: jax.Array) -> Dict[str, Any]:
+        dims = (self._num_features(),
+                *self.cfg.hidden, self.cfg.num_classes)
+        params = {}
+        for i, (d_in, d_out) in enumerate(zip(dims[:-1], dims[1:])):
+            key, sub = jax.random.split(key)
+            params[f"w{i}"] = (jax.random.normal(sub, (d_in, d_out))
+                               * (1.0 / jnp.sqrt(d_in))).astype(jnp.float32)
+            params[f"b{i}"] = jnp.zeros((d_out,), jnp.float32)
+        return params
+
+    def logits(self, params, batch) -> jax.Array:
+        x = batch["images"].astype(jnp.float32)
+        d = self.cfg.downsample
+        if d > 1 and x.ndim == 4:
+            x = x[:, ::d, ::d, :]
+        x = x.reshape(x.shape[0], -1)
+        n_layers = len(self.cfg.hidden) + 1
+        for i in range(n_layers):
+            x = x @ params[f"w{i}"] + params[f"b{i}"]
+            if i < n_layers - 1:
+                x = jax.nn.relu(x)
+        return x
+
+    def loss(self, params, batch) -> jax.Array:
+        lg = self.logits(params, batch)
+        onehot = jax.nn.one_hot(batch["labels"], self.cfg.num_classes)
+        return -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(lg), axis=-1))
+
+    def accuracy(self, params, batch) -> jax.Array:
+        lg = self.logits(params, batch)
+        return jnp.mean((jnp.argmax(lg, -1) == batch["labels"])
+                        .astype(jnp.float32))

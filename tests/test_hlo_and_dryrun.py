@@ -103,6 +103,19 @@ def test_dryrun_tiny_mesh(arch, shape):
     assert "dry-run complete" in out.stdout
 
 
+def test_dryrun_scanned_train_variant():
+    """variant {"scan": R} AOT-lowers R federated rounds as one scanned
+    segment (the scan engine's datacenter shape) and roughly R-scales the
+    roofline FLOPs vs the single-round step."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "granite-8b", "--shape", "train_4k", "--test-mesh",
+         "--variant", '{"scan": 2}', "--out", "/tmp/dryrun_ci_scan"],
+        env=ENV, capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "dry-run complete" in out.stdout
+
+
 def test_dryrun_skip_documented():
     out = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch",

@@ -12,6 +12,7 @@ import pytest
 from repro.core.quantization import (
     dequantize,
     payload_bits,
+    payload_bits_host,
     quant_error_bound,
     quantize,
     quantize_dequantize,
@@ -89,6 +90,23 @@ def test_levels_integer_range():
 
 def test_payload_bits_eq18():
     assert float(payload_bits(1000, 8, 64)) == 8064.0
+
+
+def test_payload_bits_host_device_f32_parity():
+    """The host (numpy) and device (jnp) payload paths evaluate ONE shared
+    f32 formula — bitwise-identical results for scalar and (U,) deltas,
+    eagerly and under jit, so the scan engine's traced payload can never
+    drift from the host accounting."""
+    for num_params in (1000, 98_762, 123_456_789):
+        for bits in (0.0, 1.0, 8.0, np.arange(9.0), np.array([3.5, 32.0])):
+            host = payload_bits_host(num_params, bits, 64)
+            dev = np.asarray(payload_bits(num_params, bits, 64), np.float64)
+            jitted = np.asarray(
+                jax.jit(payload_bits, static_argnums=(2,))(
+                    num_params, jnp.asarray(bits, jnp.float32), 64),
+                np.float64)
+            np.testing.assert_array_equal(host, dev)
+            np.testing.assert_array_equal(host, jitted)
 
 
 def test_pytree_and_range_sq():
