@@ -3,23 +3,27 @@
 #   make test        — tier-1 verify: the full pytest suite with PYTHONPATH
 #                      handled (same command the PR driver runs).
 #   make bench-smoke — one tiny run of each gated benchmark (unified round
-#                      engine, population scaling, scanned engine); writes
-#                      artifacts/bench/*_smoke.json (never the committed
-#                      baselines).
+#                      engine, population scaling, scanned engine, device
+#                      control plane); writes artifacts/bench/*_smoke.json
+#                      (never the committed baselines).
 #   make bench-check — bench-smoke + the regression gates: fails when the
-#                      unified-engine or scanned-engine speedup regressed
-#                      >30%, or the population flat-in-N ratio drifted
-#                      >30%, vs the committed artifacts/bench baselines.
+#                      unified-engine, scanned-engine or device-control
+#                      speedup regressed >30%, or the population flat-in-N
+#                      ratio drifted >30%, vs the committed
+#                      artifacts/bench baselines.
 #   make bench-population — the full population-scale sweep (per-round
 #                      wall clock flat in N at fixed cohort U).
 #   make bench-scan  — the full scanned-vs-loop engine sweep
 #                      (U x R grid; writes artifacts/bench/scan_engine.json).
+#   make bench-device-control — the full in-scan-vs-host-recontrol sweep
+#                      (writes artifacts/bench/device_control.json).
 #   make lint        — ruff, check-only (no reformatting); rule set in
 #                      ruff.toml.
 
 PY ?= python
 
-.PHONY: test bench-smoke bench-check bench-population bench-scan lint
+.PHONY: test bench-smoke bench-check bench-population bench-scan \
+	bench-device-control lint
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -28,6 +32,7 @@ bench-smoke:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.round_engine --smoke
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.population_scale --smoke
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.scan_engine --smoke
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.device_control --smoke
 
 bench-check: bench-smoke
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.check_regression
@@ -37,6 +42,9 @@ bench-population:
 
 bench-scan:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.scan_engine
+
+bench-device-control:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.device_control
 
 lint:
 	ruff check .

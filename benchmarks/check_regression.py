@@ -1,6 +1,6 @@
 """CI bench-regression gates for the round engines.
 
-Three gates, each comparing a fresh ``make bench-smoke`` measurement
+Four gates, each comparing a fresh ``make bench-smoke`` measurement
 against its COMMITTED baseline artifact:
 
 * **round_engine** — unified-step speedup over the legacy per-device
@@ -13,11 +13,14 @@ against its COMMITTED baseline artifact:
   O(N) term).
 * **scan_engine** — scanned-segment speedup over the per-round FedRunner
   loop (rows matched by (clients, rounds)).
+* **device_control** — in-scan Algorithm-1 recontrol
+  (``ScanRunner(control="device")``) speedup over host recontrol between
+  length-1 segments at recontrol_every=1 (rows matched by client count).
 
 The gated metrics are unitless ratios, not wall clock: ratios are
 dispatch-/shape-bound and transfer across machines, where absolute times
 on shared CI runners do not. A missing or malformed input is exit 2 (the
-smoke targets write all three fresh artifacts).
+smoke targets write all four fresh artifacts).
 
 Run:  PYTHONPATH=src python -m benchmarks.check_regression
 Exit: 0 pass, 1 regression, 2 missing/invalid input.
@@ -137,6 +140,17 @@ def check_scan(cur: dict, base: dict, tol: float) -> bool:
         _speedup_rows(base, label), tol)
 
 
+def check_device_control(cur: dict, base: dict, tol: float) -> bool:
+    # rows matched by client count only: the smoke and full sweeps share
+    # the per-round-recontrol protocol (rounds differ, speedup is
+    # per-round), so U is the config axis that matters
+    def label(r):
+        return f"U={int(r['clients'])}"
+    return _check_speedup_floor(
+        "device_control", _speedup_rows(cur, label),
+        _speedup_rows(base, label), tol)
+
+
 GATES = {
     "round_engine": ("round_engine_smoke.json", "round_engine.json",
                      check_round_engine),
@@ -144,6 +158,8 @@ GATES = {
                          "population_scale.json", check_population),
     "scan_engine": ("scan_engine_smoke.json", "scan_engine.json",
                     check_scan),
+    "device_control": ("device_control_smoke.json", "device_control.json",
+                       check_device_control),
 }
 
 

@@ -1,0 +1,120 @@
+"""In-scan device control plane vs host-recontrol scanning.
+
+The per-round-recontrol configuration — ``LTFLScheme(recontrol_every=1)``
+with block fading, the paper's Algorithm 1 tracking each round's channel
+— is the worst case for the scanned engine under host control: every
+round is a segment boundary (scan one round, leave the device, run the
+numpy/f64 Algorithm-1 solve, re-enter), so nothing is amortized and the
+host Bayesian-optimization loop dominates the round. This benchmark
+times R such rounds through
+
+* ``ScanRunner(control="host", rng="host")`` — host recontrol between
+  length-1 segments (the PR-4 state of the art for this config), and
+* ``ScanRunner(control="device", rng="device")`` — ONE scanned segment
+  whose body runs the traced Algorithm 1 (repro.control.solve_dev:
+  closed-form Theorems 2/3 + fixed-shape f32 BO) every round, in-scan.
+
+Both sides run the identical LTFL controller configuration (bo_iters /
+alt_max_iters recorded in the artifact), the same MLP edge-regime model
+and the same accounting; the device side's rng stream is jax.random
+rather than numpy (statistically, not bitwise, identical — decision
+QUALITY parity is pinned separately by tests/test_device_control.py).
+
+Run:  PYTHONPATH=src python -m benchmarks.device_control [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from benchmarks.common import emit, save_artifact
+from repro.configs.base import LTFLConfig
+from repro.data import ArrayDataset, synthetic_cifar
+from repro.fed import LTFLScheme, ScanRunner
+from repro.models import MLP, MLPConfig
+
+
+def _world(hidden: int = 16, downsample: int = 4, seed: int = 0):
+    imgs, labels = synthetic_cifar(2048, seed=seed)
+    timgs, tlabels = synthetic_cifar(256, seed=seed + 1)
+    train = ArrayDataset({"images": imgs, "labels": labels})
+    test = ArrayDataset({"images": timgs, "labels": tlabels})
+    model = MLP(MLPConfig(hidden=(hidden,), downsample=downsample))
+    params = model.init(jax.random.PRNGKey(seed))
+    return model, params, train, test
+
+
+def _runner(world, clients, batch, bo_iters, alt_iters, **kw):
+    model, params, train, test = world
+    ltfl = LTFLConfig(num_devices=clients, samples_min=40, samples_max=60,
+                      learning_rate=0.1, bo_iters=bo_iters,
+                      alt_max_iters=alt_iters)
+    return ScanRunner(model, params, ltfl, train, test,
+                      LTFLScheme(recontrol_every=1), batch_size=batch,
+                      seed=0, eval_every=0, block_fading=True, **kw)
+
+
+def _time(world, clients, rounds, trials, batch, bo_iters, alt_iters,
+          **kw):
+    runner = _runner(world, clients, batch, bo_iters, alt_iters, **kw)
+    runner.run(rounds)                 # warmup: trace + compile once
+    times = []
+    for _ in range(trials):
+        t0 = time.time()
+        runner.run(rounds)             # same segment lengths: cached
+        times.append((time.time() - t0) / rounds)
+    return min(times)
+
+
+def run(client_counts=(8, 16, 32), rounds: int = 8, trials: int = 3,
+        batch: int = 4, bo_iters: int = 8, alt_iters: int = 3,
+        hidden: int = 16, downsample: int = 4,
+        artifact: str = "device_control") -> dict:
+    """Min-of-trials per-round wall clock, host vs device recontrol.
+
+    The controller budget (bo_iters, alt_iters) is deliberately reduced
+    from the paper's defaults so the host side finishes in CI time —
+    BOTH sides run the same budget, so the speedup is like-for-like."""
+    rows = []
+    for clients in client_counts:
+        world = _world(hidden=hidden, downsample=downsample)
+        t_host = _time(world, clients, rounds, trials, batch, bo_iters,
+                       alt_iters, control="host", rng="host")
+        t_dev = _time(world, clients, rounds, trials, batch, bo_iters,
+                      alt_iters, control="device", rng="device")
+        speedup = t_host / t_dev
+        emit(f"device_control/host_U{clients}_R{rounds}", t_host * 1e6,
+             f"host Algorithm 1 between length-1 segments, "
+             f"min of {trials}")
+        emit(f"device_control/device_U{clients}_R{rounds}", t_dev * 1e6,
+             f"in-scan solve_dev, one segment, speedup={speedup:.2f}x")
+        rows.append({"clients": clients, "rounds": rounds,
+                     "host_s_per_round": t_host,
+                     "device_s_per_round": t_dev,
+                     "speedup": speedup})
+    payload = {"trials": trials, "batch": batch, "rounds": rounds,
+               "bo_iters": bo_iters, "alt_iters": alt_iters,
+               "hidden": hidden, "downsample": downsample,
+               "model": "mlp", "rows": rows}
+    save_artifact(artifact, payload)
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single U=16 run for make bench-smoke")
+    ap.add_argument("--trials", type=int, default=3)
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+    if args.smoke:
+        # smoke writes its OWN artifact (never clobbers the committed
+        # baseline) and measures the acceptance row: U=16,
+        # recontrol_every=1
+        run(client_counts=(16,), rounds=args.rounds, trials=args.trials,
+            batch=args.batch, artifact="device_control_smoke")
+    else:
+        run(rounds=args.rounds, trials=args.trials, batch=args.batch)

@@ -15,7 +15,7 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: ablation,schemes,channel,devices,"
                          "noniid,controller,kernels,roofline,population,"
-                         "scan")
+                         "scan,devicecontrol")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     rounds = 24 if args.full else 10
@@ -24,6 +24,7 @@ def main() -> None:
         ablation,
         channel_sweep,
         controller_bench,
+        device_control,
         device_count,
         kernels_bench,
         non_iid,
@@ -43,6 +44,13 @@ def main() -> None:
             client_counts=(8, 16, 32) if args.full else (16,),
             round_counts=(16, 64),
             artifact=("scan_engine" if args.full else "scan_engine_reduced"))
+    if only is None or "devicecontrol" in only:
+        # only a --full run may rewrite the committed device_control.json
+        # baseline that check_regression gates on
+        device_control.run(
+            client_counts=(8, 16, 32) if args.full else (16,),
+            artifact=("device_control" if args.full
+                      else "device_control_reduced"))
     if only is None or "controller" in only:
         controller_bench.run(
             device_counts=(16, 32, 64) if args.full else (16,))

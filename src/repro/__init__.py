@@ -4,6 +4,9 @@ rebuilt as a production-grade multi-pod JAX framework.
 Subpackages:
   core       the paper's contribution (pruning, quantization, channel,
              convergence gap, two-stage controller)
+  control    the device-resident control plane: traced jnp twins of
+             Algorithm 1 (fixed-shape Bayesian optimization, Theorems
+             2/3, cohort schedulers) that run INSIDE the scanned engine
   models     the 10 assigned architectures + the paper's ResNet
   data       synthetic datasets + federated partitioning
   optim      SGD / momentum / AdamW

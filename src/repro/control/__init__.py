@@ -1,0 +1,51 @@
+"""repro.control — the device-resident LTFL control plane.
+
+The host control plane (repro.core.controller / bayesopt and the
+repro.fed.population samplers) is numpy float64 and runs BETWEEN
+compiled segments. This package holds its traced jnp twins, so the
+scanned round engine (repro.fed.scan_engine) can recontrol, schedule and
+evaluate at per-round cadence WITHOUT leaving the device:
+
+* ``device_bayesopt`` — fixed-shape f32 GP surrogate + proposal loop in
+  ``jax.lax`` (the traced ``bayesopt.minimize`` twin);
+* ``device_controller`` — Theorems 2/3 closed forms, the batched
+  Gamma/feasibility evaluation and the full Algorithm-1 alternation
+  (``solve_dev``) as one jit-able function;
+* ``device_samplers`` — traced cohort-scheduler twins (uniform,
+  channel-aware top-U via ``lax.top_k``, energy-aware Gumbel-top-k
+  weighted choice with Horvitz-Thompson inclusion probabilities);
+* ``program`` — the ``ControlProgram`` protocol a scheme returns from
+  ``scan_control_program`` to run its control loop inside the scan.
+"""
+from repro.control.device_bayesopt import BODraws, make_draws, minimize_dev
+from repro.control.device_controller import (
+    DeviceDecision,
+    evaluate_dev,
+    optimal_delta_dev,
+    optimal_rho_dev,
+    solve_dev,
+)
+from repro.control.device_samplers import (
+    DeviceSamplerTwin,
+    channel_aware_twin,
+    energy_aware_twin,
+    uniform_twin,
+)
+from repro.control.program import ControlProgram, DeviceControls
+
+__all__ = [
+    "BODraws",
+    "make_draws",
+    "minimize_dev",
+    "DeviceDecision",
+    "evaluate_dev",
+    "optimal_rho_dev",
+    "optimal_delta_dev",
+    "solve_dev",
+    "DeviceSamplerTwin",
+    "uniform_twin",
+    "channel_aware_twin",
+    "energy_aware_twin",
+    "ControlProgram",
+    "DeviceControls",
+]

@@ -1,0 +1,173 @@
+"""jnp-native, scan-embeddable Bayesian optimization (Algorithm 1's
+inner power-control loop, traced).
+
+This is the device twin of ``repro.core.bayesopt.minimize``: the same
+zero-mean GP surrogate (the paper's RBF kernel, Eq. 48-52) and the same
+probability-of-improvement acquisition (Eq. 53-56), but written entirely
+in ``jax``/``jax.lax`` so the whole optimizer runs INSIDE a compiled
+program — in particular inside the scanned round engine's ``lax.scan``
+body, where per-round Algorithm-1 recontrol must not leave the device.
+
+The fixed-shape BO contract
+---------------------------
+Everything the host optimizer sizes dynamically is static here, because
+traced programs cannot grow arrays:
+
+* the observation set is a PREALLOCATED ``(init_points + iters, D)``
+  buffer filled sequentially; the GP fit at iteration m masks the unfilled
+  suffix with an identity block (the masked kernel is block-diagonal, so
+  the Cholesky factor, posterior mean and variance over the filled prefix
+  are EXACTLY the host GP's — not an approximation);
+* ``init_points``, ``iters`` and ``n_candidates`` are static Python ints
+  (one trace per distinct configuration);
+* all arithmetic is f32 (the accelerator default), where the host GP is
+  f64 — the default ``jitter`` is therefore larger than the host's 1e-8,
+  and agreement with the host optimizer is to tolerance, not bitwise
+  (pinned by tests/test_device_control.py on seeded problems);
+* every random draw is materialized up front as a ``BODraws`` pytree —
+  either generated from a ``jax.random`` key (``make_draws``) or injected
+  by the caller. Injection is what the parity tests use: replaying the
+  host optimizer's exact numpy draw order (init uniforms, then per
+  iteration candidate uniforms followed by the 0.1-scaled local normals)
+  makes the two optimizers run the identical algorithm on the identical
+  sample paths, so they can be compared to f32 tolerance.
+
+``minimize_dev`` consumes a batched objective ``(K, D) -> (K,)`` — the
+same shape contract as ``bayesopt.minimize(vectorized=True)``; the
+controller's batched Gamma/feasibility evaluation over candidate power
+matrices (repro.control.device_controller.evaluate_dev) plugs in
+directly.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bayesopt import _Z_SATURATION
+
+
+class BODraws(NamedTuple):
+    """Every random number one ``minimize_dev`` call consumes, stacked.
+
+    ``eps_local`` holds the ACTUAL local perturbations (host draw order:
+    ``rng.normal(0.0, 0.1, ...)`` — the 0.1 scale is part of the draw),
+    so injected host streams transfer verbatim.
+    """
+
+    u_init: jax.Array     # (P, D) init points in [0, 1]^D
+    u_cand: jax.Array     # (M, K, D) global uniform candidates per iter
+    eps_local: jax.Array  # (M, K // 4, D) local perturbations per iter
+
+
+def make_draws(key: jax.Array, iters: int, init_points: int,
+               n_candidates: int, d: int) -> BODraws:
+    """Generate one BO call's draws from a jax.random key (f32). The
+    shapes (and therefore the trace) depend only on the static sizes."""
+    k_i, k_c, k_l = jax.random.split(key, 3)
+    return BODraws(
+        u_init=jax.random.uniform(k_i, (init_points, d), jnp.float32),
+        u_cand=jax.random.uniform(k_c, (iters, n_candidates, d),
+                                  jnp.float32),
+        eps_local=0.1 * jax.random.normal(
+            k_l, (iters, n_candidates // 4, d), jnp.float32),
+    )
+
+
+def _rbf(a: jax.Array, b: jax.Array, lengthscale: float) -> jax.Array:
+    """kappa(x, x') = exp(-||x - x'||^2 / (2 l^2)) (Eq. 52), f32."""
+    d2 = (jnp.sum(a * a, -1)[:, None] + jnp.sum(b * b, -1)[None, :]
+          - 2.0 * a @ b.T)
+    return jnp.exp(-jnp.maximum(d2, 0.0) / (2.0 * lengthscale ** 2))
+
+
+def minimize_dev(objective: Callable[[jax.Array], jax.Array],
+                 bounds: jax.Array,
+                 draws: BODraws,
+                 *,
+                 xi: float = 0.01,
+                 lengthscale: float = 1.0,
+                 jitter: float = 1e-5) -> Tuple[jax.Array, jax.Array]:
+    """Traced GP + PI minimization over a box; returns (x_best, y_best).
+
+    ``objective``: traced batched objective (K, D) -> (K,).
+    ``bounds``: (D, 2) [low, high] box; inputs are normalized to [0, 1]^D
+    before entering the kernel, observations are standardized — exactly
+    the host ``bayesopt.minimize`` pipeline.
+    ``draws``: the call's full random stream (see ``BODraws``).
+
+    The observation buffer is (P + M, D); at iteration m only the first
+    P + m rows are live. The masked kernel is block-diagonal (live block
+    + identity), so its Cholesky restricted to the live block equals the
+    host GP's factor and the padding contributes exactly zero to the
+    posterior.
+    """
+    bounds = jnp.asarray(bounds, jnp.float32)
+    lo, hi = bounds[:, 0], bounds[:, 1]
+    span = jnp.maximum(hi - lo, 1e-12)
+    p, d = draws.u_init.shape
+    m_iters = draws.u_cand.shape[0]
+    t = p + m_iters
+
+    def denorm(u):
+        return lo + u * span
+
+    xs = jnp.zeros((t, d), jnp.float32).at[:p].set(draws.u_init)
+    ys = jnp.zeros((t,), jnp.float32).at[:p].set(
+        jnp.asarray(objective(denorm(draws.u_init)), jnp.float32))
+
+    def body(m, carry):
+        xs, ys = carry
+        n_live = jnp.float32(p) + m
+        valid = jnp.arange(t) < p + m                       # prefix mask
+        # standardize the live observations (host: np.mean / np.std or 1)
+        mu_y = jnp.sum(jnp.where(valid, ys, 0.0)) / n_live
+        sd_y = jnp.sqrt(jnp.sum(jnp.where(valid, (ys - mu_y) ** 2, 0.0))
+                        / n_live)
+        sd_y = jnp.where(sd_y > 0.0, sd_y, 1.0)
+        ys_std = jnp.where(valid, (ys - mu_y) / sd_y, 0.0)
+
+        # masked GP fit: live block + identity padding (block-diagonal)
+        k_full = _rbf(xs, xs, lengthscale)
+        mask2 = valid[:, None] & valid[None, :]
+        k_masked = jnp.where(mask2, k_full, 0.0) \
+            + jnp.diag(jnp.where(valid, jnp.float32(jitter),
+                                 jnp.float32(1.0)))
+        chol = jnp.linalg.cholesky(k_masked)
+        alpha = jax.scipy.linalg.cho_solve((chol, True), ys_std)
+
+        ys_live = jnp.where(valid, ys_std, jnp.inf)
+        best_idx = jnp.argmin(ys_live)
+        y_star = ys_std[best_idx]
+        x_inc = xs[best_idx]
+
+        # candidates: global uniform + local perturbations of the
+        # incumbent (host draw order; eps carries the 0.1 scale)
+        cand = jnp.concatenate(
+            [draws.u_cand[m],
+             jnp.clip(x_inc[None, :] + draws.eps_local[m], 0.0, 1.0)],
+            axis=0)
+
+        kq = _rbf(xs, cand, lengthscale) * valid[:, None].astype(jnp.float32)
+        mu = kq.T @ alpha
+        v = jax.scipy.linalg.solve_triangular(chol, kq, lower=True)
+        var = jnp.maximum(1.0 - jnp.sum(v * v, axis=0), 1e-12)
+        # Eq. 53/56: maximize PI = 1 - Phi(z) <=> minimize z (Phi is
+        # strictly monotone), clamped at the shared saturation level so
+        # acquisition-equivalent candidates (PI ~ 1) tie and the FIRST
+        # wins — the host optimizer's selection rule exactly (see
+        # bayesopt.minimize; computing saturating 1-Phi in f32 would
+        # instead collapse different swaths than the host's f64 does)
+        z = jnp.maximum((mu - y_star - xi) / jnp.sqrt(var),
+                        jnp.float32(_Z_SATURATION))
+        x_next = cand[jnp.argmin(z)]                        # Eq. 56
+        y_next = jnp.asarray(objective(denorm(x_next[None, :])),
+                             jnp.float32)[0]
+        xs = xs.at[p + m].set(x_next)
+        ys = ys.at[p + m].set(y_next)
+        return xs, ys
+
+    xs, ys = jax.lax.fori_loop(0, m_iters, body, (xs, ys))
+    best = jnp.argmin(ys)
+    return denorm(xs[best]), ys[best]

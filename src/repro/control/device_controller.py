@@ -1,0 +1,221 @@
+"""The device-resident Algorithm 1: closed-form Theorems 2/3 + Bayesian-
+optimized power control as ONE jit-able function.
+
+``solve_dev`` is the traced twin of ``repro.core.controller.solve``: the
+same alternation (Stage 1: Theorem 2's rho* and Theorem 3's delta* in
+closed form; Stage 2: BO over the power vector; stop on Eq. 57), but
+every stage is jnp over a ``ChannelArrays`` view, so the WHOLE controller
+runs inside a compiled program — in particular inside the scanned round
+engine's ``lax.scan`` body, where ``ScanRunner(control="device")``
+re-solves Algorithm 1 every round against the round's own fading
+realization and cohort without a host round trip.
+
+Precision / shape contract (see also repro.control.device_bayesopt):
+
+* f32 throughout (the host controller is float64) — decisions are pinned
+  to ``controller.solve`` by tolerance tests on seeded channels, with the
+  BO random stream injected from the host's numpy draws
+  (tests/test_device_control.py), not bitwise;
+* the closed-form twins (``optimal_rho_dev`` / ``optimal_delta_dev``)
+  keep the host clamps: infeasible budgets clamp rho to rho_max and
+  delta to 1 (never NaN), and delta is returned as an f32 integer-valued
+  array (the scan carry is f32);
+* all loop bounds are static: the outer alternation is a
+  ``lax.while_loop`` capped at ``alt_max_iters`` with the Eq. 57
+  tolerance as a runtime early-exit, and each alternation's BO consumes
+  statically-shaped draws (``device_bayesopt.BODraws``). Under ``vmap``
+  (ScanRunner.run_sweep) the while_loop runs until every lane converges.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LTFLConfig
+from repro.control.device_bayesopt import BODraws, make_draws, minimize_dev
+from repro.core.channel import (
+    ChannelArrays,
+    expected_rate_dev,
+    packet_error_rate_dev,
+)
+from repro.core.controller import _PENALTY
+from repro.core.convergence import gamma_dev
+from repro.core.delay_energy import (
+    device_round_delay_dev,
+    device_round_energy_dev,
+)
+from repro.core.quantization import payload_bits
+
+
+class DeviceDecision(NamedTuple):
+    """Traced twin of ``controller.ControlDecision`` (per-device arrays
+    are f32; ``gamma`` is the scalar Gamma^n at the decision)."""
+
+    rho: jax.Array     # (U,) pruning ratios
+    delta: jax.Array   # (U,) quantization bits (f32, integer-valued)
+    power: jax.Array   # (U,) transmission powers (W)
+    per: jax.Array     # (U,) packet error rates at the decision
+    gamma: jax.Array   # () Gamma^n at the decision
+
+
+# --------------------------------------------------------------------------- #
+# Theorems 2/3, traced
+# --------------------------------------------------------------------------- #
+def optimal_rho_dev(ltfl: LTFLConfig, ch: ChannelArrays,
+                    payload: jax.Array, power: jax.Array) -> jax.Array:
+    """Theorem 2 (Eq. 40-42), traced twin of ``controller.optimal_rho``:
+    (U,) payload/power -> (U,) rho*. Infeasible budgets (phi1/phi2 <= 0)
+    clamp to rho_max via the host formula's own clip."""
+    w = ltfl.wireless
+    payload = jnp.asarray(payload, jnp.float32)
+    power = jnp.asarray(power, jnp.float32)
+    rate = jnp.maximum(expected_rate_dev(w, ch, power), 1e-30)
+    t_comp = ch.num_samples * jnp.float32(w.cycles_per_sample) / ch.cpu_hz
+    phi1 = jnp.float32(ltfl.t_max - ltfl.server_delay) \
+        / (t_comp + payload / rate)
+    e_comp = (w.k_eff * ch.cpu_hz ** jnp.float32(w.sigma_exp - 1.0)
+              * ch.num_samples * jnp.float32(w.cycles_per_sample))
+    phi2 = jnp.float32(ltfl.e_max) / (e_comp + power * payload / rate)
+    return jnp.clip(1.0 - jnp.minimum(phi1, phi2), 0.0,
+                    jnp.float32(ltfl.rho_max))
+
+
+def optimal_delta_dev(ltfl: LTFLConfig, ch: ChannelArrays,
+                      rho: jax.Array, power: jax.Array,
+                      num_params: int) -> jax.Array:
+    """Theorem 3 (Eq. 44-46), traced twin of ``controller.optimal_delta``:
+    (U,) rho/power -> (U,) f32 integer-valued delta*. Infeasible budgets
+    (phi3/phi4 <= xi, vanishing rate) clamp to delta = 1, never NaN —
+    the identical host clamp chain."""
+    w = ltfl.wireless
+    power = jnp.asarray(power, jnp.float32)
+    rate = jnp.maximum(expected_rate_dev(w, ch, power), 1e-30)
+    keep = jnp.maximum(1.0 - jnp.asarray(rho, jnp.float32), 1e-9)
+    t_comp = ch.num_samples * jnp.float32(w.cycles_per_sample) \
+        * keep / ch.cpu_hz
+    phi3 = (jnp.float32(ltfl.t_max - ltfl.server_delay) - t_comp) \
+        * rate / keep
+    e_comp = (w.k_eff * ch.cpu_hz ** jnp.float32(w.sigma_exp - 1.0)
+              * ch.num_samples * jnp.float32(w.cycles_per_sample) * keep)
+    phi4 = (jnp.float32(ltfl.e_max) - e_comp) * rate / (power * keep)
+    v_eff = jnp.float32(num_params) * keep   # pruned grads not uploaded
+    raw = jnp.minimum(
+        jnp.minimum((phi3 - jnp.float32(ltfl.xi_bits)) / v_eff,
+                    (phi4 - jnp.float32(ltfl.xi_bits)) / v_eff),
+        jnp.float32(ltfl.delta_max))
+    raw = jnp.where(jnp.isnan(raw), 1.0, raw)
+    return jnp.clip(jnp.floor(raw), 1.0, jnp.float32(ltfl.delta_max))
+
+
+def evaluate_dev(ltfl: LTFLConfig, ch: ChannelArrays,
+                 range_sq_sums: jax.Array, rhos: jax.Array,
+                 deltas: jax.Array, powers: jax.Array,
+                 num_params: int) -> Tuple[jax.Array, jax.Array]:
+    """Traced twin of ``controller._evaluate``: Gamma^n + feasibility of
+    (38b)/(38c) at the given controls. ``powers`` may be one (U,) vector
+    or a (K, U) candidate batch — (gamma, feasible) are then () or (K,).
+    This is the BO objective's core, reusing the PR-4 jnp channel /
+    delay-energy / convergence twins (one expected-rate quadrature shared
+    by the delay and energy batches, like the host path)."""
+    w = ltfl.wireless
+    p = jnp.asarray(powers, jnp.float32)
+    rhos = jnp.asarray(rhos, jnp.float32)
+    deltas = jnp.asarray(deltas, jnp.float32)
+    pers = packet_error_rate_dev(w, ch, p)                    # (..., U)
+    g = gamma_dev(ltfl, jnp.asarray(range_sq_sums, jnp.float32), deltas,
+                  rhos, pers, ch.num_samples)
+    payload = payload_bits(num_params, deltas, ltfl.xi_bits)
+    rate = expected_rate_dev(w, ch, p)
+    t = device_round_delay_dev(w, ch, payload, rhos, p, rate=rate) \
+        + jnp.float32(ltfl.server_delay)
+    e = device_round_energy_dev(w, ch, payload, rhos, p, rate=rate)
+    feasible = (jnp.all(t <= ltfl.t_max * (1 + 1e-9), axis=-1)
+                & jnp.all(e <= ltfl.e_max * (1 + 1e-9), axis=-1))
+    return g, feasible
+
+
+# --------------------------------------------------------------------------- #
+# Algorithm 1, traced
+# --------------------------------------------------------------------------- #
+def solve_dev(ltfl: LTFLConfig, ch: ChannelArrays, num_params: int,
+              range_sq_sums: Optional[jax.Array] = None,
+              key: Optional[jax.Array] = None, *,
+              draws: Optional[BODraws] = None,
+              n_candidates: int = 512,
+              init_points: int = 4) -> DeviceDecision:
+    """Traced Algorithm 1: alternate Theorem 2 / Theorem 3 / BO until
+    Eq. 57, entirely in jnp (jit-able, scannable, vmappable).
+
+    ``key`` seeds the BO draws (split once per alternation); ``draws``
+    instead injects a precomputed ``BODraws`` with a LEADING
+    ``(alt_max_iters,)`` axis — the parity tests feed the host
+    optimizer's numpy stream through it. Exactly one of the two must be
+    given. ``range_sq_sums`` defaults to the host solver's conservative
+    prior (1e-2 * num_params per device).
+    """
+    if (key is None) == (draws is None):
+        raise ValueError("pass exactly one of key= or draws=")
+    w = ltfl.wireless
+    u = ch.distance.shape[0]
+    if range_sq_sums is None:
+        range_sq = jnp.full((u,), jnp.float32(1e-2 * num_params))
+    else:
+        range_sq = jnp.asarray(range_sq_sums, jnp.float32)
+    bounds = jnp.tile(jnp.asarray([[w.p_min, w.p_max]], jnp.float32),
+                      (u, 1))
+
+    def stage1(deltas, powers):
+        """Theorems 2 + 3 for all devices at the current powers."""
+        payload = payload_bits(num_params, deltas, ltfl.xi_bits)
+        rhos = optimal_rho_dev(ltfl, ch, payload, powers)
+        return rhos, optimal_delta_dev(ltfl, ch, rhos, powers, num_params)
+
+    def objective(rhos, deltas):
+        def obj(p_mat):
+            """(K, U) candidate powers -> (K,) penalized Gamma values."""
+            g, feasible = evaluate_dev(ltfl, ch, range_sq, rhos, deltas,
+                                       p_mat, num_params)
+            return g + jnp.where(feasible, 0.0, jnp.float32(_PENALTY))
+        return obj
+
+    if key is None:
+        key = jax.random.PRNGKey(0)      # placeholder; draws are injected
+
+    def cond(carry):
+        k, _, _, _, _, done = carry
+        return (k < ltfl.alt_max_iters) & ~done
+
+    def body(carry):
+        k, prev_gamma, powers, deltas, key, _ = carry
+        # --- Stage 1: Theorems 2/3 (closed form) ------------------------ #
+        rhos, deltas = stage1(deltas, powers)
+        # --- Stage 2: BO over p (problem P4) ---------------------------- #
+        key, sub = jax.random.split(key)
+        if draws is None:
+            dk = make_draws(sub, ltfl.bo_iters, init_points, n_candidates,
+                            u)
+        else:
+            dk = jax.tree_util.tree_map(lambda x: x[k], draws)
+        powers, _ = minimize_dev(objective(rhos, deltas), bounds, dk,
+                                 xi=ltfl.bo_xi)
+        g, _ = evaluate_dev(ltfl, ch, range_sq, rhos, deltas, powers,
+                            num_params)
+        done = jnp.abs(prev_gamma - g) <= ltfl.alt_tol       # Eq. 57
+        return k + 1, g, powers, deltas, key, done
+
+    powers0 = jnp.full((u,), jnp.float32(0.5 * (w.p_min + w.p_max)))
+    deltas0 = jnp.full((u,), jnp.float32(ltfl.delta_max))
+    carry = (jnp.int32(0), jnp.float32(jnp.inf), powers0, deltas0, key,
+             jnp.bool_(False))
+    _, _, powers, deltas, _, _ = jax.lax.while_loop(cond, body, carry)
+
+    # final Stage-1 pass at the chosen powers (host solve does the same:
+    # Theorems 2/3 construct (rho*, delta*) feasible GIVEN p)
+    rhos, deltas = stage1(deltas, powers)
+    gamma, _ = evaluate_dev(ltfl, ch, range_sq, rhos, deltas, powers,
+                            num_params)
+    per = packet_error_rate_dev(w, ch, powers)
+    return DeviceDecision(rho=rhos, delta=deltas, power=powers, per=per,
+                          gamma=gamma)

@@ -1,0 +1,131 @@
+"""Device-resident cohort-sampler twins (the in-scan scheduler).
+
+``ScanRunner(rng="device")`` draws each round's cohort INSIDE the
+compiled ``lax.scan``; a host ``CohortSampler`` participates by returning
+one of these traced twins from ``device_twin(runner)`` (repro.fed.
+population). A twin sees the CURRENT carried channel realization — under
+block fading that is this round's fading, fresher CSI than the host
+samplers' lazily-refreshed view — and returns the (U,) cohort plus, when
+defined, the members' inclusion probabilities pi_i (what the unbiased
+Horvitz-Thompson aggregation divides by).
+
+Sampling without replacement on device uses the Gumbel-top-k trick:
+adding i.i.d. Gumbel(0, 1) noise to log-weights and taking the top U
+keys is distributed EXACTLY as sequential weighted sampling without
+replacement (probability proportional to the remaining weights at every
+draw) — numpy's ``rng.choice(replace=False, p=w)`` procedure. Inclusion
+probabilities keep the host samplers' convention: exact U/N for uniform,
+the standard first-order approximation pi_i ~ min(1, U w_i) for the
+energy-aware weights (tests/test_device_control.py checks the empirical
+Gumbel-top-k inclusion against it).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import ChannelArrays, expected_rate_dev
+from repro.core.delay_energy import local_train_energy_dev
+
+SelectFn = Callable[[ChannelArrays, jax.Array],
+                    Tuple[jax.Array, Optional[jax.Array]]]
+
+
+class DeviceSamplerTwin(NamedTuple):
+    """Traced scheduler: ``select(ch_pop, key) -> (cohort, pi | None)``.
+
+    ``ch_pop`` is the (N,) population ``ChannelArrays`` at the round's
+    carried realization; ``cohort`` is (U,) int32, ascending (the
+    engine's canonical order); ``pi`` is the (U,) inclusion probability
+    vector, or None for deterministic schedulers (``provides_inclusion``
+    mirrors it statically so the engine can validate
+    ``participation="unbiased"`` at construction time, before tracing).
+    """
+
+    select: SelectFn
+    provides_inclusion: bool
+
+
+def uniform_twin(num_devices: int, cohort_size: int) -> DeviceSamplerTwin:
+    """Uniform without replacement; exact pi = U/N. U == N is the
+    identity cohort (no key consumed), mirroring the host fast path."""
+    n, u = num_devices, cohort_size
+
+    def select(ch_pop: ChannelArrays, key: jax.Array):
+        if u == n:
+            return jnp.arange(n, dtype=jnp.int32), jnp.ones((n,),
+                                                            jnp.float32)
+        cohort = jnp.sort(jax.random.choice(
+            key, n, (u,), replace=False)).astype(jnp.int32)
+        return cohort, jnp.full((u,), jnp.float32(u / n))
+
+    return DeviceSamplerTwin(select=select, provides_inclusion=True)
+
+
+def channel_aware_twin(num_devices: int, cohort_size: int, ltfl,
+                       power: Optional[float] = None,
+                       explore: float = 0.0) -> DeviceSamplerTwin:
+    """Traced twin of ``ChannelAwareSampler``: top-U by expected uplink
+    rate at a reference power, on the CURRENT carried realization (the
+    host twin ranks on lazily-refreshed, possibly stale CSI — in-scan
+    the realization is always this round's). ``explore`` reserves the
+    host sampler's slot count (at least one when explore > 0) for
+    uniform picks outside the top set. Deterministic selection has no
+    inclusion probabilities."""
+    n, u = num_devices, cohort_size
+    w = ltfl.wireless
+    p_ref = power if power is not None else 0.5 * (w.p_min + w.p_max)
+    n_explore = 0 if explore <= 0.0 else min(
+        u, max(1, round(explore * u)))
+    n_top = u - n_explore
+
+    def select(ch_pop: ChannelArrays, key: jax.Array):
+        rate = expected_rate_dev(
+            w, ch_pop, jnp.full((n,), jnp.float32(p_ref)))
+        # stable descending order (host: argsort(-rate, kind="stable"))
+        order = jnp.argsort(-rate, stable=True)
+        idx = order[:n_top]
+        if n_explore:
+            rest = order[n_top:]
+            picks = jax.random.choice(key, rest, (n_explore,),
+                                      replace=False)
+            idx = jnp.concatenate([idx, picks])
+        return jnp.sort(idx).astype(jnp.int32), None
+
+    return DeviceSamplerTwin(select=select, provides_inclusion=False)
+
+
+def energy_aware_twin(ltfl, cohort_size: int,
+                      min_headroom: float = 1e-6) -> DeviceSamplerTwin:
+    """Traced twin of ``EnergyAwareSampler``: weighted sampling without
+    replacement via Gumbel-top-k, probability proportional to per-round
+    energy headroom (E^max minus the rho = 0 local-training energy,
+    Eq. 35). The (N,) weight vector is recomputed in-scan from the
+    population ``ChannelArrays`` — headroom depends only on static device
+    attributes (CPU frequency, shard size) that ride along in the struct,
+    which keeps the twin correct per ``run_sweep`` lane (each replica's
+    population draws different devices) with no host-side cache to
+    transfer. Inclusion probabilities use the host sampler's first-order
+    approximation pi_i ~ min(1, U w_i) (the Horvitz-Thompson weights the
+    unbiased aggregation divides by; checked against the empirical
+    Gumbel-top-k inclusion in tests/test_device_control.py)."""
+    u = cohort_size
+    w_cfg = ltfl.wireless
+    e_max = float(ltfl.e_max)
+
+    def select(ch_pop: ChannelArrays, key: jax.Array):
+        head = jnp.maximum(
+            e_max - local_train_energy_dev(w_cfg, ch_pop,
+                                           jnp.float32(0.0)),
+            jnp.float32(min_headroom))
+        w = head / jnp.sum(head)
+        keys = jnp.log(jnp.maximum(w, 1e-30)) \
+            + jax.random.gumbel(key, w.shape, jnp.float32)
+        _, idx = jax.lax.top_k(keys, u)
+        cohort = jnp.sort(idx).astype(jnp.int32)
+        pi = jnp.clip(u * w[cohort], 1e-9, 1.0)
+        return cohort, pi
+
+    return DeviceSamplerTwin(select=select, provides_inclusion=True)

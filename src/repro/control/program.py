@@ -1,0 +1,64 @@
+"""The scheme <-> scan-engine device-control protocol.
+
+``ScanRunner(control="device")`` folds per-round control (Algorithm-1
+recontrol, FedMP's UCB bandit) into the scanned segment instead of
+splitting segments at every host recontrol boundary. A scheme opts in by
+returning a ``ControlProgram`` from ``scan_control_program(runner)``:
+the program's carried state lives in the scan carry (so it survives and
+updates across rounds without leaving the device), ``controls`` produces
+the round's decisions from that state, and ``feedback`` (optional)
+absorbs the round's measured metrics — the traced twin of
+``BaseScheme.post_round``.
+
+Purity contract: ``controls`` / ``feedback`` are traced once per segment
+length and re-used across ``run_sweep`` lanes — they must read ALL
+per-round / per-lane data from their arguments (state, cohort, channel
+view, key) and close only over static configuration (the LTFLConfig,
+arm grids, parameter counts). A closure over runner/scheme MUTABLE state
+would silently bake one lane's values into every lane's trace.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+
+PyTree = Any
+
+
+class DeviceControls(NamedTuple):
+    """One round's traced control decision for the (U,) cohort view.
+
+    ``payload`` is the scheme's analytic uplink bits under these controls
+    (Eq. 18/32) — the in-scan twin of ``BaseScheme.payload_bits``, needed
+    because delay/energy accounting rides inside the scan too.
+    """
+
+    rho: jax.Array      # (U,) pruning ratios
+    delta: jax.Array    # (U,) quantization bits (f32; 0 => no quant)
+    power: jax.Array    # (U,) transmission powers (W)
+    payload: jax.Array  # (U,) uplink payload bits
+
+
+class ControlProgram(NamedTuple):
+    """A scheme's device-resident control plane (see module docstring).
+
+    * ``init``: the initial carried control state (a jnp pytree; ``()``
+      for stateless control like LTFL's memoized decision);
+    * ``controls(state, r, cohort, ch, range_sq, key) ->
+      (DeviceControls, state)``: the round-``r`` decision for the cohort
+      view ``ch`` (a (U,) ``ChannelArrays``) given the cohort's carried
+      gradient-range estimates ``range_sq``;
+    * ``feedback(state, cohort, loss, delay) -> state`` (optional): the
+      post-step state update (traced ``post_round`` twin). When a scheme
+      provides it, the engine SKIPS the host ``post_round`` for scanned
+      rounds — the program owns the feedback loop;
+    * ``absorb(scheme, state) -> None`` (optional): host hook run after a
+      segment with the final carried state (numpy pytree), so the host
+      scheme object stays inspectable (e.g. FedMP's bandit counters).
+    """
+
+    init: PyTree
+    controls: Callable[..., Any]
+    feedback: Optional[Callable[..., Any]] = None
+    absorb: Optional[Callable[..., None]] = None

@@ -14,6 +14,11 @@ controller runs on the edge server, outside the jitted training path.
   Gamma/feasibility evaluation over K candidate power vectors) never
   falls back to per-point Python loops. Both paths consume the rng
   stream identically, so seeded runs agree between them.
+
+``repro.control.device_bayesopt.minimize_dev`` is this optimizer's
+traced f32 twin (fixed-shape, ``jax.lax``, scannable); the two share the
+saturation-clamped argmin-z proposal rule below and are pinned to each
+other on injected draw streams — keep algorithmic changes mirrored.
 """
 from __future__ import annotations
 
@@ -63,6 +68,16 @@ def _norm_cdf(x: np.ndarray) -> np.ndarray:
     """Phi(x) (Eq. 55) via the true vectorized erf (one array op over all
     acquisition candidates, not an element-by-element Python loop)."""
     return 0.5 * (1.0 + erf(np.asarray(x, np.float64) / np.sqrt(2.0)))
+
+
+# Acquisition-equivalence floor for the proposal argmax (see the
+# selection comment in ``minimize``): 1 - Phi(-6) differs from 1.0 by
+# ~1e-9, so below this z every candidate is treated as tied and the
+# FIRST one wins — a deliberate shared rule (it slightly changes f64
+# selection in the z range (-8.3, -6), where argmax over f64 PI used to
+# resolve sub-1e-9 differences) so the f32 twin in
+# repro.control.device_bayesopt ties exactly the same way.
+_Z_SATURATION = -6.0
 
 
 @dataclass
@@ -127,9 +142,23 @@ def minimize(objective: Callable[[np.ndarray], float],
 
         mu, var = gp.predict(cand)
         sd = np.sqrt(var)
-        # Eq. 53: P(f <= y* + xi) = 1 - Phi((mu - y* - xi)/sd)
-        acq = 1.0 - _norm_cdf((mu - y_star - xi) / sd)
-        x_next = cand[int(np.argmax(acq))]              # Eq. 56
+        # Eq. 53/56: maximizing PI = 1 - Phi(z) with z = (mu - y* - xi)/sd
+        # is minimizing z (Phi is strictly monotone) — except below the
+        # _Z_SATURATION floor, where ALL candidates are deliberately
+        # treated as acquisition-equivalent (their PI values differ by
+        # < 1e-9) and the FIRST one wins. That floor is a small, explicit
+        # change from strict argmax over floating-point PI: it replaces
+        # BOTH precision-dependent saturation regimes (f64 argmax used to
+        # resolve sub-1e-9 PI differences down to z ~ -8.3 and tie-break
+        # by first index only below; f32 saturates far earlier) with one
+        # shared rule, preserving the old behavior's exploration property
+        # (raw argmin(z) would always chase sd -> 0 candidates glued to
+        # the incumbent) while making the f32 twin
+        # (repro.control.device_bayesopt.minimize_dev) pick the same
+        # candidate on injected draws instead of diverging wherever the
+        # two precisions saturate differently.
+        z = np.maximum((mu - y_star - xi) / sd, _Z_SATURATION)
+        x_next = cand[int(np.argmin(z))]                # Eq. 56
         xs.append(x_next)
         ys.append(evaluate(x_next))
         trace.append(min(ys))

@@ -191,6 +191,14 @@ class ChannelArrays(NamedTuple):
     cpu_hz: jax.Array
     num_samples: jax.Array
 
+    def take(self, idx: jax.Array) -> "ChannelArrays":
+        """Traced twin of ``ChannelState.take``: gather the (U,) cohort
+        view out of an (N,) population struct — how the scanned engine
+        (and the in-scan Algorithm-1 controller behind it) narrows the
+        control plane to the round's scheduled cohort without leaving
+        the device."""
+        return ChannelArrays(*(jnp.take(f, idx, axis=0) for f in self))
+
 
 Devices = Union[ChannelState, DeviceChannel, Sequence[DeviceChannel]]
 

@@ -27,6 +27,12 @@ argument is the (U,) COHORT view gathered from the (N,) population
 (``ChannelState.take``): Algorithm 1's cost — and every closed-form
 Theorem-2/3 call — is governed by the scheduled cohort size U, never by
 the registered population size N.
+
+``repro.control.device_controller`` holds the traced jnp twin of this
+whole module (``solve_dev`` and the Theorem-2/3 ``*_dev`` functions):
+identical formulas and clamps, f32, jit/scan/vmap-able, pinned to this
+float64 reference by tests/test_device_control.py on injected rng
+streams. Changes to the math here must land in the twin too.
 """
 from __future__ import annotations
 

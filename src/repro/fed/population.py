@@ -40,6 +40,12 @@ from typing import Any, Optional, Tuple
 import numpy as np
 
 from repro.configs.base import LTFLConfig, WirelessConfig
+from repro.control.device_samplers import (
+    DeviceSamplerTwin,
+    channel_aware_twin,
+    energy_aware_twin,
+    uniform_twin,
+)
 from repro.core.channel import ChannelState, expected_rate
 from repro.core.delay_energy import local_train_energy
 
@@ -136,6 +142,17 @@ class CohortSampler:
                rng: np.random.Generator, ltfl: LTFLConfig) -> SelectResult:
         raise NotImplementedError
 
+    def device_twin(self, runner) -> Optional[DeviceSamplerTwin]:
+        """The traced in-scan scheduler twin (repro.control.
+        device_samplers), or None when this scheduler is host-only —
+        ``ScanRunner(rng="device")`` routes cohort selection through the
+        twin and raises a clear ValueError when there isn't one. The twin
+        sees the round's CURRENT carried channel realization (host
+        samplers see the lazily-refreshed, possibly stale view) and must
+        report inclusion probabilities if the runner aggregates with
+        ``participation="unbiased"``."""
+        return None
+
 
 @dataclass
 class UniformSampler(CohortSampler):
@@ -153,6 +170,9 @@ class UniformSampler(CohortSampler):
             return np.arange(n, dtype=np.int64), np.ones(n)
         idx = np.sort(rng.choice(n, size=cohort_size, replace=False))
         return idx.astype(np.int64), np.full(cohort_size, cohort_size / n)
+
+    def device_twin(self, runner) -> DeviceSamplerTwin:
+        return uniform_twin(runner.population_size, runner.cohort_size)
 
 
 @dataclass
@@ -190,6 +210,11 @@ class ChannelAwareSampler(CohortSampler):
             idx = np.concatenate(
                 [idx, rng.choice(rest, size=n_explore, replace=False)])
         return np.sort(idx).astype(np.int64), None
+
+    def device_twin(self, runner) -> DeviceSamplerTwin:
+        return channel_aware_twin(runner.population_size,
+                                  runner.cohort_size, runner.ltfl,
+                                  power=self.power, explore=self.explore)
 
 
 @dataclass
@@ -236,3 +261,10 @@ class EnergyAwareSampler(CohortSampler):
                                  replace=False, p=w))
         pi = np.clip(cohort_size * w[idx], 1e-9, 1.0)
         return idx.astype(np.int64), pi
+
+    def device_twin(self, runner) -> DeviceSamplerTwin:
+        # the twin recomputes the headroom weights in-scan from the
+        # population ChannelArrays (static device attributes), so it
+        # stays correct per run_sweep lane — no host cache to transfer
+        return energy_aware_twin(runner.ltfl, runner.cohort_size,
+                                 min_headroom=self.min_headroom)

@@ -306,15 +306,23 @@ class FedRunner:
             self._pop_samples_total
 
     # ------------------------------------------------------------------ #
+    def _eval_batches(self, max_batches: int = 4,
+                      batch: int = 256) -> List[Dict[str, np.ndarray]]:
+        """The FIXED seeded eval batches ``evaluate`` scores — split out
+        so the scanned engine's in-scan eval head (repro.fed.scan_engine,
+        ``control="device"``) can upload the identical batches once and
+        evaluate them inside the compiled segment."""
+        eval_rng = np.random.default_rng(self._eval_rng_seed)
+        return [self.test.batch(batch, eval_rng)
+                for _ in range(max_batches)]
+
     def evaluate(self, max_batches: int = 4, batch: int = 256) -> float:
         """Test accuracy over FIXED eval batches: the rng is re-seeded per
         call, so scheme-comparison curves carry no eval sampling noise."""
         if self._eval_fn is None:
             return float("nan")
-        eval_rng = np.random.default_rng(self._eval_rng_seed)
         accs = []
-        for _ in range(max_batches):
-            b = self.test.batch(batch, eval_rng)
+        for b in self._eval_batches(max_batches, batch):
             accs.append(float(self._eval_fn(
                 self.params, {k: jnp.asarray(v) for k, v in b.items()})))
         return float(np.mean(accs))

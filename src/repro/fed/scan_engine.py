@@ -15,13 +15,26 @@ plus the jnp-native accounting twins (``packet_error_rate_dev``,
 
 Segmentation
 ------------
-Host-side work that cannot be traced — Algorithm 1's Bayesian-optimized
-power control and ``evaluate()`` — runs BETWEEN scans: the round range is
-split at recontrol/eval boundaries, so ``LTFLScheme(recontrol_every=k)``
-scans segments of length k and the classic per-round ``FedRunner`` is
-exactly the ``max_segment=1`` degenerate case. One trace is paid per
-DISTINCT segment length (the scan body compiles once regardless of trip
-count); equal-length segments reuse the compiled executable.
+With the default ``control="host"``, host-side work — Algorithm 1's
+Bayesian-optimized power control and ``evaluate()`` — runs BETWEEN
+scans: the round range is split at recontrol/eval boundaries, so
+``LTFLScheme(recontrol_every=k)`` scans segments of length k and the
+classic per-round ``FedRunner`` is exactly the ``max_segment=1``
+degenerate case. One trace is paid per DISTINCT segment length (the scan
+body compiles once regardless of trip count); equal-length segments
+reuse the compiled executable.
+
+``control="device"`` (requires ``rng="device"``) removes those
+boundaries entirely: Algorithm-1 recontrol runs INSIDE the scan through
+the scheme's ``scan_control_program`` (repro.control — ``solve_dev``'s
+traced Theorems 2/3 + fixed-shape BO for LTFL, the carried UCB bandit
+for FedMP), and eval runs in-scan against the same fixed seeded batches
+``evaluate()`` scores (the accuracy rides ``RoundLog``). The planner
+then coalesces what would have been per-round segments into one scanned
+range — ``LTFLScheme(recontrol_every=1)`` over R rounds is ONE segment,
+one trace, and each round's recontrol sees that round's OWN fading
+realization and cohort (fresh CSI, where host recontrol under
+``rng="device"`` could only ever see segment-start state).
 
 Two rng modes
 -------------
@@ -34,24 +47,25 @@ Two rng modes
   delay/energy/Gamma agree to tolerance; the tensor trajectory is
   bit-comparable for stateless schemes).
 * ``rng="device"``: the scan body carries a ``jax.random`` key stream and
-  draws everything on device — uniform cohort sampling via
-  ``jax.random.choice``, block-fading redraw via ``draw_fading_dev``,
-  batch draws via ``randint``, packet outcomes via
-  ``sample_transmissions_dev``. Zero per-round host work; an independent
-  (jax, not numpy) rng stream over the same distributions, with one
-  deliberate simplification: per-client minibatches are drawn WITH
-  replacement (bootstrap), where the host batcher draws without
-  replacement whenever a shard covers the batch — a slightly different
-  within-round gradient-noise profile. Under block fading a recontrol
-  decision sees the LAST segment's channel realization (one round of CSI
-  lag — what a real controller has anyway). Channel-aware / energy-aware
-  samplers and per-cohort recontrol remain host-only (ROADMAP open
-  items); ``rng="host"`` supports them via replay.
+  draws everything on device. Cohort selection routes through the host
+  sampler's ``device_twin()`` (repro.control.device_samplers): uniform
+  without replacement, channel-aware ``lax.top_k``, or energy-aware
+  Gumbel-top-k weighted choice with Horvitz-Thompson inclusion
+  probabilities; a sampler with no twin raises at construction. Block
+  fading redraws via ``draw_fading_dev``, batch draws via ``randint``,
+  packet outcomes via ``sample_transmissions_dev``. Zero per-round host
+  work; an independent (jax, not numpy) rng stream over the same
+  distributions, with one deliberate simplification: per-client
+  minibatches are drawn WITH replacement (bootstrap), where the host
+  batcher draws without replacement whenever a shard covers the batch —
+  a slightly different within-round gradient-noise profile.
 
 NOTE the inherited default ``eval_every=1`` evaluates after EVERY round,
-which (by the segmentation rule) degenerates every segment to length 1 —
-correct, but no faster than ``FedRunner``. Pass ``eval_every=0`` (or a
-cadence of k rounds) to actually amortize; ``run`` warns once otherwise.
+which under ``control="host"`` (by the segmentation rule) degenerates
+every segment to length 1 — correct, but no faster than ``FedRunner``.
+Pass ``eval_every=0`` (or a cadence of k rounds) to actually amortize,
+or ``control="device"`` to evaluate in-scan; ``run`` warns once
+otherwise.
 """
 from __future__ import annotations
 
@@ -71,7 +85,6 @@ from repro.core.channel import (
 )
 from repro.core.convergence import gamma_dev
 from repro.core.delay_energy import round_accounting_dev
-from repro.fed.population import UniformSampler
 from repro.fed.rounds import FedRunner, RoundRecord
 
 PyTree = Any
@@ -80,8 +93,11 @@ PyTree = Any
 class RoundLog(NamedTuple):
     """Stacked per-round outputs of one scanned segment — the traced
     mirror of ``RoundRecord``'s measured fields (leading axis = round).
-    Host-derivable fields (cum sums in f64, segment-constant control
-    means, eval accuracy) are filled in by the runner afterwards."""
+    Host-derivable fields (cum sums in f64) are filled in by the runner
+    afterwards. ``test_acc`` and the control means are live only under
+    ``control="device"`` (in-scan eval / in-scan recontrol); host-control
+    segments fill them from the segment constants (means) and NaN
+    (test_acc, which the host evaluates between segments instead)."""
 
     train_loss: jax.Array   # (R,)
     delay: jax.Array        # (R,)  Eq. 34 incl. server delay
@@ -89,6 +105,10 @@ class RoundLog(NamedTuple):
     received: jax.Array     # (R,)  sum alpha
     gamma: jax.Array        # (R,)  Eq. 29 at the measured ranges
     cohort: jax.Array       # (R, U) scheduled population indices
+    test_acc: jax.Array     # (R,)  in-scan eval head (NaN when not due)
+    rho_mean: jax.Array     # (R,)  mean of the round's applied controls
+    delta_mean: jax.Array   # (R,)
+    power_mean: jax.Array   # (R,)
 
 
 def make_scanned_step(step_fn: Callable) -> Callable:
@@ -126,20 +146,31 @@ class ScanRunner(FedRunner):
 
     * ``rng``: ``"host"`` (seeded-parity replay; default) or
       ``"device"`` (fully device-resident rng — see module docstring);
+    * ``control``: ``"host"`` (Algorithm 1 / eval between segments;
+      default) or ``"device"`` (in-scan recontrol via the scheme's
+      ``scan_control_program``, in-scan eval head; requires
+      ``rng="device"``);
     * ``max_segment``: optional cap on scanned segment length
       (``max_segment=1`` degenerates to the classic per-round engine,
       used by the parity tests).
 
-    Schemes must declare ``scan_supported`` (FedMP's per-round host
-    bandit does not) and segment-constant controls via
-    ``scan_recontrol_every``.
+    Schemes must declare ``scan_supported`` and segment-constant controls
+    via ``scan_recontrol_every`` (``control="device"`` additionally needs
+    ``scan_control_program`` whenever that cadence is nonzero).
     """
 
     def __init__(self, model, params, ltfl, train, test, scheme, *,
-                 rng: str = "host", max_segment: Optional[int] = None,
-                 **kwargs):
+                 rng: str = "host", control: str = "host",
+                 max_segment: Optional[int] = None, **kwargs):
         if rng not in ("host", "device"):
             raise ValueError(f"rng={rng!r} (want 'host' or 'device')")
+        if control not in ("host", "device"):
+            raise ValueError(
+                f"control={control!r} (want 'host' or 'device')")
+        if control == "device" and rng != "device":
+            raise ValueError(
+                "control='device' folds recontrol into the scan carry, "
+                "which needs the in-scan rng stream; pass rng='device'")
         if not scheme.scan_supported:
             raise ValueError(
                 f"{type(scheme).__name__} needs per-round host feedback "
@@ -152,23 +183,47 @@ class ScanRunner(FedRunner):
         self._scheme_proto = copy.deepcopy(scheme)   # pre-setup state
         super().__init__(model, params, ltfl, train, test, scheme, **kwargs)
         self.rng = rng
+        self.control = control
         self.max_segment = max_segment
-        if rng == "device":
-            if not isinstance(self.sampler, UniformSampler):
+        self._ctl_program = None
+        self._ctl_state: Optional[PyTree] = None
+        self._sampler_twin = None
+        rc = scheme.scan_recontrol_every(self)
+        if control == "device" and rc:
+            self._ctl_program = scheme.scan_control_program(self)
+            if self._ctl_program is None:
                 raise ValueError(
-                    f"rng='device' draws cohorts in-scan (uniform); "
-                    f"{type(self.sampler).__name__} is host-only — use "
-                    "rng='host'")
-            if self.cohort_size < self.population_size and \
-                    scheme.scan_recontrol_every(self):
+                    f"{type(scheme).__name__} recontrols every {rc} "
+                    "round(s) but provides no scan_control_program "
+                    "(no device twin of its control loop); use "
+                    "control='host'")
+            self._ctl_state = self._ctl_program.init
+        if rng == "device":
+            self._sampler_twin = self.sampler.device_twin(self)
+            if self._sampler_twin is None:
+                raise ValueError(
+                    f"rng='device' draws cohorts in-scan, but "
+                    f"{type(self.sampler).__name__}.device_twin() "
+                    "returned None (host-only scheduler); use rng='host' "
+                    "or a sampler with a device twin "
+                    "(repro.control.device_samplers)")
+            if self.participation == "unbiased" and \
+                    not self._sampler_twin.provides_inclusion:
+                raise ValueError(
+                    "participation='unbiased' needs inclusion "
+                    f"probabilities; the {type(self.sampler).__name__} "
+                    "device twin does not provide them")
+            if control == "host" and rc and \
+                    self.cohort_size < self.population_size:
                 raise ValueError(
                     "rng='device' cannot host-recontrol against a cohort "
-                    "drawn in-scan; use rng='host' (per-round segments) "
-                    "for per-cohort control")
+                    "drawn in-scan; use control='device' (in-scan "
+                    "recontrol) or rng='host' (per-round segments)")
         self._scan_key = jax.random.PRNGKey(int(kwargs.get("seed", 0)))
         self._data_dev: Optional[Dict[str, jax.Array]] = None
         self._parts_padded: Optional[jax.Array] = None
         self._part_sizes: Optional[jax.Array] = None
+        self._eval_batches_dev: Optional[Dict[str, jax.Array]] = None
         self._n_traces = 0   # one per (segment length, single|sweep) trace
         self._seg_jit = jax.jit(self._segment, static_argnums=(3,))
         self._sweep_jit = jax.jit(
@@ -181,10 +236,19 @@ class ScanRunner(FedRunner):
     def _ensure_device_world(self, pad_to: Optional[int] = None) -> None:
         """Materialize the device-resident training pool (both modes) and,
         for device rng, the padded per-device partition table. ``pad_to``
-        widens the table to a common width (run_sweep stacks lanes)."""
+        widens the table to a common width (run_sweep stacks lanes).
+        Under ``control="device"`` the in-scan eval head's fixed seeded
+        batches (the exact arrays ``evaluate`` scores) go device-resident
+        here too."""
         if self._data_dev is None:
             self._data_dev = {k: jnp.asarray(v)
                               for k, v in self.batcher.base.arrays.items()}
+        if self.control == "device" and self._eval_batches_dev is None \
+                and self._eval_fn is not None and self.eval_every:
+            batches = self._eval_batches()
+            self._eval_batches_dev = {
+                k: jnp.asarray(np.stack([b[k] for b in batches]))
+                for k in batches[0]}
         if self.rng != "device":
             return
         sizes = np.asarray([p.size for p in self.batcher.parts], np.int32)
@@ -205,8 +269,15 @@ class ScanRunner(FedRunner):
     def _segment_spans(self, start: int, end: int):
         """Split [start, end) at host boundaries: a new segment starts at
         every recontrol round, ends after every eval round, and never
-        exceeds ``max_segment`` rounds."""
-        rc = self.scheme.scan_recontrol_every(self)
+        exceeds ``max_segment`` rounds. Under ``control="device"`` the
+        recontrol AND eval boundaries vanish (both run in-scan), so the
+        spans that would have degenerated to length 1 coalesce into one
+        scanned range — no stray retraces (compile-counter-tested)."""
+        if self.control == "device":
+            rc = ev = 0          # in-scan recontrol + in-scan eval head
+        else:
+            rc = self.scheme.scan_recontrol_every(self)
+            ev = self.eval_every
         spans = []
         a = start
         while a < end:
@@ -214,7 +285,7 @@ class ScanRunner(FedRunner):
             while b < end:
                 if rc and b % rc == 0:
                     break                 # host recontrol due at b
-                if self.eval_every and (b - 1) % self.eval_every == 0:
+                if ev and (b - 1) % ev == 0:
                     break                 # eval due after round b-1
                 if self.max_segment and b - a >= self.max_segment:
                     break
@@ -234,8 +305,6 @@ class ScanRunner(FedRunner):
             "payload": jnp.asarray(
                 np.asarray(self.scheme.payload_bits(ctl), np.float64),
                 jnp.float32),
-            "gap_delta": jnp.asarray(
-                np.where(ctl.delta > 0, ctl.delta, 32.0), jnp.float32),
         }
         if agg_denom is not None:
             consts["agg_denom"] = jnp.float32(agg_denom)
@@ -285,26 +354,37 @@ class ScanRunner(FedRunner):
         return xs, self._segment_consts(ctl0, agg_denom), ctl0
 
     def _prepare_device_segment(self, a: int, b: int):
-        """Segment-start controls + the (N,)-shaped device constants; all
-        per-round randomness comes from the carried key stream in-scan.
+        """Segment-start controls (or nothing, when the scheme's control
+        program recomputes them in-scan) + the (N,)-shaped device
+        constants; all per-round randomness comes from the carried key
+        stream in-scan.
 
         Unbiased aggregation is resolved here, not via FedRunner's
         ``_aggregation_weights`` — that host path needs per-round sampler
-        probabilities, which device mode never materializes; the uniform
-        in-scan sampler's pi = U/N is exact, so the body builds the HT
-        weights itself and only the fixed denominator is a constant."""
-        ctl = self.scheme.controls(a)
+        probabilities, which device mode never materializes; the device
+        sampler twin reports its own inclusion probabilities in-scan and
+        only the fixed denominator is a constant."""
         agg_denom = (self._pop_samples_total
                      if self.participation == "unbiased" else None)
+        if self._ctl_program is None:
+            ctl = self.scheme.controls(a)
+            consts = self._segment_consts(ctl, agg_denom)
+        else:
+            ctl = None                   # controls live in the scan carry
+            consts = {}
+            if agg_denom is not None:
+                consts["agg_denom"] = jnp.float32(agg_denom)
         ch = self.population.channel
-        consts = self._segment_consts(ctl, agg_denom)
         consts.update(
             distance=jnp.asarray(ch.distance, jnp.float32),
             cpu=jnp.asarray(ch.cpu_hz, jnp.float32),
             ns=jnp.asarray(ch.num_samples, jnp.float32),
             part_sizes=self._part_sizes,
             parts_padded=self._parts_padded,
+            r0=jnp.int32(a),
         )
+        if self._eval_batches_dev is not None:
+            consts["eval"] = self._eval_batches_dev
         return consts, ctl
 
     def _host_carry(self):
@@ -313,11 +393,14 @@ class ScanRunner(FedRunner):
 
     def _device_carry(self):
         ch = self.population.channel
-        return (self.params, self.opt_state, self.comp_state,
-                jnp.asarray(self._range_sq_pop, jnp.float32),
-                jnp.asarray(ch.fading_mean, jnp.float32),
-                jnp.asarray(ch.interference, jnp.float32),
-                self._scan_key)
+        carry = (self.params, self.opt_state, self.comp_state,
+                 jnp.asarray(self._range_sq_pop, jnp.float32),
+                 jnp.asarray(ch.fading_mean, jnp.float32),
+                 jnp.asarray(ch.interference, jnp.float32),
+                 self._scan_key)
+        if self._ctl_program is not None:
+            carry = carry + (self._ctl_state,)
+        return carry
 
     # ------------------------------------------------------------------ #
     # the compiled segment
@@ -334,10 +417,23 @@ class ScanRunner(FedRunner):
         unbiased = self.participation == "unbiased"
         U, N, B = self.num_devices, self.population_size, self.batch_size
         block_fading = self.block_fading
+        program = self._ctl_program
+        twin = self._sampler_twin
+        eval_every = self.eval_every
+        in_scan_eval = "eval" in consts and eval_every > 0
+
+        def eval_acc(params):
+            """The in-scan eval head: the SAME fixed seeded batches
+            ``evaluate()`` scores, averaged (f32 vs the host's f64
+            mean-of-floats — tolerance, not bitwise)."""
+            accs = jax.vmap(
+                lambda b: self.model.accuracy(params, b))(consts["eval"])
+            return jnp.mean(accs).astype(jnp.float32)
 
         def finish(params, opt_state, comp_state, range_sq, batch, ch,
-                   cohort, weights, alpha, inclusion, key):
-            controls = {"rho": consts["rho"], "delta": consts["delta"],
+                   cohort, weights, alpha, inclusion, key,
+                   rho, delta, power, payload, r):
+            controls = {"rho": rho, "delta": delta,
                         "weights": weights, "alpha": alpha}
             if "agg_denom" in consts:
                 controls["agg_denom"] = consts["agg_denom"]
@@ -345,8 +441,8 @@ class ScanRunner(FedRunner):
                 params, opt_state, comp_state, batch, controls, key)
             range_sq = range_sq.at[cohort].set(m["range_sq"])
             delay, energy = round_accounting_dev(
-                ltfl, ch, consts["payload"], consts["rho"], consts["power"])
-            pers = packet_error_rate_dev(w, ch, consts["power"])
+                ltfl, ch, payload, rho, power)
+            pers = packet_error_rate_dev(w, ch, power)
             # unbiased: the fixed HT denominator IS the population sample
             # total — read it from consts (per-lane under run_sweep, where
             # every replica's population draws a different total), never
@@ -354,10 +450,19 @@ class ScanRunner(FedRunner):
             gkw = ({"inclusion": inclusion,
                     "population_samples": consts["agg_denom"]}
                    if unbiased else {})
-            gm = gamma_dev(ltfl, m["range_sq"], consts["gap_delta"],
-                           consts["rho"], pers, ch.num_samples, **gkw)
+            gap_delta = jnp.where(delta > 0, delta, 32.0)
+            gm = gamma_dev(ltfl, m["range_sq"], gap_delta,
+                           rho, pers, ch.num_samples, **gkw)
+            if in_scan_eval:
+                acc = jax.lax.cond(r % eval_every == 0, eval_acc,
+                                   lambda p: jnp.float32(jnp.nan), params)
+            else:
+                acc = jnp.float32(jnp.nan)
             log = RoundLog(train_loss=m["loss"], delay=delay, energy=energy,
-                           received=jnp.sum(alpha), gamma=gm, cohort=cohort)
+                           received=jnp.sum(alpha), gamma=gm, cohort=cohort,
+                           test_acc=acc, rho_mean=jnp.mean(rho),
+                           delta_mean=jnp.mean(delta),
+                           power_mean=jnp.mean(power))
             return params, opt_state, comp_state, range_sq, log
 
         if xs is not None:               # host rng: stacked replay inputs
@@ -369,61 +474,83 @@ class ScanRunner(FedRunner):
                 params, opt_state, comp_state, range_sq, log = finish(
                     params, opt_state, comp_state, range_sq, batch, ch,
                     x["cohort"], x["weights"], x["alpha"],
-                    x.get("inclusion"), x["key"])
+                    x.get("inclusion"), x["key"],
+                    consts["rho"], consts["delta"], consts["power"],
+                    consts["payload"], jnp.int32(0))
                 return (params, opt_state, comp_state, range_sq), log
 
             return jax.lax.scan(body, carry, xs)
 
         # device rng: carried key stream, everything drawn in-scan
-        def body_dev(carry, _):
-            (params, opt_state, comp_state, range_sq,
-             fading, interference, key) = carry
-            key, k_fade, k_cohort, k_batch, k_alpha, k_step = \
-                jax.random.split(key, 6)
+        def body_dev(carry, r):
+            if program is not None:
+                (params, opt_state, comp_state, range_sq,
+                 fading, interference, key, ctl_state) = carry
+            else:
+                (params, opt_state, comp_state, range_sq,
+                 fading, interference, key) = carry
+                ctl_state = None
+            key, k_fade, k_cohort, k_batch, k_alpha, k_step, k_ctl = \
+                jax.random.split(key, 7)
             if block_fading:
                 # eager full-population redraw: O(N) vectorized on device
                 # (the host loop's LAZY per-cohort refresh is a host-side
                 # optimization; the realized distributions match)
                 fading, interference = draw_fading_dev(w, k_fade, N)
-            if U == N:
-                cohort = jnp.arange(N, dtype=jnp.int32)
-            else:
-                cohort = jnp.sort(jax.random.choice(
-                    k_cohort, N, (U,), replace=False)).astype(jnp.int32)
-            ch = ChannelArrays(
-                distance=jnp.take(consts["distance"], cohort),
-                fading_mean=jnp.take(fading, cohort),
-                interference=jnp.take(interference, cohort),
-                cpu_hz=jnp.take(consts["cpu"], cohort),
-                num_samples=jnp.take(consts["ns"], cohort))
+            ch_pop = ChannelArrays(
+                distance=consts["distance"], fading_mean=fading,
+                interference=interference, cpu_hz=consts["cpu"],
+                num_samples=consts["ns"])
+            # the sampler twin sees the round's CURRENT realization —
+            # in-scan scheduling tracks fading at per-round cadence
+            cohort, pi = twin.select(ch_pop, k_cohort)
+            ch = ch_pop.take(cohort)
             sizes = jnp.take(consts["part_sizes"], cohort)
             draws = jax.random.randint(k_batch, (U, B), 0, sizes[:, None])
             gidx = jnp.take_along_axis(
                 jnp.take(consts["parts_padded"], cohort, axis=0),
                 draws, axis=1)
             batch = {k: arr[gidx] for k, arr in data.items()}
-            alpha = sample_transmissions_dev(w, ch, consts["power"], k_alpha)
+            if program is not None:
+                dctl, ctl_state = program.controls(
+                    ctl_state, r, cohort, ch, jnp.take(range_sq, cohort),
+                    k_ctl)
+                rho, delta, power, payload = dctl
+            else:
+                rho, delta, power, payload = (
+                    consts["rho"], consts["delta"], consts["power"],
+                    consts["payload"])
+            alpha = sample_transmissions_dev(w, ch, power, k_alpha)
             if unbiased:
-                pi = jnp.float32(U / N)   # UniformSampler's exact pi
-                weights, inclusion = ch.num_samples / pi, jnp.full((U,), pi)
+                weights, inclusion = ch.num_samples / pi, pi
             else:
                 weights, inclusion = ch.num_samples, None
             params, opt_state, comp_state, range_sq, log = finish(
                 params, opt_state, comp_state, range_sq, batch, ch,
-                cohort, weights, alpha, inclusion, k_step)
-            return (params, opt_state, comp_state, range_sq,
-                    fading, interference, key), log
+                cohort, weights, alpha, inclusion, k_step,
+                rho, delta, power, payload, r)
+            if program is not None and program.feedback is not None:
+                ctl_state = program.feedback(ctl_state, cohort,
+                                             log.train_loss, log.delay)
+            out = (params, opt_state, comp_state, range_sq,
+                   fading, interference, key)
+            if program is not None:
+                out = out + (ctl_state,)
+            return out, log
 
-        return jax.lax.scan(body_dev, carry, None, length=length)
+        rounds = consts["r0"] + jnp.arange(length, dtype=jnp.int32)
+        return jax.lax.scan(body_dev, carry, rounds)
 
     # ------------------------------------------------------------------ #
     # post-segment host absorption
     # ------------------------------------------------------------------ #
     def _absorb_segment(self, a: int, b: int, ctl, carry, log) -> None:
         """Pull the segment's carry/log back to host state and append the
-        per-round ``RoundRecord``s (cum sums in f64, eval at the segment's
-        final round when due — segmentation guarantees eval rounds are
-        segment-final)."""
+        per-round ``RoundRecord``s (cum sums in f64). Under host control,
+        eval runs here, at the segment's final round when due —
+        segmentation guarantees eval rounds are segment-final; under
+        device control the in-scan eval head already measured it and the
+        accuracy is read off the log."""
         self.params, self.opt_state, self.comp_state = carry[:3]
         range_sq = np.asarray(carry[3], np.float64)
         cohorts = np.asarray(log.cohort, np.int64)
@@ -433,6 +560,12 @@ class ScanRunner(FedRunner):
         if self.rng == "device":
             fading, interference, key = carry[4], carry[5], carry[6]
             self._scan_key = key
+            if self._ctl_program is not None:
+                self._ctl_state = carry[7]
+                if self._ctl_program.absorb is not None:
+                    self._ctl_program.absorb(
+                        self.scheme,
+                        jax.tree_util.tree_map(np.asarray, carry[7]))
             ch = self.population.channel
             ch.fading_mean[:] = np.asarray(fading, np.float64)
             ch.interference[:] = np.asarray(interference, np.float64)
@@ -451,33 +584,50 @@ class ScanRunner(FedRunner):
         energies = np.asarray(log.energy, np.float64)
         received = np.asarray(log.received, np.float64)
         gammas = np.asarray(log.gamma, np.float64)
+        accs = np.asarray(log.test_acc, np.float64)
+        rho_means = np.asarray(log.rho_mean, np.float64)
+        delta_means = np.asarray(log.delta_mean, np.float64)
+        power_means = np.asarray(log.power_mean, np.float64)
+        device_ctl = self.control == "device"
+        # a control program's feedback IS the scheme's post_round, traced
+        # — calling both would double-apply it
+        in_scan_feedback = (self._ctl_program is not None
+                            and self._ctl_program.feedback is not None)
         partial = self.cohort_size < self.population_size
         for i, r in enumerate(range(a, b)):
             self._cum_delay += float(delays[i])
             self._cum_energy += float(energies[i])
             eval_due = bool(self.eval_every and r % self.eval_every == 0)
-            assert not eval_due or i == (b - a - 1), \
-                "segmentation must end segments at eval rounds"
+            if device_ctl:
+                test_acc = float(accs[i])
+            else:
+                assert not eval_due or i == (b - a - 1), \
+                    "segmentation must end segments at eval rounds"
+                test_acc = self.evaluate() if eval_due else float("nan")
             rec = RoundRecord(
                 round=r,
                 train_loss=float(losses[i]),
-                test_acc=self.evaluate() if eval_due else float("nan"),
+                test_acc=test_acc,
                 delay=float(delays[i]),
                 energy=float(energies[i]),
                 cum_delay=self._cum_delay,
                 cum_energy=self._cum_energy,
                 received=int(received[i]),
                 gamma=float(gammas[i]),
-                rho_mean=float(np.mean(ctl.rho)),
-                delta_mean=float(np.mean(ctl.delta)),
-                power_mean=float(np.mean(ctl.power)),
+                rho_mean=(float(rho_means[i]) if ctl is None
+                          else float(np.mean(ctl.rho))),
+                delta_mean=(float(delta_means[i]) if ctl is None
+                            else float(np.mean(ctl.delta))),
+                power_mean=(float(power_means[i]) if ctl is None
+                            else float(np.mean(ctl.power))),
                 cohort=cohorts[i].tolist() if partial else [],
                 participation=self.cohort_size / self.population_size,
             )
             self.history.append(rec)
-            self.scheme.post_round(r, {"train_loss": rec.train_loss,
-                                       "delay": rec.delay,
-                                       "test_acc": rec.test_acc})
+            if not in_scan_feedback:
+                self.scheme.post_round(r, {"train_loss": rec.train_loss,
+                                           "delay": rec.delay,
+                                           "test_acc": rec.test_acc})
 
     # ------------------------------------------------------------------ #
     # the public loop
@@ -494,12 +644,13 @@ class ScanRunner(FedRunner):
 
     def run(self, num_rounds: int, log_every: int = 0) -> List[RoundRecord]:
         if self.eval_every == 1 and self.max_segment != 1 \
-                and num_rounds > 1:
+                and num_rounds > 1 and self.control == "host":
             warnings.warn(
                 "ScanRunner with eval_every=1 (the FedRunner default) "
                 "evaluates after every round, so every scanned segment "
-                "has length 1 and nothing is amortized; pass eval_every=0 "
-                "or an eval cadence of k rounds", stacklevel=2)
+                "has length 1 and nothing is amortized; pass eval_every=0, "
+                "an eval cadence of k rounds, or control='device' (the "
+                "in-scan eval head)", stacklevel=2)
         self._ensure_device_world()
         # round numbering restarts at 0 on every run() call, exactly like
         # FedRunner.run (history keeps appending; eval cadence and LTFL's
@@ -527,13 +678,17 @@ class ScanRunner(FedRunner):
         batched: each segment executes as one jitted
         ``vmap``-over-replicas scan, so an S-seed scheme-comparison curve
         costs one compile per segment length. Host work between segments
-        (Algorithm 1, eval) runs per replica.
+        (Algorithm 1 under host control, eval) runs per replica.
 
         ``seeds`` seed each replica's np_rng / device population /
         partitions / key stream (this runner's own state is untouched).
         ``scheme_factory`` builds each replica's scheme; the default
         deep-copies this runner's scheme as constructed (pre-setup).
         Returns one ``RoundRecord`` history per seed.
+
+        NOTE under ``control="device"`` a cadence-k control program's
+        ``lax.cond`` lowers to a select inside this vmap, so every lane
+        pays the Algorithm-1 solve every round regardless of k.
         """
         if scheme_factory is None:
             proto = self._scheme_proto
@@ -548,6 +703,7 @@ class ScanRunner(FedRunner):
             kw["seed"] = int(s)
             lane = ScanRunner(c["model"], c["params"], c["ltfl"], c["train"],
                               c["test"], scheme_factory(), rng=self.rng,
+                              control=self.control,
                               max_segment=self.max_segment, **kw)
             lane._eval_fn = self._eval_fn      # share the jitted eval
             lanes.append(lane)

@@ -24,8 +24,17 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.control import (
+    ControlProgram,
+    DeviceControls,
+    optimal_delta_dev,
+    optimal_rho_dev,
+    solve_dev,
+)
 from repro.core import controller as controller_mod
 from repro.core.channel import packet_error_rate
 from repro.core.compressors import (
@@ -35,6 +44,7 @@ from repro.core.compressors import (
     sign_compressor,
     stc_compressor,
 )
+from repro.core.quantization import payload_bits
 
 
 @dataclass
@@ -53,10 +63,11 @@ class BaseScheme:
     uses_prune = False    # engine builds the prune stage only when True
     # the scanned engine (repro.fed.scan_engine) folds whole segments of
     # rounds into one compiled lax.scan; that requires the scheme's
-    # controls to be constant within a segment and its feedback hooks to
-    # tolerate running once per segment instead of once per round.
-    # Schemes that need per-round HOST feedback (FedMP's bandit) set this
-    # False and stay on the per-round FedRunner loop.
+    # controls to be constant within a segment (declare the cadence via
+    # scan_recontrol_every) or recomputable in-scan (scan_control_program,
+    # the control="device" path — how FedMP's per-round bandit scans).
+    # A scheme that can do neither sets this False and stays on the
+    # per-round FedRunner loop.
     scan_supported = True
 
     def setup(self, runner) -> None:
@@ -68,6 +79,15 @@ class BaseScheme:
         0 => controls are constant for the whole run (stateless schemes
         scan arbitrarily long segments)."""
         return 0
+
+    def scan_control_program(self, runner):
+        """Device-control support (``ScanRunner(control="device")``): a
+        ``repro.control.ControlProgram`` that recomputes this scheme's
+        controls INSIDE the scanned segment (traced, per round), or None
+        when the scheme has no device twin of its control loop. Schemes
+        whose ``scan_recontrol_every`` is 0 never need one — constant
+        controls are segment constants either way."""
+        return None
 
     def compressor(self, *, use_kernels: bool = False) -> Compressor:
         """The scheme's jit-able compression stage (default: identity)."""
@@ -174,6 +194,69 @@ class LTFLScheme(BaseScheme):
         xi = self.runner.ltfl.xi_bits
         return (v * ctl.delta + xi) * (1.0 - ctl.rho)        # Eq. 18/32
 
+    def scan_control_program(self, runner) -> ControlProgram:
+        """The device-resident Algorithm 1: ``solve_dev`` (closed-form
+        Theorems 2/3 + traced BO power control) re-solves in-scan against
+        the round's OWN channel realization and cohort — per-round
+        recontrol without a segment boundary, the thing the host
+        controller structurally cannot do under ``rng="device"``.
+
+        Ablation switches mirror ``controls``: the decision is always the
+        full Algorithm-1 solve (or, with ``use_power=False``, the
+        closed-form pass at fixed mid power) and prune/quant are zeroed
+        afterward. The carried state is simply the last decision, so a
+        cadence k > 1 keeps controls fixed between recontrol rounds
+        (``lax.cond`` — note ``run_sweep``'s vmap turns that cond into a
+        select, i.e. sweeps pay the solve every round)."""
+        ltfl = runner.ltfl
+        w = ltfl.wireless
+        v = runner.num_params
+        u = runner.num_devices
+        rc = self.scan_recontrol_every(runner)
+        use_prune = self.uses_prune
+        use_quant = self.use_quant
+        use_power = self.use_power
+
+        def decide(ch, range_sq, key) -> DeviceControls:
+            if use_power:
+                d = solve_dev(ltfl, ch, v, range_sq, key)
+                rho_full, delta_full, power = d.rho, d.delta, d.power
+            else:
+                # fixed mid power, closed-form rho/delta only (the host
+                # _solve's no-power path, traced)
+                power = jnp.full((u,), jnp.float32(0.5 * w.p_max))
+                payload0 = payload_bits(v, jnp.float32(ltfl.delta_max),
+                                        ltfl.xi_bits)
+                rho_full = optimal_rho_dev(ltfl, ch, payload0, power)
+                delta_full = optimal_delta_dev(ltfl, ch, rho_full, power,
+                                               v)
+            rho = rho_full if use_prune else jnp.zeros_like(rho_full)
+            delta = delta_full if use_quant else jnp.zeros_like(rho_full)
+            if use_quant:   # Eq. 18/32 via the shared payload formula
+                payload = payload_bits(v, delta, ltfl.xi_bits) \
+                    * (1.0 - rho)
+            else:
+                payload = 32.0 * jnp.float32(v) * (1.0 - rho)
+            return DeviceControls(rho=rho, delta=delta, power=power,
+                                  payload=payload)
+
+        zeros = jnp.zeros((u,), jnp.float32)
+        init = DeviceControls(
+            rho=zeros, delta=zeros,
+            power=jnp.full((u,), jnp.float32(0.5 * (w.p_min + w.p_max))),
+            payload=zeros)   # overwritten at the first recontrol round
+
+        def controls(state, r, cohort, ch, range_sq, key):
+            if rc <= 1:          # per-round recontrol: no cond needed
+                ctl = decide(ch, range_sq, key)
+            else:
+                ctl = jax.lax.cond(r % rc == 0,
+                                   lambda: decide(ch, range_sq, key),
+                                   lambda: state)
+            return ctl, ctl
+
+        return ControlProgram(init=init, controls=controls)
+
 
 class FedSGDScheme(BaseScheme):
     """McMahan et al. 2017: full-precision gradients, no compression."""
@@ -220,11 +303,19 @@ class FedMPScheme(BaseScheme):
 
     Bandit state is POPULATION-indexed: each registered device keeps its
     own UCB counters across rounds, and only this round's cohort pulls an
-    arm — a device resumes its bandit where it left off when rescheduled."""
+    arm — a device resumes its bandit where it left off when rescheduled.
+
+    Scanning: the bandit needs per-round feedback, so controls change
+    every round (``scan_recontrol_every = 1``). Under
+    ``ScanRunner(control="host")`` that degenerates every segment to
+    length 1 — correct (the host bandit updates between segments exactly
+    as ``FedRunner`` updates it between rounds) but unamortized; under
+    ``control="device"`` the (N, A) counts/values ride the scan carry as
+    a jnp pytree (``scan_control_program``) and whole segments scan with
+    the bandit updating in-scan."""
 
     name = "fedmp"
     uses_prune = True
-    scan_supported = False   # the UCB bandit needs per-round host feedback
 
     def __init__(self, arms=(0.0, 0.125, 0.25, 0.375, 0.5), ucb_c=1.0):
         self.arms = np.asarray(arms)
@@ -255,6 +346,72 @@ class FedMPScheme(BaseScheme):
 
     def payload_bits(self, ctl):
         return self._full_bits(ctl.rho)
+
+    def scan_recontrol_every(self, runner) -> int:
+        return 1          # the bandit re-decides (and learns) every round
+
+    def scan_control_program(self, runner) -> ControlProgram:
+        """The UCB bandit as a carried jnp pytree: (N, A) counts/values
+        plus the running prev-loss, updated in-scan by ``feedback`` (the
+        traced ``post_round`` twin — same argmin-unexplored / argmax-UCB
+        arm rule, same loss-decrease-per-delay reward). ``absorb`` writes
+        the final carried state back into the host scheme so the bandit
+        is inspectable (and resumable by a host-control run) after a
+        scanned segment. ``_choice`` is NOT synced (the last cohort's
+        arms live only in the carried state)."""
+        arms = jnp.asarray(self.arms, jnp.float32)
+        ucb_c = jnp.float32(self.ucb_c)
+        u = runner.num_devices
+        v = runner.num_params
+        p_mid = jnp.full((u,), jnp.float32(0.5 * runner.ltfl.wireless.p_max))
+        zeros = jnp.zeros((u,), jnp.float32)
+
+        init = {
+            "counts": jnp.asarray(self._counts, jnp.float32),
+            "rewards": jnp.asarray(self._rewards, jnp.float32),
+            "choice": jnp.zeros((u,), jnp.int32),
+            "prev_loss": jnp.float32(self._prev_loss or 0.0),
+            "has_prev": jnp.float32(0.0 if self._prev_loss is None
+                                    else 1.0),
+        }
+
+        def controls(state, r, cohort, ch, range_sq, key):
+            c = state["counts"][cohort]                       # (U, A)
+            rw = state["rewards"][cohort]
+            t = jnp.float32(r) + 1.0
+            unexplored = jnp.any(c == 0.0, axis=1)
+            mean = rw / jnp.maximum(c, 1e-12)
+            ucb = mean + ucb_c * jnp.sqrt(
+                2.0 * jnp.log(t) / jnp.maximum(c, 1e-12))
+            choice = jnp.where(unexplored,
+                               jnp.argmin(c, axis=1),
+                               jnp.argmax(ucb, axis=1)).astype(jnp.int32)
+            rho = arms[choice]
+            ctl = DeviceControls(
+                rho=rho, delta=zeros, power=p_mid,
+                payload=32.0 * jnp.float32(v) * (1.0 - rho))
+            return ctl, {**state, "choice": choice}
+
+        def feedback(state, cohort, loss, delay):
+            gain = jnp.maximum(state["prev_loss"] - loss, 0.0)
+            reward = jnp.where(state["has_prev"] > 0.0,
+                               gain / jnp.maximum(delay, 1e-9), 0.0)
+            counts = state["counts"].at[cohort, state["choice"]].add(1.0)
+            rewards = state["rewards"].at[cohort,
+                                          state["choice"]].add(reward)
+            return {**state, "counts": counts, "rewards": rewards,
+                    "prev_loss": jnp.asarray(loss, jnp.float32),
+                    "has_prev": jnp.float32(1.0)}
+
+        def absorb(scheme, state):
+            scheme._counts = np.asarray(state["counts"], np.float64)
+            scheme._rewards = np.asarray(state["rewards"], np.float64)
+            scheme._prev_loss = (float(state["prev_loss"])
+                                 if float(state["has_prev"]) > 0.0
+                                 else None)
+
+        return ControlProgram(init=init, controls=controls,
+                              feedback=feedback, absorb=absorb)
 
     def post_round(self, rnd, metrics):
         loss = metrics["train_loss"]

@@ -1,0 +1,361 @@
+"""The device-resident control plane (repro.control): the fixed-shape
+f32 BO twin pinned to the host optimizer, Theorems 2/3 + Algorithm-1
+``solve_dev`` pinned to ``controller.solve``, and the device cohort
+samplers' inclusion-probability / HT-unbiasedness contracts.
+
+The BO/controller pins INJECT the host optimizer's numpy random stream
+into the device optimizer (``BODraws``), so both run the identical
+algorithm on identical sample paths and differ only by f32-vs-f64
+arithmetic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LTFLConfig
+from repro.control import (
+    BODraws,
+    channel_aware_twin,
+    energy_aware_twin,
+    evaluate_dev,
+    make_draws,
+    minimize_dev,
+    optimal_delta_dev,
+    optimal_rho_dev,
+    solve_dev,
+    uniform_twin,
+)
+from repro.core import bayesopt, controller
+from repro.core.channel import ChannelState
+from repro.fed.population import (
+    ChannelAwareSampler,
+    EnergyAwareSampler,
+    Population,
+)
+
+LTFL = LTFLConfig(num_devices=6, samples_min=40, samples_max=60,
+                  bo_iters=3, alt_max_iters=2)
+
+
+def host_bo_draws(seed: int, alternations: int, iters: int, d: int,
+                  init_points: int = 4, n_candidates: int = 512
+                  ) -> BODraws:
+    """Replay the host optimizer's exact numpy draw order (per
+    alternation: init uniforms, then per iteration the candidate
+    uniforms followed by the 0.1-scaled local normals) into a stacked
+    ``BODraws`` with a leading alternation axis."""
+    rng = np.random.default_rng(seed)
+    ui = np.empty((alternations, init_points, d))
+    uc = np.empty((alternations, iters, n_candidates, d))
+    ep = np.empty((alternations, iters, n_candidates // 4, d))
+    for a in range(alternations):
+        ui[a] = rng.uniform(size=(init_points, d))
+        for m in range(iters):
+            uc[a, m] = rng.uniform(size=(n_candidates, d))
+            ep[a, m] = rng.normal(0.0, 0.1, size=(n_candidates // 4, d))
+    return BODraws(*(jnp.asarray(x, jnp.float32) for x in (ui, uc, ep)))
+
+
+# --------------------------------------------------------------------------- #
+# device BO vs host BO
+# --------------------------------------------------------------------------- #
+def test_minimize_dev_first_proposal_matches_host():
+    """One BO iteration on injected draws: the GP fit, acquisition and
+    argmin-z proposal agree with the f64 host optimizer (the masked
+    prefix GP is exact, not approximate)."""
+    d = 3
+    target = np.array([0.6, 0.3, 0.45])
+    bounds = np.tile([[0.0, 1.0]], (d, 1))
+
+    def hobj(pm):
+        return np.sum((np.atleast_2d(pm) - target) ** 2, -1)
+
+    def dobj(pm):
+        return jnp.sum((pm - jnp.asarray(target, jnp.float32)) ** 2, -1)
+
+    for seed in (0, 1, 2):
+        rng = np.random.default_rng(seed)
+        res = bayesopt.minimize(hobj, bounds, iters=1, rng=rng,
+                                vectorized=True)
+        draws = host_bo_draws(seed, 1, 1, d)
+        sliced = jax.tree_util.tree_map(lambda x: x[0], draws)
+        xb, yb = jax.jit(
+            lambda dr: minimize_dev(dobj, jnp.asarray(bounds), dr))(sliced)
+        np.testing.assert_allclose(np.asarray(xb), res.x_best, atol=1e-5)
+        assert float(yb) == pytest.approx(res.y_best, abs=1e-6)
+
+
+def test_minimize_dev_outcome_quality_matches_host():
+    """Longer runs: f32 near-ties in the acquisition can route the two
+    optimizers through different proposal sequences, so the pin is on
+    OUTCOME quality — both land near the quadratic's optimum with
+    comparable best values."""
+    d = 3
+    target = np.array([0.6, 0.3, 0.45])
+    bounds = np.tile([[0.0, 1.0]], (d, 1))
+
+    def hobj(pm):
+        return np.sum((np.atleast_2d(pm) - target) ** 2, -1)
+
+    def dobj(pm):
+        return jnp.sum((pm - jnp.asarray(target, jnp.float32)) ** 2, -1)
+
+    for seed in (0, 1, 2, 3):
+        rng = np.random.default_rng(seed)
+        res = bayesopt.minimize(hobj, bounds, iters=8, rng=rng,
+                                vectorized=True)
+        draws = host_bo_draws(seed, 1, 8, d)
+        sliced = jax.tree_util.tree_map(lambda x: x[0], draws)
+        xb, yb = jax.jit(
+            lambda dr: minimize_dev(dobj, jnp.asarray(bounds), dr))(sliced)
+        assert res.y_best <= 0.05          # host found the basin
+        assert float(yb) <= 0.05           # so did the twin
+        assert abs(float(yb) - res.y_best) <= 0.05
+
+
+def test_make_draws_shapes_and_determinism():
+    key = jax.random.PRNGKey(3)
+    d1 = make_draws(key, iters=5, init_points=4, n_candidates=64, d=7)
+    d2 = make_draws(key, iters=5, init_points=4, n_candidates=64, d=7)
+    assert d1.u_init.shape == (4, 7)
+    assert d1.u_cand.shape == (5, 64, 7)
+    assert d1.eps_local.shape == (5, 16, 7)
+    for a, b in zip(d1, d2):
+        np.testing.assert_array_equal(a, b)
+    assert float(d1.u_init.min()) >= 0.0 and float(d1.u_init.max()) <= 1.0
+
+
+# --------------------------------------------------------------------------- #
+# Theorems 2/3 + feasibility twins
+# --------------------------------------------------------------------------- #
+def test_theorem_twins_match_host(rng):
+    state = ChannelState.sample(LTFL.wireless, 8, 40, 60, rng)
+    arrs = state.to_arrays()
+    num_params = 3000
+    power = rng.uniform(LTFL.wireless.p_min, LTFL.wireless.p_max, 8)
+    deltas = rng.integers(1, 9, 8).astype(np.float64)
+    from repro.core.quantization import payload_bits_host
+    payload = payload_bits_host(num_params, deltas, LTFL.xi_bits)
+
+    rho_host = controller.optimal_rho(LTFL, state, payload, power)
+    rho_dev = optimal_rho_dev(LTFL, arrs,
+                              jnp.asarray(payload, jnp.float32),
+                              jnp.asarray(power, jnp.float32))
+    np.testing.assert_allclose(rho_dev, rho_host, atol=1e-5)
+
+    delta_host = controller.optimal_delta(LTFL, state, rho_host, power,
+                                          num_params)
+    delta_dev = optimal_delta_dev(LTFL, arrs, rho_dev,
+                                  jnp.asarray(power, jnp.float32),
+                                  num_params)
+    # floor() near an integer boundary may round differently in f32
+    assert np.max(np.abs(np.asarray(delta_dev) - delta_host)) <= 1
+    assert np.mean(np.asarray(delta_dev) == delta_host) >= 0.75
+
+
+def test_theorem_twins_infeasible_budget_clamps(rng):
+    """Tiny budgets: rho clamps to rho_max and delta clamps to 1 — the
+    host clamp chain, no NaNs (the fixed-shape in-scan controller cannot
+    tolerate NaN poisoning the carry)."""
+    tight = LTFLConfig(num_devices=4, samples_min=40, samples_max=60,
+                       t_max=1e-3, e_max=1e-6, server_delay=0.0)
+    state = ChannelState.sample(tight.wireless, 4, 40, 60, rng)
+    arrs = state.to_arrays()
+    power = np.full(4, tight.wireless.p_max)
+    from repro.core.quantization import payload_bits_host
+    payload = payload_bits_host(3000, np.full(4, 8.0), tight.xi_bits)
+
+    rho_dev = optimal_rho_dev(tight, arrs,
+                              jnp.asarray(payload, jnp.float32),
+                              jnp.asarray(power, jnp.float32))
+    np.testing.assert_allclose(rho_dev, np.full(4, tight.rho_max),
+                               atol=1e-6)
+    delta_dev = optimal_delta_dev(tight, arrs, rho_dev,
+                                  jnp.asarray(power, jnp.float32), 3000)
+    np.testing.assert_array_equal(np.asarray(delta_dev), np.ones(4))
+    assert not np.any(np.isnan(np.asarray(rho_dev)))
+    assert not np.any(np.isnan(np.asarray(delta_dev)))
+
+
+def test_evaluate_dev_matches_host_batched(rng):
+    state = ChannelState.sample(LTFL.wireless, 6, 40, 60, rng)
+    arrs = state.to_arrays()
+    num_params = 3000
+    rsq = rng.uniform(1.0, 50.0, 6)
+    rhos = rng.uniform(0.0, 0.4, 6)
+    deltas = rng.integers(1, 9, 6).astype(np.float64)
+    powers = rng.uniform(LTFL.wireless.p_min, LTFL.wireless.p_max, (5, 6))
+
+    g_host, f_host = controller._evaluate(LTFL, state, rsq, rhos, deltas,
+                                          powers, num_params)
+    g_dev, f_dev = evaluate_dev(
+        LTFL, arrs, jnp.asarray(rsq, jnp.float32),
+        jnp.asarray(rhos, jnp.float32), jnp.asarray(deltas, jnp.float32),
+        jnp.asarray(powers, jnp.float32), num_params)
+    assert g_dev.shape == (5,) and f_dev.shape == (5,)
+    np.testing.assert_allclose(g_dev, g_host, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(f_dev), f_host)
+
+
+# --------------------------------------------------------------------------- #
+# the full device Algorithm 1 vs the host controller
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_solve_dev_pinned_to_host_solve(seed):
+    """The acceptance pin: on seeded channels, with the host's numpy BO
+    stream injected, ``solve_dev``'s controls match ``controller.solve``
+    to f32 tolerance (in practice the controller problem's acquisition
+    landscape is well-separated, so the f32 trajectory tracks the f64
+    one point-for-point)."""
+    rng = np.random.default_rng(seed)
+    state = ChannelState.sample(LTFL.wireless, 6, 40, 60, rng)
+    num_params = 3000
+    rsq = np.full(6, 1e-2 * num_params)
+    host = controller.solve(LTFL, state, num_params, range_sq_sums=rsq,
+                            rng=np.random.default_rng(seed + 100))
+    draws = host_bo_draws(seed + 100, LTFL.alt_max_iters, LTFL.bo_iters, 6)
+    dev = jax.jit(lambda dr: solve_dev(
+        LTFL, state.to_arrays(), num_params,
+        jnp.asarray(rsq, jnp.float32), draws=dr))(draws)
+
+    np.testing.assert_allclose(np.asarray(dev.rho), host.rho, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(dev.delta),
+                                  host.delta.astype(np.float64))
+    np.testing.assert_allclose(np.asarray(dev.power), host.power,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(dev.per), host.per, atol=1e-6)
+    assert float(dev.gamma) == pytest.approx(host.gamma, rel=1e-4)
+
+
+def test_solve_dev_key_mode_runs_and_is_deterministic():
+    """The production path (in-scan): draws generated from a jax key.
+    Same key -> same decision; decisions are feasible-shaped (rho within
+    [0, rho_max], delta integer-valued in [1, delta_max])."""
+    rng = np.random.default_rng(5)
+    state = ChannelState.sample(LTFL.wireless, 6, 40, 60, rng)
+    f = jax.jit(lambda k: solve_dev(LTFL, state.to_arrays(), 3000,
+                                    key=k))
+    d1 = f(jax.random.PRNGKey(9))
+    d2 = f(jax.random.PRNGKey(9))
+    np.testing.assert_array_equal(np.asarray(d1.power),
+                                  np.asarray(d2.power))
+    rho = np.asarray(d1.rho)
+    delta = np.asarray(d1.delta)
+    assert np.all((rho >= 0.0) & (rho <= LTFL.rho_max))
+    assert np.all((delta >= 1.0) & (delta <= LTFL.delta_max))
+    np.testing.assert_array_equal(delta, np.round(delta))
+    with pytest.raises(ValueError, match="exactly one"):
+        solve_dev(LTFL, state.to_arrays(), 3000)
+
+
+# --------------------------------------------------------------------------- #
+# device cohort-sampler twins
+# --------------------------------------------------------------------------- #
+def _population(rng, n=10):
+    return Population.sample(LTFL.wireless, n, 40, 60, rng)
+
+
+def test_uniform_twin_properties(rng):
+    pop = _population(rng, 12)
+    twin = uniform_twin(12, 4)
+    assert twin.provides_inclusion
+    cohort, pi = jax.jit(twin.select)(pop.channel.to_arrays(),
+                                      jax.random.PRNGKey(0))
+    c = np.asarray(cohort)
+    assert c.shape == (4,) and len(np.unique(c)) == 4
+    assert np.all(np.diff(c) > 0)
+    np.testing.assert_allclose(np.asarray(pi), 4 / 12)
+    # U == N: identity cohort, pi = 1 (the host fast path)
+    full = uniform_twin(12, 12)
+    cohort, pi = full.select(pop.channel.to_arrays(),
+                             jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(cohort), np.arange(12))
+    np.testing.assert_allclose(np.asarray(pi), 1.0)
+
+
+def test_channel_aware_twin_matches_host_top_u(rng):
+    """No explore: deterministic top-U by expected rate — identical
+    cohort to the host ``ChannelAwareSampler`` on the same realization."""
+    pop = _population(rng, 10)
+    host = ChannelAwareSampler()
+    idx_host, probs = host.select(pop, 4, 0, rng, LTFL)
+    assert probs is None
+    twin = channel_aware_twin(10, 4, LTFL)
+    assert not twin.provides_inclusion
+    cohort, pi = jax.jit(twin.select)(pop.channel.to_arrays(),
+                                      jax.random.PRNGKey(0))
+    assert pi is None
+    np.testing.assert_array_equal(np.asarray(cohort), idx_host)
+
+
+def test_channel_aware_twin_explore_slots(rng):
+    pop = _population(rng, 10)
+    twin = channel_aware_twin(10, 4, LTFL, explore=0.25)
+    seen = set()
+    for s in range(32):
+        cohort, _ = jax.jit(twin.select)(pop.channel.to_arrays(),
+                                         jax.random.PRNGKey(s))
+        c = np.asarray(cohort)
+        assert c.shape == (4,) and len(np.unique(c)) == 4
+        assert np.all((c >= 0) & (c < 10))
+        seen.update(c.tolist())
+    # the explore slot must reach devices outside the deterministic top-4
+    host_top, _ = ChannelAwareSampler().select(pop, 3, 0, rng, LTFL)
+    assert len(seen - set(host_top.tolist())) > 1
+
+
+def test_energy_twin_empirical_inclusion_matches_first_order_pi(rng):
+    """The satellite pin: Gumbel-top-k's EMPIRICAL per-device inclusion
+    frequency tracks the host ``EnergyAwareSampler``'s first-order
+    pi_i ~ min(1, U w_i) report. (pi is itself a first-order
+    approximation of the true without-replacement inclusion, so the
+    tolerance covers approximation + sampling error.)"""
+    pop = _population(rng, 10)
+    sampler = EnergyAwareSampler()
+    w = sampler._norm_weights(pop, LTFL)
+    pi_first_order = np.clip(3 * w, 1e-9, 1.0)
+
+    twin = energy_aware_twin(LTFL, 3)
+    assert twin.provides_inclusion
+    arrs = pop.channel.to_arrays()
+    draws = 4000
+    keys = jax.random.split(jax.random.PRNGKey(1), draws)
+    cohorts, pis = jax.jit(jax.vmap(
+        lambda k: twin.select(arrs, k)))(keys)
+    cohorts = np.asarray(cohorts)
+    counts = np.bincount(cohorts.ravel(), minlength=10)
+    empirical = counts / draws
+    np.testing.assert_allclose(empirical, pi_first_order, atol=0.05)
+    # the reported pi is exactly the first-order formula at the cohort
+    np.testing.assert_allclose(
+        np.asarray(pis)[0], pi_first_order[cohorts[0]], rtol=1e-5)
+    # the twin's weights agree with the host sampler's cached vector
+    # (same headroom formula, f32 vs f64)
+    for row in cohorts[:50]:
+        assert len(np.unique(row)) == 3          # without replacement
+
+
+@pytest.mark.parametrize("make_twin", [
+    lambda: uniform_twin(10, 3),
+    lambda: energy_aware_twin(LTFL, 3),
+], ids=["uniform", "energy"])
+def test_ht_unbiasedness_under_device_samplers(rng, make_twin):
+    """The ``participation="unbiased"`` contract: the Horvitz-Thompson
+    estimator sum_{i in S} x_i / pi_i built from the twin's reported
+    inclusion probabilities is (approximately) unbiased for the
+    population total — exactly for the uniform twin's exact pi, to
+    first-order approximation error for the energy twin."""
+    pop = _population(rng, 10)
+    x = rng.uniform(1.0, 2.0, 10)
+    twin = make_twin()
+    arrs = pop.channel.to_arrays()
+    draws = 4000
+    keys = jax.random.split(jax.random.PRNGKey(2), draws)
+    cohorts, pis = jax.jit(jax.vmap(
+        lambda k: twin.select(arrs, k)))(keys)
+    cohorts, pis = np.asarray(cohorts), np.asarray(pis, np.float64)
+    ht = np.sum(x[cohorts] / pis, axis=1)
+    total = float(np.sum(x))
+    # sampling std of the mean is ~ total / sqrt(draws); allow ~4 sigma
+    # plus the energy twin's first-order-pi bias
+    assert float(np.mean(ht)) == pytest.approx(total, rel=0.08)

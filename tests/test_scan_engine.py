@@ -271,21 +271,214 @@ def test_device_mode_partial_participation(world, participation):
 
 def test_scan_guards(world):
     model, params, train, test = world
-    with pytest.raises(ValueError, match="per-round host feedback"):
-        ScanRunner(model, params, LTFL, train, test, FedMPScheme(),
-                   batch_size=8, seed=0)
-    with pytest.raises(ValueError, match="host-only"):
+
+    class HostOnlySampler(UniformSampler):
+        """A scheduler with no traced twin (device_twin -> None)."""
+
+        def device_twin(self, runner):
+            return None
+
+    class HostControlledScheme(FedSGDScheme):
+        """Controls change every other round but only the host knows how
+        (no scan_control_program)."""
+
+        def scan_recontrol_every(self, runner):
+            return 2
+
+    # samplers without a device twin are rejected with a clear error
+    with pytest.raises(ValueError, match="device_twin"):
         ScanRunner(model, params, LTFL, train, test, FedSGDScheme(),
                    batch_size=8, seed=0, rng="device",
                    population_size=12, cohort_size=4,
-                   cohort_sampler=ChannelAwareSampler())
+                   cohort_sampler=HostOnlySampler())
     with pytest.raises(ValueError, match="rng="):
         ScanRunner(model, params, LTFL, train, test, FedSGDScheme(),
                    batch_size=8, seed=0, rng="np")
+    # host recontrol cannot see a cohort drawn in-scan...
     with pytest.raises(ValueError, match="recontrol"):
         ScanRunner(model, params, LTFL, train, test,
                    LTFLScheme(recontrol_every=1), batch_size=8, seed=0,
                    rng="device", population_size=12, cohort_size=4)
+    # ...device control requires the device rng stream...
+    with pytest.raises(ValueError, match="rng='device'"):
+        ScanRunner(model, params, LTFL, train, test,
+                   LTFLScheme(recontrol_every=1), batch_size=8, seed=0,
+                   control="device")
+    with pytest.raises(ValueError, match="control="):
+        ScanRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                   batch_size=8, seed=0, rng="device", control="auto")
+    # ...and a scheme whose controls change in-scan must supply a program
+    with pytest.raises(ValueError, match="scan_control_program"):
+        ScanRunner(model, params, LTFL, train, test,
+                   HostControlledScheme(), batch_size=8, seed=0,
+                   rng="device", control="device")
+    # deterministic device schedulers define no inclusion probabilities
+    with pytest.raises(ValueError, match="inclusion"):
+        ScanRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                   batch_size=8, seed=0, rng="device",
+                   population_size=12, cohort_size=4,
+                   cohort_sampler=ChannelAwareSampler(),
+                   participation="unbiased")
+
+
+# --------------------------------------------------------------------------- #
+# device control plane (control="device"): in-scan recontrol + eval head
+# --------------------------------------------------------------------------- #
+def test_device_control_single_segment_compile_counter(world):
+    """The acceptance pin: LTFL with recontrol_every=1 — the config that
+    degenerates host-control segmentation to length 1 — runs R rounds as
+    ONE scanned segment under control='device', with in-scan eval, and
+    pays exactly one trace (re-runs of the same length reuse it)."""
+    model, params, train, test = world
+    scan = ScanRunner(model, params, LTFL, train, test,
+                      LTFLScheme(recontrol_every=1), batch_size=8, seed=0,
+                      eval_every=2, rng="device", control="device",
+                      block_fading=True)
+    assert scan._segment_spans(0, 6) == [(0, 6)]
+    hist = scan.run(6)
+    assert scan._n_traces == 1
+    scan.run(6)                       # same length: cached executable
+    assert scan._n_traces == 1
+    assert len(scan.history) == 12
+    for rec in hist:
+        assert np.isfinite(rec.train_loss) and np.isfinite(rec.gamma)
+        assert 1.0 <= rec.delta_mean <= LTFL.delta_max
+        assert 0.0 <= rec.rho_mean <= LTFL.rho_max
+        assert LTFL.wireless.p_min <= rec.power_mean <= LTFL.wireless.p_max
+    # eval cadence: in-scan eval lands exactly where the host head would
+    assert np.isfinite(hist[0].test_acc) and np.isfinite(hist[2].test_acc)
+    assert np.isnan(hist[1].test_acc) and np.isnan(hist[3].test_acc)
+    # per-round recontrol under block fading actually tracks the channel
+    powers = [rec.power_mean for rec in hist]
+    assert len(set(np.round(powers, 6))) > 1
+
+
+def test_device_control_coalesces_planner_spans(world):
+    """The planner fix: boundaries that force length-1 segments under
+    host control (recontrol_every=1, eval_every=1) vanish under device
+    control — one span, no stray retraces."""
+    model, params, train, test = world
+    host_ctl = ScanRunner(model, params, LTFL, train, test,
+                          LTFLScheme(recontrol_every=1), batch_size=8,
+                          seed=0, eval_every=1)
+    assert host_ctl._segment_spans(0, 4) == [(0, 1), (1, 2), (2, 3),
+                                             (3, 4)]
+    dev_ctl = ScanRunner(model, params, LTFL, train, test,
+                         LTFLScheme(recontrol_every=1), batch_size=8,
+                         seed=0, eval_every=1, rng="device",
+                         control="device")
+    assert dev_ctl._segment_spans(0, 4) == [(0, 4)]
+    # max_segment still caps the coalesced span
+    capped = ScanRunner(model, params, LTFL, train, test,
+                        LTFLScheme(recontrol_every=1), batch_size=8,
+                        seed=0, eval_every=1, rng="device",
+                        control="device", max_segment=2)
+    assert capped._segment_spans(0, 5) == [(0, 2), (2, 4), (4, 5)]
+
+
+def test_in_scan_eval_matches_host_evaluate(world):
+    """Same seed, same rng='device' stream: control='host' (eval between
+    length-2 segments) and control='device' (in-scan eval head) follow
+    the IDENTICAL key stream, so losses match bit-for-bit and the
+    in-scan accuracy matches the host ``evaluate()`` to f32 tolerance."""
+    model, params, train, test = world
+    kw = dict(batch_size=8, seed=0, eval_every=2)
+    host_eval = ScanRunner(model, params, LTFL, train, test,
+                           FedSGDScheme(), rng="device", **kw)
+    in_scan = ScanRunner(model, params, LTFL, train, test,
+                         FedSGDScheme(), rng="device", control="device",
+                         **kw)
+    h_a, h_b = host_eval.run(6), in_scan.run(6)
+    assert in_scan._n_traces == 1
+    for a, b in zip(h_a, h_b):
+        assert a.train_loss == b.train_loss
+        if np.isnan(a.test_acc):
+            assert np.isnan(b.test_acc)
+        else:
+            assert a.test_acc == pytest.approx(b.test_acc, abs=1e-6)
+
+
+def test_device_control_partial_participation_runs(world):
+    """The unlock: per-cohort Algorithm-1 recontrol under rng='device'
+    (rejected outright under control='host') runs in-scan, one segment,
+    against each round's own cohort and fading."""
+    model, params, train, test = world
+    scan = ScanRunner(model, params, LTFL, train, test, LTFLScheme(),
+                      batch_size=8, seed=0, eval_every=0,
+                      population_size=12, cohort_size=4, rng="device",
+                      control="device", block_fading=True,
+                      participation="unbiased")
+    assert scan._segment_spans(0, 5) == [(0, 5)]
+    hist = scan.run(5)
+    assert scan._n_traces == 1
+    for rec in hist:
+        cohort = np.asarray(rec.cohort)
+        assert cohort.shape == (4,) and len(np.unique(cohort)) == 4
+        assert np.isfinite(rec.gamma) and np.isfinite(rec.train_loss)
+        assert 1.0 <= rec.delta_mean <= LTFL.delta_max
+
+
+# --------------------------------------------------------------------------- #
+# FedMP scanning (the carried UCB bandit)
+# --------------------------------------------------------------------------- #
+def test_fedmp_host_control_parity_with_fedrunner(world):
+    """control='host': FedMP's per-round cadence degenerates segments to
+    length 1, and the host bandit updates between segments exactly as
+    FedRunner updates it between rounds — full seeded parity."""
+    model, params, train, test = world
+    loop = FedRunner(model, params, LTFL, train, test, FedMPScheme(),
+                     batch_size=8, seed=0, eval_every=0)
+    scan = ScanRunner(model, params, LTFL, train, test, FedMPScheme(),
+                      batch_size=8, seed=0, eval_every=0)
+    assert all(b - a == 1 for a, b in scan._segment_spans(0, 5))
+    assert_history_parity(loop.run(5), scan.run(5))
+    np.testing.assert_array_equal(loop.scheme._counts, scan.scheme._counts)
+    np.testing.assert_allclose(loop.scheme._rewards, scan.scheme._rewards,
+                               rtol=1e-6)
+
+
+def test_fedmp_device_bandit_parity_with_host_replay(world):
+    """control='device': the (N, A) bandit rides the scan carry. Replay
+    the host bandit's transition rule over the scanned history (choices
+    from state, reward = loss decrease per delay) and check the carried
+    state absorbed back into the scheme matches it."""
+    model, params, train, test = world
+    scheme = FedMPScheme()
+    scan = ScanRunner(model, params, LTFL, train, test, scheme,
+                      batch_size=8, seed=0, eval_every=0, rng="device",
+                      control="device")
+    assert scan._segment_spans(0, 6) == [(0, 6)]
+    hist = scan.run(6)
+    assert scan._n_traces == 1
+
+    # host replay of the bandit over the measured (loss, delay) history
+    arms = np.asarray(scheme.arms)
+    n, a = 4, len(arms)
+    counts = np.zeros((n, a))
+    rewards = np.zeros((n, a))
+    prev_loss = None
+    for rnd, rec in enumerate(hist):
+        choice = np.zeros(n, np.int64)
+        for u in range(n):
+            if np.any(counts[u] == 0):
+                choice[u] = int(np.argmin(counts[u]))
+            else:
+                mean = rewards[u] / counts[u]
+                ucb = mean + np.sqrt(2.0 * np.log(rnd + 1) / counts[u])
+                choice[u] = int(np.argmax(ucb))
+        assert rec.rho_mean == pytest.approx(
+            float(np.mean(arms[choice])), abs=1e-6)
+        reward = 0.0
+        if prev_loss is not None:
+            reward = max(prev_loss - rec.train_loss, 0.0) \
+                / max(rec.delay, 1e-9)
+        counts[np.arange(n), choice] += 1.0
+        rewards[np.arange(n), choice] += reward
+        prev_loss = rec.train_loss
+    np.testing.assert_array_equal(scheme._counts, counts)
+    np.testing.assert_allclose(scheme._rewards, rewards, rtol=1e-4,
+                               atol=1e-9)
+    assert scheme._prev_loss == pytest.approx(hist[-1].train_loss)
 
 
 # --------------------------------------------------------------------------- #
@@ -325,6 +518,25 @@ def test_run_sweep_unbiased_uses_each_lanes_population(world):
         solo_kw["seed"] = seed
         solo = ScanRunner(model, params, LTFL, train, test, FedSGDScheme(),
                           **solo_kw)
+        assert_history_parity(solo.run(3), hist, loss_exact=False)
+
+
+def test_run_sweep_device_control_matches_solo(world):
+    """Sweep lanes under control='device': the carried control state
+    (LTFL's memoized decision) stacks per lane, and each lane still
+    bit-matches its solo run."""
+    model, params, train, test = world
+    runner = ScanRunner(model, params, LTFL, train, test,
+                        LTFLScheme(recontrol_every=1), batch_size=8,
+                        seed=0, eval_every=0, rng="device",
+                        control="device")
+    hists = runner.run_sweep([0, 1], 3)
+    assert runner._n_traces == 1
+    for seed, hist in zip([0, 1], hists):
+        solo = ScanRunner(model, params, LTFL, train, test,
+                          LTFLScheme(recontrol_every=1), batch_size=8,
+                          seed=seed, eval_every=0, rng="device",
+                          control="device")
         assert_history_parity(solo.run(3), hist, loss_exact=False)
 
 
