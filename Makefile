@@ -3,16 +3,21 @@
 #   make test        — tier-1 verify: the full pytest suite with PYTHONPATH
 #                      handled (same command the PR driver runs).
 #   make bench-smoke — one tiny run of each gated benchmark (unified round
-#                      engine, population scaling, scanned engine, device
-#                      control plane); writes artifacts/bench/*_smoke.json
-#                      (never the committed baselines).
+#                      engine, population scaling — host and sharded,
+#                      scanned engine, device control plane); writes
+#                      artifacts/bench/*_smoke.json (never the committed
+#                      baselines).
 #   make bench-check — bench-smoke + the regression gates: fails when the
 #                      unified-engine, scanned-engine or device-control
-#                      speedup regressed >30%, or the population flat-in-N
-#                      ratio drifted >30%, vs the committed
-#                      artifacts/bench baselines.
+#                      speedup regressed >30%, or a population flat-in-N
+#                      ratio (host or sharded registry) drifted >30%, vs
+#                      the committed artifacts/bench baselines.
 #   make bench-population — the full population-scale sweep (per-round
 #                      wall clock flat in N at fixed cohort U).
+#   make bench-population-sharded — the sharded device-resident registry
+#                      sweep to N=10^6 (ScanRunner + population_sharding
+#                      over 8 virtual host devices; writes
+#                      artifacts/bench/population_sharded.json).
 #   make bench-scan  — the full scanned-vs-loop engine sweep
 #                      (U x R grid; writes artifacts/bench/scan_engine.json).
 #   make bench-device-control — the full in-scan-vs-host-recontrol sweep
@@ -22,8 +27,8 @@
 
 PY ?= python
 
-.PHONY: test bench-smoke bench-check bench-population bench-scan \
-	bench-device-control lint
+.PHONY: test bench-smoke bench-check bench-population \
+	bench-population-sharded bench-scan bench-device-control lint
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -31,6 +36,7 @@ test:
 bench-smoke:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.round_engine --smoke
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.population_scale --smoke
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.population_scale --sharded --smoke
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.scan_engine --smoke
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.device_control --smoke
 
@@ -39,6 +45,9 @@ bench-check: bench-smoke
 
 bench-population:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.population_scale
+
+bench-population-sharded:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.population_scale --sharded
 
 bench-scan:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.scan_engine

@@ -1,6 +1,6 @@
 """CI bench-regression gates for the round engines.
 
-Four gates, each comparing a fresh ``make bench-smoke`` measurement
+Five gates, each comparing a fresh ``make bench-smoke`` measurement
 against its COMMITTED baseline artifact:
 
 * **round_engine** — unified-step speedup over the legacy per-device
@@ -11,6 +11,11 @@ against its COMMITTED baseline artifact:
   SHARED by both files must not grow more than ``--tolerance`` over the
   baseline ratio (a drift above ~1 means per-round cost picked up an
   O(N) term).
+* **population_sharded** — the same flat-in-N ceiling for the SHARDED
+  device-resident registry (``ScanRunner`` + ``population_sharding``,
+  in-scan two-stage cohort draws): per-round cost must stay flat from
+  the smallest to the largest shared N, three orders of magnitude past
+  the host path's ceiling.
 * **scan_engine** — scanned-segment speedup over the per-round FedRunner
   loop (rows matched by (clients, rounds)).
 * **device_control** — in-scan Algorithm-1 recontrol
@@ -101,21 +106,22 @@ def _population_times(payload: dict) -> dict:
     return out
 
 
-def check_population(cur: dict, base: dict, tol: float) -> bool:
+def _check_population_flat(name: str, cur: dict, base: dict,
+                           tol: float) -> bool:
     """Flat-in-N ceiling: per shared U, the maxN/minN per-round ratio over
     the N values SHARED by both files must not exceed the baseline's
     ratio by more than the tolerance."""
     cur, base = _population_times(cur), _population_times(base)
     shared_u = sorted(set(cur) & set(base))
     if not shared_u:
-        print("check_regression: population_scale: no shared cohort size "
+        print(f"check_regression: {name}: no shared cohort size "
               f"between {sorted(cur)} and {sorted(base)} -> FAIL")
         return False
     ok = True
     for u in shared_u:
         ns = sorted(set(cur[u]) & set(base[u]))
         if len(ns) < 2:
-            print(f"check_regression: population_scale U={u}: fewer than "
+            print(f"check_regression: {name} U={u}: fewer than "
                   f"two shared population sizes ({ns}) -> FAIL")
             ok = False
             continue
@@ -125,11 +131,22 @@ def check_population(cur: dict, base: dict, tol: float) -> bool:
         ceiling = b * (1.0 + tol)
         good = c <= ceiling
         ok &= good
-        print(f"check_regression: population_scale U={u}: "
+        print(f"check_regression: {name} U={u}: "
               f"N={hi} vs N={lo} per-round ratio {c:.2f}x (baseline "
               f"{b:.2f}x, ceiling {ceiling:.2f}x at tolerance {tol:.0%}) "
               f"-> {'PASS' if good else 'FAIL'}")
     return ok
+
+
+def check_population(cur: dict, base: dict, tol: float) -> bool:
+    return _check_population_flat("population_scale", cur, base, tol)
+
+
+def check_population_sharded(cur: dict, base: dict, tol: float) -> bool:
+    # the committed baseline sweeps to 10^6 while the smoke stops at
+    # 10^5 for CI speed — the gate runs on the shared-N ratio, and the
+    # two sweeps are kept overlapping at N=10^4 and 10^5 (pop_sizes)
+    return _check_population_flat("population_sharded", cur, base, tol)
 
 
 def check_scan(cur: dict, base: dict, tol: float) -> bool:
@@ -156,6 +173,9 @@ GATES = {
                      check_round_engine),
     "population_scale": ("population_scale_smoke.json",
                          "population_scale.json", check_population),
+    "population_sharded": ("population_sharded_smoke.json",
+                           "population_sharded.json",
+                           check_population_sharded),
     "scan_engine": ("scan_engine_smoke.json", "scan_engine.json",
                     check_scan),
     "device_control": ("device_control_smoke.json", "device_control.json",

@@ -18,16 +18,56 @@ probabilities keep the host samplers' convention: exact U/N for uniform,
 the standard first-order approximation pi_i ~ min(1, U w_i) for the
 energy-aware weights (tests/test_device_control.py checks the empirical
 Gumbel-top-k inclusion against it).
+
+Sharded twins (the million-device registry)
+-------------------------------------------
+``sharded_*_twin`` are the ``shard_map`` variants for a population laid
+out over a 1-D ("pop",) mesh (repro.fed.population.PopulationArrays;
+``ScanRunner(population_sharding=...)``). Every draw is TWO-STAGE:
+
+1. each shard scores its own (N_pad/S,) block — uniform keys, a
+   monotone-in-rate SNR score, or Gumbel keys — masks the pad tail
+   (global index >= N) to -inf, and keeps its local ``lax.top_k``;
+2. the S*U local winners' (key, global index) pairs are all-gathered
+   and the global top-U merged on every shard.
+
+The merge is EXACT, not approximate: any member of the global top-U is
+by definition among the top-U of its own block, so it survives stage 1
+(the standard distributed top-k argument). Consequences:
+
+* uniform keys    -> exactly uniform without replacement over N
+  (a key-draw replaces ``jax.random.choice``'s O(N log N) permutation);
+* Gumbel keys     -> exactly the Gumbel-top-k weighted draw, so the
+  HT inclusion convention pi_i ~ min(1, U w_i) carries over UNCHANGED —
+  sharding redistributes the computation, not the distribution
+  (normalizing the weights only shifts every key by a constant, so the
+  per-shard keys skip the global normalizer entirely; it enters once,
+  via one ``psum``, in the reported pi);
+* the channel-aware score ranks by mean SNR p*E[h]/(I + B N0) instead
+  of the Eq.-1 rate: the Gauss-Laguerre expectation is strictly
+  increasing in SNR, so top-U by SNR IS top-U by rate, at O(N/S)
+  elementwise instead of O(64 N/S) quadrature — that substitution is
+  what holds the N=10^6 draw to ~single-digit ms on a CPU shard.
+
+Per-shard randomness folds the shard index into the round key
+(``fold_in``), so shards draw independent streams and the realized
+cohort is reproducible for a fixed (key, mesh shape) — but differs from
+the unsharded twins' stream, exactly like host-vs-device rng modes.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.channel import ChannelArrays, expected_rate_dev
+from repro.core.channel import ChannelArrays, _mean_gain_dev, _noise_dev, \
+    expected_rate_dev
 from repro.core.delay_energy import local_train_energy_dev
+from repro.launch.sharding import population_pad
 
 SelectFn = Callable[[ChannelArrays, jax.Array],
                     Tuple[jax.Array, Optional[jax.Array]]]
@@ -127,5 +167,171 @@ def energy_aware_twin(ltfl, cohort_size: int,
         cohort = jnp.sort(idx).astype(jnp.int32)
         pi = jnp.clip(u * w[cohort], 1e-9, 1.0)
         return cohort, pi
+
+    return DeviceSamplerTwin(select=select, provides_inclusion=True)
+
+
+# --------------------------------------------------------------------------- #
+# sharded twins: two-stage per-shard top-k + cross-shard merge
+# --------------------------------------------------------------------------- #
+_NEG = jnp.float32(-jnp.inf)
+
+
+def _check_mesh(num_devices: int, cohort_size: int, mesh: Mesh) -> int:
+    """Validate the (N, U, mesh) triple; returns the per-shard block."""
+    if "pop" not in mesh.axis_names:
+        raise ValueError(f"mesh axes {mesh.axis_names} have no 'pop' axis "
+                         "(use repro.launch.sharding.population_mesh)")
+    blk = population_pad(num_devices, mesh) // int(mesh.shape["pop"])
+    if cohort_size > blk:
+        raise ValueError(
+            f"cohort_size={cohort_size} exceeds the per-shard block "
+            f"{blk} (N={num_devices} over {int(mesh.shape['pop'])} "
+            "shards); stage-1 keeps U local winners per shard, so U must "
+            "fit in one block — use fewer shards")
+    return blk
+
+
+def _block_gids(blk: int) -> jax.Array:
+    """(blk,) GLOBAL indices of this shard's block (inside shard_map)."""
+    i = jax.lax.axis_index("pop").astype(jnp.int32)
+    return i * blk + jnp.arange(blk, dtype=jnp.int32)
+
+
+def _merge_topk(vals: jax.Array, gids: jax.Array, k: int) -> jax.Array:
+    """Stage 2 (inside shard_map): all-gather the S local (k,) winners
+    and take the global top-k. Ties resolve to the lowest global index
+    (shards gather in axis order, blocks are index-ordered), matching
+    the host samplers' stable descending sort."""
+    gv = jax.lax.all_gather(vals, "pop")       # (S, k)
+    gi = jax.lax.all_gather(gids, "pop")
+    _, mloc = jax.lax.top_k(gv.reshape(-1), k)
+    return gi.reshape(-1)[mloc]
+
+
+def sharded_uniform_twin(num_devices: int, cohort_size: int,
+                         mesh: Mesh) -> DeviceSamplerTwin:
+    """Sharded ``uniform_twin``: per-shard uniform keys, two-stage top-U
+    — an EXACT uniform draw without replacement (every size-U subset has
+    the same probability of holding the U largest of N i.i.d. uniform
+    keys), with exact pi = U/N, at O(N/S) per shard instead of
+    ``jax.random.choice``'s O(N log N) global permutation. U == N stays
+    the identity fast path (no key consumed)."""
+    n, u = num_devices, cohort_size
+    blk = _check_mesh(n, u, mesh)
+
+    @partial(shard_map, mesh=mesh, in_specs=P(), out_specs=P(),
+             check_rep=False)
+    def draw(key):
+        gid = _block_gids(blk)
+        noise = jax.random.uniform(
+            jax.random.fold_in(key, jax.lax.axis_index("pop")),
+            (blk,), jnp.float32)
+        keys = jnp.where(gid < n, noise, _NEG)      # pad tail never drawn
+        vals, loc = jax.lax.top_k(keys, u)
+        return _merge_topk(vals, gid[loc], u)
+
+    def select(ch_pop: ChannelArrays, key: jax.Array):
+        if u == n:
+            return jnp.arange(n, dtype=jnp.int32), jnp.ones((n,),
+                                                            jnp.float32)
+        cohort = jnp.sort(draw(key)).astype(jnp.int32)
+        return cohort, jnp.full((u,), jnp.float32(u / n))
+
+    return DeviceSamplerTwin(select=select, provides_inclusion=True)
+
+
+def sharded_channel_aware_twin(num_devices: int, cohort_size: int, ltfl,
+                               mesh: Mesh, power: Optional[float] = None,
+                               explore: float = 0.0) -> DeviceSamplerTwin:
+    """Sharded ``channel_aware_twin``: per-shard top-k on the mean-SNR
+    score p * E[h] / (I + B N0) — a strictly monotone surrogate of the
+    Eq.-1 expected rate (module docstring), so the merged top-U is the
+    host sampler's top-U by rate without the O(64 N) quadrature.
+    ``explore`` slots run a second two-stage pass over uniform keys with
+    the top set masked out — exactly uniform over the complement.
+    Deterministic selection: no inclusion probabilities."""
+    n, u = num_devices, cohort_size
+    blk = _check_mesh(n, u, mesh)
+    w = ltfl.wireless
+    p_ref = power if power is not None else 0.5 * (w.p_min + w.p_max)
+    n_explore = 0 if explore <= 0.0 else min(
+        u, max(1, round(explore * u)))
+    n_top = u - n_explore
+
+    @partial(shard_map, mesh=mesh, in_specs=(P("pop"), P()), out_specs=P(),
+             check_rep=False)
+    def draw(ch, key):
+        gid = _block_gids(blk)
+        snr = jnp.float32(p_ref) * _mean_gain_dev(ch) / _noise_dev(w, ch)
+        score = jnp.where(gid < n, snr, _NEG)
+        vals, loc = jax.lax.top_k(score, n_top)
+        top = _merge_topk(vals, gid[loc], n_top)
+        if n_explore:
+            noise = jax.random.uniform(
+                jax.random.fold_in(key, jax.lax.axis_index("pop")),
+                (blk,), jnp.float32)
+            noise = jnp.where(gid < n, noise, _NEG)
+            # mask this shard's members of the merged top set (drop-
+            # scatter at block-local indices; out-of-block -> dropped)
+            loc_top = top - jax.lax.axis_index("pop").astype(jnp.int32) * blk
+            in_blk = (loc_top >= 0) & (loc_top < blk)
+            noise = noise.at[jnp.where(in_blk, loc_top, blk)].set(
+                _NEG, mode="drop")
+            nvals, nloc = jax.lax.top_k(noise, n_explore)
+            picks = _merge_topk(nvals, gid[nloc], n_explore)
+            top = jnp.concatenate([top, picks])
+        return top
+
+    def select(ch_pop: ChannelArrays, key: jax.Array):
+        return jnp.sort(draw(ch_pop, key)).astype(jnp.int32), None
+
+    return DeviceSamplerTwin(select=select, provides_inclusion=False)
+
+
+def sharded_energy_aware_twin(ltfl, num_devices: int, cohort_size: int,
+                              mesh: Mesh, min_headroom: float = 1e-6
+                              ) -> DeviceSamplerTwin:
+    """Sharded ``energy_aware_twin``: per-shard Gumbel keys over the
+    log-headroom, two-stage top-U — EXACTLY the Gumbel-top-k weighted
+    draw without replacement (the global weight normalizer shifts every
+    key by the same constant, so shards never need it to select). The
+    normalizer enters once, via ``psum``, in the reported HT inclusion
+    probabilities — the host convention pi_i ~ min(1, U w_i), unchanged
+    by sharding; the cohort's headroom values come back through a
+    psum-gather so no shard ever materializes another's block."""
+    n, u = num_devices, cohort_size
+    blk = _check_mesh(n, u, mesh)
+    w_cfg = ltfl.wireless
+    e_max = float(ltfl.e_max)
+
+    @partial(shard_map, mesh=mesh, in_specs=(P("pop"), P()),
+             out_specs=(P(), P()), check_rep=False)
+    def draw(ch, key):
+        gid = _block_gids(blk)
+        valid = gid < n
+        head = jnp.maximum(
+            e_max - local_train_energy_dev(w_cfg, ch, jnp.float32(0.0)),
+            jnp.float32(min_headroom))
+        head = jnp.where(valid, head, 0.0)
+        total = jax.lax.psum(jnp.sum(head), "pop")
+        gumb = jax.random.gumbel(
+            jax.random.fold_in(key, jax.lax.axis_index("pop")),
+            (blk,), jnp.float32)
+        keys = jnp.where(valid,
+                         jnp.log(jnp.maximum(head, 1e-30)) + gumb, _NEG)
+        vals, loc = jax.lax.top_k(keys, u)
+        cohort = jnp.sort(_merge_topk(vals, gid[loc], u))
+        # distributed gather of the cohort's headroom for pi
+        loc_c = cohort - jax.lax.axis_index("pop").astype(jnp.int32) * blk
+        in_blk = (loc_c >= 0) & (loc_c < blk)
+        contrib = jnp.where(in_blk, head[jnp.clip(loc_c, 0, blk - 1)], 0.0)
+        head_cohort = jax.lax.psum(contrib, "pop")
+        pi = jnp.clip(u * head_cohort / total, 1e-9, 1.0)
+        return cohort, pi
+
+    def select(ch_pop: ChannelArrays, key: jax.Array):
+        cohort, pi = draw(ch_pop, key)
+        return cohort.astype(jnp.int32), pi
 
     return DeviceSamplerTwin(select=select, provides_inclusion=True)

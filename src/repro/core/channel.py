@@ -90,14 +90,27 @@ class ChannelState:
     # ------------------------------------------------------------------ #
     @classmethod
     def sample(cls, cfg: WirelessConfig, num: int, samples_min: int,
-               samples_max: int, rng: np.random.Generator) -> "ChannelState":
-        """Vectorized device sampling per Table 2 (one draw per field)."""
+               samples_max: int, rng: np.random.Generator,
+               dtype=np.float64) -> "ChannelState":
+        """Vectorized device sampling per Table 2 (one draw per field).
+
+        ``dtype`` is the storage policy for the float fields: draws always
+        consume the rng stream in float64 (so a float32 population sees
+        the exact devices a float64 one does, rounded) and are cast
+        AFTER drawing. The f64 default is the control plane's precision;
+        population-scale registries (N ~ 10^6-10^7, repro.fed.population)
+        pass float32 and halve their resident footprint — the device
+        twins consume f32 anyway.
+        """
+        dtype = np.dtype(dtype)
         return cls(
-            distance=rng.uniform(cfg.dist_min, cfg.dist_max, num),
-            fading_mean=np.full(num, cfg.fading_scale, dtype=np.float64),
+            distance=rng.uniform(cfg.dist_min, cfg.dist_max,
+                                 num).astype(dtype),
+            fading_mean=np.full(num, cfg.fading_scale, dtype=dtype),
             interference=rng.uniform(cfg.interference_min,
-                                     cfg.interference_max, num),
-            cpu_hz=rng.uniform(cfg.cpu_min, cfg.cpu_max, num),
+                                     cfg.interference_max,
+                                     num).astype(dtype),
+            cpu_hz=rng.uniform(cfg.cpu_min, cfg.cpu_max, num).astype(dtype),
             num_samples=rng.integers(samples_min, samples_max + 1, num),
         )
 
@@ -165,17 +178,22 @@ class ChannelState:
         not channel state.
         """
         fading, interference = self.draw_fading(cfg, rng, self.num_devices)
+        # draws are f64 (the rng-stream contract); storage keeps this
+        # state's dtype policy
         return dataclasses.replace(
-            self, fading_mean=fading, interference=interference)
+            self, fading_mean=fading.astype(self.fading_mean.dtype),
+            interference=interference.astype(self.interference.dtype))
 
-    def to_arrays(self) -> "ChannelArrays":
-        """Device-resident jnp twin (the scan engine's carry/consts)."""
+    def to_arrays(self, dtype=jnp.float32) -> "ChannelArrays":
+        """Device-resident jnp twin (the scan engine's carry/consts).
+        ``dtype`` is the on-device float policy (f32 default — what the
+        _dev twins compute in regardless of host storage)."""
         return ChannelArrays(
-            distance=jnp.asarray(self.distance, jnp.float32),
-            fading_mean=jnp.asarray(self.fading_mean, jnp.float32),
-            interference=jnp.asarray(self.interference, jnp.float32),
-            cpu_hz=jnp.asarray(self.cpu_hz, jnp.float32),
-            num_samples=jnp.asarray(self.num_samples, jnp.float32),
+            distance=jnp.asarray(self.distance, dtype),
+            fading_mean=jnp.asarray(self.fading_mean, dtype),
+            interference=jnp.asarray(self.interference, dtype),
+            cpu_hz=jnp.asarray(self.cpu_hz, dtype),
+            num_samples=jnp.asarray(self.num_samples, dtype),
         )
 
 

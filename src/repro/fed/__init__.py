@@ -3,7 +3,9 @@ from repro.fed.population import (
     CohortSampler,
     EnergyAwareSampler,
     Population,
+    PopulationArrays,
     UniformSampler,
+    device_population,
 )
 from repro.fed.rounds import FedRunner, RoundRecord
 from repro.fed.scan_engine import RoundLog, ScanRunner, make_scanned_step
@@ -32,6 +34,8 @@ __all__ = [
     "ScanRunner",
     "make_scanned_step",
     "Population",
+    "PopulationArrays",
+    "device_population",
     "CohortSampler",
     "UniformSampler",
     "ChannelAwareSampler",

@@ -30,24 +30,63 @@ client-scheduling literature). This module is that layer:
 (``ChannelState.take``); Algorithm 1, delay/energy and the Gamma gap run
 on the view, and the jitted train step keeps its static (U,)-shaped
 controls — changing the sampled cohort never retriggers compilation.
+
+Sharded device-resident population (the million-device registry)
+----------------------------------------------------------------
+Host numpy caps this layer at N ~ 10^4: the O(N) scheduler scan and the
+per-segment (N,) host<->device copies start to rival the compiled round.
+``PopulationArrays`` is the device twin — the (N_pad,) ``ChannelArrays``
+plus per-device fading epochs, laid out over a 1-D ("pop",) mesh
+(repro.launch.sharding.population_mesh; N_pad pads N up to equal shard
+blocks, and the pad tail is masked out of every draw). Per-round
+population work runs under ``shard_map``:
+
+* the cohort draw is TWO-STAGE: every shard ranks its own block and
+  keeps its local top-U (``lax.top_k`` for channel-aware, Gumbel keys
+  for energy-aware, uniform keys for uniform), then the S*U local
+  winners are all-gathered and the global top-U merged — exact, because
+  any global top-U member is a top-U member of its own block. Per-round
+  cost is O(N/S) elementwise + O(S*U) merge: N = 10^6 schedules at the
+  same wall clock as N = 10^3 (benchmarks/population_scale.py sharded
+  sweep);
+* the lazy block-fading refresh (``refresh_cohort_dev``) draws O(U)
+  fading/interference values and drop-scatters them into each shard's
+  block for the scheduled-and-stale members only — host ``Population``
+  semantics (schedule on stale CSI, then refresh the cohort), never an
+  O(N) redraw.
+
+The host ``Population`` stays the small-N reference: a single-shard mesh
+degenerates to the host cohort sequence (seeded-parity-tested in
+tests/test_sharded_population.py), and ``host_sync`` folds the device
+state back so post-run inspection sees exactly what ran.
 """
 from __future__ import annotations
 
 import weakref
 from dataclasses import dataclass, field
-from typing import Any, Optional, Tuple
+from functools import partial
+from typing import Any, NamedTuple, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import LTFLConfig, WirelessConfig
 from repro.control.device_samplers import (
     DeviceSamplerTwin,
     channel_aware_twin,
     energy_aware_twin,
+    sharded_channel_aware_twin,
+    sharded_energy_aware_twin,
+    sharded_uniform_twin,
     uniform_twin,
 )
-from repro.core.channel import ChannelState, expected_rate
+from repro.core.channel import ChannelArrays, ChannelState, draw_fading_dev, \
+    expected_rate
 from repro.core.delay_energy import local_train_energy
+from repro.launch.sharding import population_pad, population_sharding
 
 
 @dataclass
@@ -69,11 +108,16 @@ class Population:
 
     @classmethod
     def sample(cls, cfg: WirelessConfig, num: int, samples_min: int,
-               samples_max: int, rng: np.random.Generator) -> "Population":
+               samples_max: int, rng: np.random.Generator,
+               dtype=np.float64) -> "Population":
         """Register N devices with one vectorized Table-2 draw (identical
         rng stream to ``ChannelState.sample``, so a population of N == U
-        sees the exact devices the pre-population runner saw)."""
-        state = ChannelState.sample(cfg, num, samples_min, samples_max, rng)
+        sees the exact devices the pre-population runner saw). ``dtype``
+        is the float storage policy (draws stay on the f64 stream and
+        cast after — see ChannelState.sample); million-device registries
+        pass float32 to halve the resident footprint."""
+        state = ChannelState.sample(cfg, num, samples_min, samples_max, rng,
+                                    dtype=dtype)
         return cls(channel=state,
                    fading_epoch=np.zeros(num, dtype=np.int64))
 
@@ -115,6 +159,128 @@ class Population:
 
 
 # --------------------------------------------------------------------------- #
+# Device-resident sharded population (the scan engine's million-N registry)
+# --------------------------------------------------------------------------- #
+class PopulationArrays(NamedTuple):
+    """jnp pytree twin of ``Population``: the (N_pad,) ``ChannelArrays``
+    plus per-device fading epochs, every (N_pad,) leaf laid out over the
+    1-D ("pop",) mesh. ``epoch`` is the replicated scalar population
+    epoch (int32 — bumped per block-fading round inside the scan).
+    Indices [n, N_pad) are padding: benign copies of device 0 that every
+    sharded sampler masks out of the draw and no cohort ever contains."""
+
+    channel: ChannelArrays       # (N_pad,) leaves, sharded over 'pop'
+    fading_epoch: jax.Array      # (N_pad,) int32, sharded over 'pop'
+    epoch: jax.Array             # scalar int32, replicated
+
+
+def device_population(population: Population, mesh: Mesh,
+                      dtype=jnp.float32) -> PopulationArrays:
+    """Place a host ``Population`` on device, padded to equal per-shard
+    blocks and sharded over the mesh's 'pop' axis. One upload per run —
+    the scan carries the arrays afterwards (satellite of PR 6: no
+    per-segment (N,) round trips)."""
+    n = population.num_devices
+    n_pad = population_pad(n, mesh)
+    sh = population_sharding(mesh)
+
+    def pad(x, out_dtype):
+        a = np.asarray(x)
+        if n_pad > n:   # benign pad: repeat device 0 (masked everywhere)
+            a = np.concatenate([a, np.broadcast_to(a[0], (n_pad - n,))])
+        return jax.device_put(a.astype(out_dtype), sh)
+
+    ch = population.channel
+    channel = ChannelArrays(
+        distance=pad(ch.distance, dtype),
+        fading_mean=pad(ch.fading_mean, dtype),
+        interference=pad(ch.interference, dtype),
+        cpu_hz=pad(ch.cpu_hz, dtype),
+        num_samples=pad(ch.num_samples, dtype),
+    )
+    return PopulationArrays(
+        channel=channel,
+        fading_epoch=pad(population.fading_epoch, np.int32),
+        epoch=jnp.int32(population.epoch))
+
+
+def refresh_cohort_dev(cfg: WirelessConfig, mesh: Mesh,
+                       pop: PopulationArrays, cohort: jax.Array,
+                       key: jax.Array) -> PopulationArrays:
+    """Traced lazy block-fading refresh (the device twin of
+    ``Population.refresh_fading``): draw O(U) fading/interference values
+    (``draw_fading_dev`` — same distributions as the host path) and
+    scatter them into the scheduled devices whose realization predates
+    ``pop.epoch``. Runs under ``shard_map``: each shard translates the
+    replicated (U,) cohort into block-local indices and drop-scatters the
+    members that fall in its block — per-shard work is O(U), never O(N),
+    and the (N_pad,) leaves stay in place on their shards."""
+    new_f, new_i = draw_fading_dev(cfg, key, cohort.shape[0])
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(P("pop"), P("pop"), P("pop"), P(), P(), P(), P()),
+             out_specs=(P("pop"), P("pop"), P("pop")), check_rep=False)
+    def scatter(fading, interference, fading_epoch, coh, f, i, epoch):
+        blk = fading.shape[0]
+        loc = coh - jax.lax.axis_index("pop").astype(jnp.int32) * blk
+        in_blk = (loc >= 0) & (loc < blk)
+        stale = fading_epoch[jnp.clip(loc, 0, blk - 1)] < epoch
+        # out-of-block (and fresh) members scatter to index blk => dropped
+        idx = jnp.where(in_blk & stale, loc, blk)
+        return (fading.at[idx].set(f, mode="drop"),
+                interference.at[idx].set(i, mode="drop"),
+                fading_epoch.at[idx].set(epoch, mode="drop"))
+
+    fading, interference, fading_epoch = scatter(
+        pop.channel.fading_mean, pop.channel.interference, pop.fading_epoch,
+        cohort.astype(jnp.int32), new_f.astype(pop.channel.fading_mean.dtype),
+        new_i.astype(pop.channel.interference.dtype), pop.epoch)
+    return PopulationArrays(
+        channel=pop.channel._replace(fading_mean=fading,
+                                     interference=interference),
+        fading_epoch=fading_epoch, epoch=pop.epoch)
+
+
+def gather_cohort_dev(mesh: Mesh, channel: ChannelArrays,
+                      cohort: jax.Array) -> ChannelArrays:
+    """Traced sharded twin of ``ChannelArrays.take``: the (U,) replicated
+    cohort view out of the (N_pad,) sharded registry, via psum-gather —
+    each shard contributes the members that fall in its block (zeros
+    elsewhere) and one ``psum`` over 'pop' assembles the view. Per-shard
+    work is O(U); no shard (and no GSPMD fallback) ever materializes the
+    full (N_pad,) operand on one device. The round's (U,)-static control
+    plane then runs on the replicated view exactly as in the unsharded
+    engine."""
+
+    @partial(shard_map, mesh=mesh, in_specs=(P(None, "pop"), P()),
+             out_specs=P(), check_rep=False)
+    def gather(leaves, coh):
+        blk = leaves.shape[-1]
+        loc = coh - jax.lax.axis_index("pop").astype(jnp.int32) * blk
+        in_blk = (loc >= 0) & (loc < blk)
+        vals = leaves[:, jnp.clip(loc, 0, blk - 1)]
+        return jax.lax.psum(jnp.where(in_blk, vals, 0.0), "pop")
+
+    stacked = gather(jnp.stack(tuple(channel)),
+                     cohort.astype(jnp.int32))
+    return ChannelArrays(*stacked)
+
+
+def host_sync(population: Population, pop: PopulationArrays) -> None:
+    """Fold the device registry back into the host ``Population`` (one
+    (N,) download — called once per ``run``, not per segment): realized
+    fading/interference, per-device fading epochs and the population
+    epoch. Post-run host inspection (views, host samplers, history
+    tooling) then sees exactly the state the scan left behind."""
+    n = population.num_devices
+    ch = population.channel
+    ch.fading_mean[:] = np.asarray(pop.channel.fading_mean)[:n]
+    ch.interference[:] = np.asarray(pop.channel.interference)[:n]
+    population.fading_epoch[:] = np.asarray(pop.fading_epoch)[:n]
+    population.epoch = int(pop.epoch)
+
+
+# --------------------------------------------------------------------------- #
 # Cohort samplers (the scheduler protocol)
 # --------------------------------------------------------------------------- #
 SelectResult = Tuple[np.ndarray, Optional[np.ndarray]]
@@ -153,6 +319,20 @@ class CohortSampler:
         ``participation="unbiased"``."""
         return None
 
+    def sharded_twin(self, runner, mesh: Mesh
+                     ) -> Optional[DeviceSamplerTwin]:
+        """The shard_map'd twin for a population laid out over ``mesh``'s
+        'pop' axis (``ScanRunner(population_sharding=...)``): same
+        ``select(ch_pop, key)`` protocol, but ``ch_pop`` is the (N_pad,)
+        sharded registry and the draw is the two-stage per-shard-top-k +
+        merge (module docstring; repro.control.device_samplers). None
+        when this scheduler has no sharded twin — the runner raises at
+        construction. Sharded twins keep the host samplers' inclusion-
+        probability conventions (exact U/N uniform, first-order
+        pi ~ min(1, U w_i) energy-aware) — the merge is an exact draw
+        from the same distribution, so pi is unchanged by sharding."""
+        return None
+
 
 @dataclass
 class UniformSampler(CohortSampler):
@@ -173,6 +353,10 @@ class UniformSampler(CohortSampler):
 
     def device_twin(self, runner) -> DeviceSamplerTwin:
         return uniform_twin(runner.population_size, runner.cohort_size)
+
+    def sharded_twin(self, runner, mesh: Mesh) -> DeviceSamplerTwin:
+        return sharded_uniform_twin(runner.population_size,
+                                    runner.cohort_size, mesh)
 
 
 @dataclass
@@ -215,6 +399,11 @@ class ChannelAwareSampler(CohortSampler):
         return channel_aware_twin(runner.population_size,
                                   runner.cohort_size, runner.ltfl,
                                   power=self.power, explore=self.explore)
+
+    def sharded_twin(self, runner, mesh: Mesh) -> DeviceSamplerTwin:
+        return sharded_channel_aware_twin(
+            runner.population_size, runner.cohort_size, runner.ltfl,
+            mesh, power=self.power, explore=self.explore)
 
 
 @dataclass
@@ -268,3 +457,8 @@ class EnergyAwareSampler(CohortSampler):
         # stays correct per run_sweep lane — no host cache to transfer
         return energy_aware_twin(runner.ltfl, runner.cohort_size,
                                  min_headroom=self.min_headroom)
+
+    def sharded_twin(self, runner, mesh: Mesh) -> DeviceSamplerTwin:
+        return sharded_energy_aware_twin(
+            runner.ltfl, runner.population_size, runner.cohort_size,
+            mesh, min_headroom=self.min_headroom)

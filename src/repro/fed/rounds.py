@@ -152,7 +152,8 @@ class FedRunner:
                  population_size: Optional[int] = None,
                  cohort_size: Optional[int] = None,
                  cohort_sampler: Optional[CohortSampler] = None,
-                 participation: str = "cohort"):
+                 participation: str = "cohort",
+                 population_dtype=None):
         if participation not in ("cohort", "unbiased"):
             raise ValueError(f"participation={participation!r} "
                              "(want 'cohort' or 'unbiased')")
@@ -179,9 +180,17 @@ class FedRunner:
         self.participation = participation
         self.sampler = cohort_sampler or UniformSampler()
 
+        # float storage policy for the (N,) per-device registry: None =>
+        # f64 (the control plane's host precision, unchanged default);
+        # million-device populations pass np.float32 — the draws stay on
+        # the f64 rng stream either way (cast after drawing), so the
+        # dtype never changes WHICH devices a seed registers
+        self.population_dtype = np.dtype(
+            population_dtype if population_dtype is not None
+            else np.float64)
         self.population = Population.sample(
             ltfl.wireless, n_pop, ltfl.samples_min, ltfl.samples_max,
-            self.np_rng)
+            self.np_rng, dtype=self.population_dtype)
         self._pop_samples_total = float(
             np.sum(self.population.channel.num_samples))
         self._channel_epoch = 0

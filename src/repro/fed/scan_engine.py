@@ -85,7 +85,15 @@ from repro.core.channel import (
 )
 from repro.core.convergence import gamma_dev
 from repro.core.delay_energy import round_accounting_dev
+from repro.fed.population import (
+    PopulationArrays,
+    device_population,
+    gather_cohort_dev,
+    host_sync,
+    refresh_cohort_dev,
+)
 from repro.fed.rounds import FedRunner, RoundRecord
+from repro.launch.sharding import population_mesh, population_pad
 
 PyTree = Any
 
@@ -161,9 +169,15 @@ class ScanRunner(FedRunner):
 
     def __init__(self, model, params, ltfl, train, test, scheme, *,
                  rng: str = "host", control: str = "host",
-                 max_segment: Optional[int] = None, **kwargs):
+                 max_segment: Optional[int] = None,
+                 population_sharding=None, **kwargs):
         if rng not in ("host", "device"):
             raise ValueError(f"rng={rng!r} (want 'host' or 'device')")
+        if population_sharding is not None and rng != "device":
+            raise ValueError(
+                "population_sharding lays the device registry out over a "
+                "('pop',) mesh and draws cohorts in-scan via the sharded "
+                "sampler twins; pass rng='device'")
         if control not in ("host", "device"):
             raise ValueError(
                 f"control={control!r} (want 'host' or 'device')")
@@ -198,8 +212,32 @@ class ScanRunner(FedRunner):
                     "(no device twin of its control loop); use "
                     "control='host'")
             self._ctl_state = self._ctl_program.init
+        self._pop_mesh = None
+        self._pop_pad = None
+        if population_sharding is not None:
+            mesh = (population_mesh(population_sharding)
+                    if isinstance(population_sharding, int)
+                    else population_sharding)
+            if "pop" not in mesh.axis_names:
+                raise ValueError(
+                    f"population_sharding mesh axes {mesh.axis_names} "
+                    "have no 'pop' axis (use repro.launch.sharding."
+                    "population_mesh)")
+            self._pop_mesh = mesh
+            self._pop_pad = population_pad(self.population_size, mesh)
         if rng == "device":
-            self._sampler_twin = self.sampler.device_twin(self)
+            if self._pop_mesh is not None:
+                self._sampler_twin = self.sampler.sharded_twin(
+                    self, self._pop_mesh)
+                if self._sampler_twin is None:
+                    raise ValueError(
+                        f"population_sharding needs a sharded sampler "
+                        f"twin, but {type(self.sampler).__name__}."
+                        "sharded_twin() returned None; use an unsharded "
+                        "runner or a sampler with a sharded twin "
+                        "(repro.control.device_samplers)")
+            else:
+                self._sampler_twin = self.sampler.device_twin(self)
             if self._sampler_twin is None:
                 raise ValueError(
                     f"rng='device' draws cohorts in-scan, but "
@@ -224,6 +262,17 @@ class ScanRunner(FedRunner):
         self._parts_padded: Optional[jax.Array] = None
         self._part_sizes: Optional[jax.Array] = None
         self._eval_batches_dev: Optional[Dict[str, jax.Array]] = None
+        # persistent device-resident (N,) population state (device rng):
+        # uploaded ONCE, then carried across segments and synced back to
+        # the host population lazily at the end of run() — segment
+        # boundaries cost zero (N,) host<->device round trips
+        self._pop_dev: Optional[PopulationArrays] = None
+        self._static_consts_dev: Optional[Dict[str, jax.Array]] = None
+        self._fading_dev: Optional[jax.Array] = None
+        self._interference_dev: Optional[jax.Array] = None
+        self._range_sq_dev: Optional[jax.Array] = None
+        self._host_pop_stale = False
+        self._n_pop_uploads = 0   # (N,)-state host->device upload events
         self._n_traces = 0   # one per (segment length, single|sweep) trace
         self._seg_jit = jax.jit(self._segment, static_argnums=(3,))
         self._sweep_jit = jax.jit(
@@ -251,6 +300,26 @@ class ScanRunner(FedRunner):
                 for k in batches[0]}
         if self.rng != "device":
             return
+        if self._pop_mesh is not None and self._pop_dev is None:
+            # the sharded registry: ONE padded upload, sharded over 'pop'
+            self._pop_dev = device_population(
+                self.population, self._pop_mesh)
+            self._n_pop_uploads += 1
+        if self._static_consts_dev is None:
+            # static (N,) device attributes (distances, CPUs, shard
+            # sizes): device-resident once, never re-uploaded per segment
+            if self._pop_mesh is not None:
+                ch_dev = self._pop_dev.channel
+                self._static_consts_dev = dict(
+                    distance=ch_dev.distance, cpu=ch_dev.cpu_hz,
+                    ns=ch_dev.num_samples)
+            else:
+                ch = self.population.channel
+                self._static_consts_dev = dict(
+                    distance=jnp.asarray(ch.distance, jnp.float32),
+                    cpu=jnp.asarray(ch.cpu_hz, jnp.float32),
+                    ns=jnp.asarray(ch.num_samples, jnp.float32))
+                self._n_pop_uploads += 1
         sizes = np.asarray([p.size for p in self.batcher.parts], np.int32)
         width = int(sizes.max()) if pad_to is None else int(pad_to)
         if self._parts_padded is not None and \
@@ -374,11 +443,8 @@ class ScanRunner(FedRunner):
             consts = {}
             if agg_denom is not None:
                 consts["agg_denom"] = jnp.float32(agg_denom)
-        ch = self.population.channel
         consts.update(
-            distance=jnp.asarray(ch.distance, jnp.float32),
-            cpu=jnp.asarray(ch.cpu_hz, jnp.float32),
-            ns=jnp.asarray(ch.num_samples, jnp.float32),
+            self._static_consts_dev,     # device-resident; zero uploads
             part_sizes=self._part_sizes,
             parts_padded=self._parts_padded,
             r0=jnp.int32(a),
@@ -392,12 +458,32 @@ class ScanRunner(FedRunner):
                 jnp.asarray(self._range_sq_pop, jnp.float32))
 
     def _device_carry(self):
-        ch = self.population.channel
-        carry = (self.params, self.opt_state, self.comp_state,
-                 jnp.asarray(self._range_sq_pop, jnp.float32),
-                 jnp.asarray(ch.fading_mean, jnp.float32),
-                 jnp.asarray(ch.interference, jnp.float32),
-                 self._scan_key)
+        """The device-rng carry, built from PERSISTENT device arrays:
+        the (N,) fading/interference/range-sq state uploads once (first
+        segment ever) and afterwards the previous segment's carry leaves
+        feed the next — segment boundaries move no (N,) state across the
+        host boundary (``_n_pop_uploads`` counts upload events; the
+        host population syncs back lazily, see ``_sync_host_population``)."""
+        if self._range_sq_dev is None:
+            self._range_sq_dev = jnp.asarray(self._range_sq_pop,
+                                             jnp.float32)
+            self._n_pop_uploads += 1
+        if self._pop_mesh is not None:
+            pop = self._pop_dev
+            carry = (self.params, self.opt_state, self.comp_state,
+                     self._range_sq_dev, pop.channel.fading_mean,
+                     pop.channel.interference, pop.fading_epoch,
+                     pop.epoch, self._scan_key)
+        else:
+            if self._fading_dev is None:
+                ch = self.population.channel
+                self._fading_dev = jnp.asarray(ch.fading_mean, jnp.float32)
+                self._interference_dev = jnp.asarray(ch.interference,
+                                                     jnp.float32)
+                self._n_pop_uploads += 1
+            carry = (self.params, self.opt_state, self.comp_state,
+                     self._range_sq_dev, self._fading_dev,
+                     self._interference_dev, self._scan_key)
         if self._ctl_program is not None:
             carry = carry + (self._ctl_state,)
         return carry
@@ -538,8 +624,77 @@ class ScanRunner(FedRunner):
                 out = out + (ctl_state,)
             return out, log
 
+        # sharded registry: the (N_pad,) population leaves stay laid out
+        # over the ('pop',) mesh; per-round population work is the
+        # shard_map'd two-stage cohort draw + lazy O(U) fading refresh +
+        # psum-gather of the cohort view — never an O(N) redraw and never
+        # a host round trip (repro.fed.population module docstring)
+        mesh = self._pop_mesh
+
+        def body_dev_sharded(carry, r):
+            if program is not None:
+                (params, opt_state, comp_state, range_sq, fading,
+                 interference, fading_epoch, epoch, key, ctl_state) = carry
+            else:
+                (params, opt_state, comp_state, range_sq, fading,
+                 interference, fading_epoch, epoch, key) = carry
+                ctl_state = None
+            key, k_fade, k_cohort, k_batch, k_alpha, k_step, k_ctl = \
+                jax.random.split(key, 7)
+            if block_fading:
+                epoch = epoch + 1        # new epoch; realizations lazy
+            pop = PopulationArrays(
+                channel=ChannelArrays(
+                    distance=consts["distance"], fading_mean=fading,
+                    interference=interference, cpu_hz=consts["cpu"],
+                    num_samples=consts["ns"]),
+                fading_epoch=fading_epoch, epoch=epoch)
+            # schedule on LAST-KNOWN (possibly stale) CSI — the host
+            # Population semantics — then lazily refresh the scheduled
+            # devices' realizations for this epoch
+            cohort, pi = twin.select(pop.channel, k_cohort)
+            if block_fading:
+                pop = refresh_cohort_dev(w, mesh, pop, cohort, k_fade)
+                fading = pop.channel.fading_mean
+                interference = pop.channel.interference
+                fading_epoch = pop.fading_epoch
+            ch = gather_cohort_dev(mesh, pop.channel, cohort)
+            sizes = jnp.take(consts["part_sizes"], cohort)
+            draws = jax.random.randint(k_batch, (U, B), 0, sizes[:, None])
+            gidx = jnp.take_along_axis(
+                jnp.take(consts["parts_padded"], cohort, axis=0),
+                draws, axis=1)
+            batch = {k: arr[gidx] for k, arr in data.items()}
+            if program is not None:
+                dctl, ctl_state = program.controls(
+                    ctl_state, r, cohort, ch, jnp.take(range_sq, cohort),
+                    k_ctl)
+                rho, delta, power, payload = dctl
+            else:
+                rho, delta, power, payload = (
+                    consts["rho"], consts["delta"], consts["power"],
+                    consts["payload"])
+            alpha = sample_transmissions_dev(w, ch, power, k_alpha)
+            if unbiased:
+                weights, inclusion = ch.num_samples / pi, pi
+            else:
+                weights, inclusion = ch.num_samples, None
+            params, opt_state, comp_state, range_sq, log = finish(
+                params, opt_state, comp_state, range_sq, batch, ch,
+                cohort, weights, alpha, inclusion, k_step,
+                rho, delta, power, payload, r)
+            if program is not None and program.feedback is not None:
+                ctl_state = program.feedback(ctl_state, cohort,
+                                             log.train_loss, log.delay)
+            out = (params, opt_state, comp_state, range_sq,
+                   fading, interference, fading_epoch, epoch, key)
+            if program is not None:
+                out = out + (ctl_state,)
+            return out, log
+
         rounds = consts["r0"] + jnp.arange(length, dtype=jnp.int32)
-        return jax.lax.scan(body_dev, carry, rounds)
+        body = body_dev if mesh is None else body_dev_sharded
+        return jax.lax.scan(body, carry, rounds)
 
     # ------------------------------------------------------------------ #
     # post-segment host absorption
@@ -552,32 +707,53 @@ class ScanRunner(FedRunner):
         device control the in-scan eval head already measured it and the
         accuracy is read off the log."""
         self.params, self.opt_state, self.comp_state = carry[:3]
-        range_sq = np.asarray(carry[3], np.float64)
         cohorts = np.asarray(log.cohort, np.int64)
-        touched = np.unique(cohorts)
-        self._range_sq_pop[touched] = range_sq[touched]
 
-        if self.rng == "device":
-            fading, interference, key = carry[4], carry[5], carry[6]
+        if self.rng != "device":
+            range_sq = np.asarray(carry[3], np.float64)
+            touched = np.unique(cohorts)
+            self._range_sq_pop[touched] = range_sq[touched]
+        else:
+            # keep the (N,)-state DEVICE-resident across segments (its
+            # leaves feed the next _device_carry directly); the host
+            # population syncs back lazily — once, at the end of run()
+            self._range_sq_dev = carry[3]
+            if self._pop_mesh is not None:
+                (fading, interference, fading_epoch, epoch,
+                 key) = carry[4:9]
+                self._pop_dev = PopulationArrays(
+                    channel=self._pop_dev.channel._replace(
+                        fading_mean=fading, interference=interference),
+                    fading_epoch=fading_epoch, epoch=epoch)
+                ctl_carry = carry[9] if self._ctl_program is not None \
+                    else None
+            else:
+                fading, interference, key = carry[4], carry[5], carry[6]
+                self._fading_dev = fading
+                self._interference_dev = interference
+                ctl_carry = carry[7] if self._ctl_program is not None \
+                    else None
             self._scan_key = key
+            self._host_pop_stale = True
             if self._ctl_program is not None:
-                self._ctl_state = carry[7]
+                self._ctl_state = ctl_carry
                 if self._ctl_program.absorb is not None:
                     self._ctl_program.absorb(
                         self.scheme,
-                        jax.tree_util.tree_map(np.asarray, carry[7]))
-            ch = self.population.channel
-            ch.fading_mean[:] = np.asarray(fading, np.float64)
-            ch.interference[:] = np.asarray(interference, np.float64)
+                        jax.tree_util.tree_map(np.asarray, ctl_carry))
             if self.block_fading:
                 # the scan advanced (b - a) fading epochs on device; keep
                 # the host epoch bookkeeping (PER caches, stale-decision
                 # checks) consistent
                 self._channel_epoch += b - a
                 self.population.epoch += b - a
-                self.population.fading_epoch[:] = self.population.epoch
             self.cohort = cohorts[-1]
-            self.channel = self.population.view(self.cohort)
+            if self.control == "host" and \
+                    self.scheme.scan_recontrol_every(self):
+                # host recontrol reads the cohort channel view between
+                # segments — it must see the carried realization now,
+                # not at the end of run()
+                self._sync_host_population()
 
         losses = np.asarray(log.train_loss, np.float64)
         delays = np.asarray(log.delay, np.float64)
@@ -630,6 +806,33 @@ class ScanRunner(FedRunner):
                                            "test_acc": rec.test_acc})
 
     # ------------------------------------------------------------------ #
+    # lazy host sync (device rng)
+    # ------------------------------------------------------------------ #
+    def _sync_host_population(self) -> None:
+        """Fold the device-resident (N,) population state back into the
+        host ``Population`` + range estimates and refresh the host cohort
+        view. Called once at the end of ``run()`` (or eagerly between
+        segments only when host recontrol needs the view) — the fix for
+        the old per-segment (N,) download/upload round trip."""
+        if not self._host_pop_stale:
+            return
+        if self._pop_mesh is not None:
+            host_sync(self.population, self._pop_dev)
+        else:
+            ch = self.population.channel
+            ch.fading_mean[:] = np.asarray(self._fading_dev)
+            ch.interference[:] = np.asarray(self._interference_dev)
+            if self.block_fading:
+                # the unsharded device body redraws the FULL population
+                # each epoch (eager), so every realization is current
+                self.population.fading_epoch[:] = self.population.epoch
+        n = self.population_size
+        self._range_sq_pop[:] = np.asarray(self._range_sq_dev,
+                                           np.float64)[:n]
+        self.channel = self.population.view(self.cohort)
+        self._host_pop_stale = False
+
+    # ------------------------------------------------------------------ #
     # the public loop
     # ------------------------------------------------------------------ #
     def _run_segment(self, a: int, b: int) -> None:
@@ -666,6 +869,8 @@ class ScanRunner(FedRunner):
                               f"delay={rec.delay:9.1f}s "
                               f"energy={rec.energy:8.2f}J "
                               f"recv={rec.received}/{self.num_devices}")
+        if self.rng == "device":
+            self._sync_host_population()
         return self.history
 
     # ------------------------------------------------------------------ #
@@ -690,6 +895,13 @@ class ScanRunner(FedRunner):
         ``lax.cond`` lowers to a select inside this vmap, so every lane
         pays the Algorithm-1 solve every round regardless of k.
         """
+        if self._pop_mesh is not None:
+            raise NotImplementedError(
+                "run_sweep vmaps replicas over one device set, which "
+                "conflicts with a population sharded over the same "
+                "devices; run sharded experiments as separate run() "
+                "calls (the registry, not the seed lane, is the scale "
+                "axis)")
         if scheme_factory is None:
             proto = self._scheme_proto
 
@@ -741,4 +953,7 @@ class ScanRunner(FedRunner):
             for i, lane in enumerate(lanes):
                 lane._absorb_segment(a, b, ctls[i], unstack(carries, i),
                                      unstack(logs, i))
+        if self.rng == "device":
+            for lane in lanes:
+                lane._sync_host_population()
         return [lane.history for lane in lanes]

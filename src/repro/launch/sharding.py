@@ -22,6 +22,7 @@ from __future__ import annotations
 from typing import Any, Dict, Optional, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.configs.base import ArchConfig
@@ -31,6 +32,7 @@ PyTree = Any
 
 MODEL = ("model",)
 DATA = ("data",)
+POP = ("pop",)
 
 
 def base_rules(mesh: Mesh, *, fsdp: bool = False,
@@ -42,6 +44,12 @@ def base_rules(mesh: Mesh, *, fsdp: bool = False,
         "batch": pod + ("data",),
         "client": client_axes,
         "seq": None,
+        # the federated POPULATION axis: (N,) per-device state (channel
+        # struct, fading epochs) lays out over the dedicated 'pop' mesh
+        # axis (population_mesh below). Kept distinct from 'client' — the
+        # cohort's (U,) step stays replicated while the N >> U registry
+        # shards; the two never contend for a mesh axis.
+        "population": POP,
         # parameter dims
         "layers": None,
         "vocab": MODEL,
@@ -128,6 +136,36 @@ def param_shardings(mesh: Mesh, model, rules: Dict[str, tuple]) -> PyTree:
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, PartitionSpec())
+
+
+# --------------------------------------------------------------------------- #
+# population axis (the sharded device registry, repro.fed.population)
+# --------------------------------------------------------------------------- #
+def population_mesh(num_shards: Optional[int] = None) -> Mesh:
+    """A 1-D ("pop",) mesh over the first ``num_shards`` local devices
+    (default: all of them). Unlike ``jax.make_mesh`` this accepts a
+    strict subset of the devices — the population registry shards over
+    however many chips the fleet spares for scheduling, independent of
+    the training mesh."""
+    devices = jax.devices()
+    s = len(devices) if num_shards is None else int(num_shards)
+    if not 1 <= s <= len(devices):
+        raise ValueError(f"num_shards={s} not in [1, {len(devices)}]")
+    return Mesh(np.array(devices[:s]), ("pop",))
+
+
+def population_sharding(mesh: Mesh) -> NamedSharding:
+    """NamedSharding for (N_pad,) population leaves: leading dim over
+    'pop'. N_pad must divide by the mesh extent — the population layer
+    pads to ``population_pad(n, mesh)`` before placing."""
+    return NamedSharding(mesh, PartitionSpec("pop"))
+
+
+def population_pad(n: int, mesh: Mesh) -> int:
+    """Smallest multiple of the 'pop' extent >= n (equal shard blocks;
+    the pad tail is masked out of every cohort draw)."""
+    s = int(mesh.shape["pop"])
+    return -(-n // s) * s
 
 
 def batch_shardings(mesh: Mesh, rules: Dict[str, tuple], batch_struct: PyTree,
