@@ -4,14 +4,15 @@
 #                      handled (same command the PR driver runs).
 #   make bench-smoke — one tiny run of each gated benchmark (unified round
 #                      engine, population scaling — host and sharded,
-#                      scanned engine, device control plane); writes
-#                      artifacts/bench/*_smoke.json (never the committed
-#                      baselines).
+#                      scanned engine, device control plane, lane-batched
+#                      paper table); writes artifacts/bench/*_smoke.json
+#                      (never the committed baselines).
 #   make bench-check — bench-smoke + the regression gates: fails when the
-#                      unified-engine, scanned-engine or device-control
-#                      speedup regressed >30%, or a population flat-in-N
-#                      ratio (host or sharded registry) drifted >30%, vs
-#                      the committed artifacts/bench baselines.
+#                      unified-engine, scanned-engine, device-control or
+#                      lane-batched paper-table speedup regressed past its
+#                      per-gate tolerance, or a population flat-in-N
+#                      ratio (host or sharded registry) drifted, vs the
+#                      committed artifacts/bench baselines.
 #   make bench-population — the full population-scale sweep (per-round
 #                      wall clock flat in N at fixed cohort U).
 #   make bench-population-sharded — the sharded device-resident registry
@@ -22,13 +23,17 @@
 #                      (U x R grid; writes artifacts/bench/scan_engine.json).
 #   make bench-device-control — the full in-scan-vs-host-recontrol sweep
 #                      (writes artifacts/bench/device_control.json).
+#   make bench-paper-table — the full lane-batched scheme x regime grid
+#                      vs serial solo runners, bit-parity checked
+#                      (writes artifacts/bench/paper_table.json).
 #   make lint        — ruff, check-only (no reformatting); rule set in
 #                      ruff.toml.
 
 PY ?= python
 
 .PHONY: test bench-smoke bench-check bench-population \
-	bench-population-sharded bench-scan bench-device-control lint
+	bench-population-sharded bench-scan bench-device-control \
+	bench-paper-table lint
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -39,6 +44,7 @@ bench-smoke:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.population_scale --sharded --smoke
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.scan_engine --smoke
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.device_control --smoke
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.paper_table --smoke
 
 bench-check: bench-smoke
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.check_regression
@@ -54,6 +60,9 @@ bench-scan:
 
 bench-device-control:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.device_control
+
+bench-paper-table:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.paper_table
 
 lint:
 	ruff check .

@@ -1,6 +1,6 @@
 """CI bench-regression gates for the round engines.
 
-Five gates, each comparing a fresh ``make bench-smoke`` measurement
+Six gates, each comparing a fresh ``make bench-smoke`` measurement
 against its COMMITTED baseline artifact:
 
 * **round_engine** — unified-step speedup over the legacy per-device
@@ -21,11 +21,17 @@ against its COMMITTED baseline artifact:
 * **device_control** — in-scan Algorithm-1 recontrol
   (``ScanRunner(control="device")``) speedup over host recontrol between
   length-1 segments at recontrol_every=1 (rows matched by client count).
+* **paper_table** — lane-batched ``run_sweep`` over a heterogeneous
+  ``SweepSpec`` grid vs the same configs run serially through solo
+  ``ScanRunner``s, compiles included (rows matched by the grid label).
 
 The gated metrics are unitless ratios, not wall clock: ratios are
 dispatch-/shape-bound and transfer across machines, where absolute times
 on shared CI runners do not. A missing or malformed input is exit 2 (the
-smoke targets write all four fresh artifacts).
+smoke targets write all the fresh artifacts). Tolerances are per gate
+(``TOLERANCES``): compile-bound ratios (paper_table) are noisier on
+shared runners than steady-state dispatch ratios; ``--tolerance``
+overrides every gate at once.
 
 Run:  PYTHONPATH=src python -m benchmarks.check_regression
 Exit: 0 pass, 1 regression, 2 missing/invalid input.
@@ -44,16 +50,50 @@ ART_DIR = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "artifacts", "bench")
 
 
+# allowed fractional regression per gate. paper_table's ratio embeds
+# one fresh compile per shape bucket on the lane-batched side and one
+# per config on the serial side, which makes it noisier on shared CI
+# runners than the steady-state (warmed, min-of-trials) dispatch ratios
+# the other gates measure.
+TOLERANCES = {
+    "round_engine": 0.30,
+    "population_scale": 0.30,
+    "population_sharded": 0.30,
+    "scan_engine": 0.30,
+    "device_control": 0.30,
+    "paper_table": 0.40,
+}
+
+
+class GateInputError(Exception):
+    """A benchmark JSON is missing the row/key a gate needs — reported
+    with the gate, the row key and the offending file, never as a raw
+    KeyError (a committed baseline predating a new config is a normal
+    state, not a crash)."""
+
+
 def _load(path: str) -> dict:
     with open(path) as f:
         return json.load(f)
 
 
-def _speedup_rows(payload: dict, label) -> dict:
+def _speedup_rows(payload: dict, label, *, gate: str, path: str) -> dict:
     """{row label: speedup} keyed by the per-benchmark config columns."""
-    rows = {label(r): float(r["speedup"]) for r in payload["rows"]}
+    if "rows" not in payload:
+        raise GateInputError(
+            f"gate {gate}: {path} has no 'rows' list "
+            f"(top-level keys: {sorted(payload)})")
+    rows = {}
+    for i, r in enumerate(payload["rows"]):
+        try:
+            rows[label(r)] = float(r["speedup"])
+        except KeyError as e:
+            raise GateInputError(
+                f"gate {gate}: row {i} of {path} is missing key {e} "
+                f"(row keys: {sorted(r)}) — regenerate the baseline "
+                f"with the full benchmark run") from None
     if not rows:
-        raise ValueError("no benchmark rows")
+        raise GateInputError(f"gate {gate}: {path} has no benchmark rows")
     return rows
 
 
@@ -87,31 +127,42 @@ def _check_speedup_floor(name: str, cur: dict, base: dict, tol: float,
     return ok
 
 
-def check_round_engine(cur: dict, base: dict, tol: float) -> bool:
+def check_round_engine(cur, base, tol, cur_path, base_path) -> bool:
     def label(r):
         return f"U={int(r['clients'])}"
     return _check_speedup_floor(
-        "round_engine", _speedup_rows(cur, label),
-        _speedup_rows(base, label), tol, min_fallback=True)
+        "round_engine",
+        _speedup_rows(cur, label, gate="round_engine", path=cur_path),
+        _speedup_rows(base, label, gate="round_engine", path=base_path),
+        tol, min_fallback=True)
 
 
-def _population_times(payload: dict) -> dict:
+def _population_times(payload: dict, *, gate: str, path: str) -> dict:
     """{cohort: {population: s_per_round}}"""
     out = {}
-    for g in payload["groups"]:
-        out[int(g["cohort"])] = {int(r["population"]): float(r["s_per_round"])
-                                 for r in g["rows"]}
+    try:
+        for g in payload["groups"]:
+            out[int(g["cohort"])] = {
+                int(r["population"]): float(r["s_per_round"])
+                for r in g["rows"]}
+    except KeyError as e:
+        raise GateInputError(
+            f"gate {gate}: {path} is missing key {e} — regenerate the "
+            f"baseline with the full benchmark run") from None
     if not out:
-        raise ValueError("no population groups")
+        raise GateInputError(f"gate {gate}: {path} has no population "
+                             "groups")
     return out
 
 
 def _check_population_flat(name: str, cur: dict, base: dict,
-                           tol: float) -> bool:
+                           tol: float, cur_path: str,
+                           base_path: str) -> bool:
     """Flat-in-N ceiling: per shared U, the maxN/minN per-round ratio over
     the N values SHARED by both files must not exceed the baseline's
     ratio by more than the tolerance."""
-    cur, base = _population_times(cur), _population_times(base)
+    cur, base = (_population_times(cur, gate=name, path=cur_path),
+                 _population_times(base, gate=name, path=base_path))
     shared_u = sorted(set(cur) & set(base))
     if not shared_u:
         print(f"check_regression: {name}: no shared cohort size "
@@ -138,34 +189,53 @@ def _check_population_flat(name: str, cur: dict, base: dict,
     return ok
 
 
-def check_population(cur: dict, base: dict, tol: float) -> bool:
-    return _check_population_flat("population_scale", cur, base, tol)
+def check_population(cur, base, tol, cur_path, base_path) -> bool:
+    return _check_population_flat("population_scale", cur, base, tol,
+                                  cur_path, base_path)
 
 
-def check_population_sharded(cur: dict, base: dict, tol: float) -> bool:
+def check_population_sharded(cur, base, tol, cur_path,
+                             base_path) -> bool:
     # the committed baseline sweeps to 10^6 while the smoke stops at
     # 10^5 for CI speed — the gate runs on the shared-N ratio, and the
     # two sweeps are kept overlapping at N=10^4 and 10^5 (pop_sizes)
-    return _check_population_flat("population_sharded", cur, base, tol)
+    return _check_population_flat("population_sharded", cur, base, tol,
+                                  cur_path, base_path)
 
 
-def check_scan(cur: dict, base: dict, tol: float) -> bool:
+def check_scan(cur, base, tol, cur_path, base_path) -> bool:
     def label(r):
         return f"U={int(r['clients'])} R={int(r['rounds'])}"
     return _check_speedup_floor(
-        "scan_engine", _speedup_rows(cur, label),
-        _speedup_rows(base, label), tol)
+        "scan_engine",
+        _speedup_rows(cur, label, gate="scan_engine", path=cur_path),
+        _speedup_rows(base, label, gate="scan_engine", path=base_path),
+        tol)
 
 
-def check_device_control(cur: dict, base: dict, tol: float) -> bool:
+def check_device_control(cur, base, tol, cur_path, base_path) -> bool:
     # rows matched by client count only: the smoke and full sweeps share
     # the per-round-recontrol protocol (rounds differ, speedup is
     # per-round), so U is the config axis that matters
     def label(r):
         return f"U={int(r['clients'])}"
     return _check_speedup_floor(
-        "device_control", _speedup_rows(cur, label),
-        _speedup_rows(base, label), tol)
+        "device_control",
+        _speedup_rows(cur, label, gate="device_control", path=cur_path),
+        _speedup_rows(base, label, gate="device_control", path=base_path),
+        tol)
+
+
+def check_paper_table(cur, base, tol, cur_path, base_path) -> bool:
+    # rows matched by the grid label; the full baseline also runs the
+    # smoke grid so the CI smoke artifact always finds its shared row
+    def label(r):
+        return str(r["grid"])
+    return _check_speedup_floor(
+        "paper_table",
+        _speedup_rows(cur, label, gate="paper_table", path=cur_path),
+        _speedup_rows(base, label, gate="paper_table", path=base_path),
+        tol)
 
 
 GATES = {
@@ -180,14 +250,17 @@ GATES = {
                     check_scan),
     "device_control": ("device_control_smoke.json", "device_control.json",
                        check_device_control),
+    "paper_table": ("paper_table_smoke.json", "paper_table.json",
+                    check_paper_table),
 }
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--tolerance", type=float, default=0.30,
-                    help="allowed fractional regression per gate (0.30 = "
-                         "fail on >30%% drift)")
+    ap.add_argument("--tolerance", type=float, default=None,
+                    help="override the per-gate TOLERANCES table with one "
+                         "allowed fractional regression for every gate "
+                         "(0.30 = fail on >30%% drift)")
     ap.add_argument("--only", default="",
                     help=f"comma list of gates ({','.join(GATES)}); "
                          "default all")
@@ -205,10 +278,17 @@ def main() -> int:
     failed = invalid = False
     for name in names:
         smoke, baseline, check = GATES[name]
+        tol = (args.tolerance if args.tolerance is not None
+               else TOLERANCES[name])
+        cur_path = os.path.join(args.art_dir, smoke)
+        base_path = os.path.join(args.art_dir, baseline)
         try:
-            cur = _load(os.path.join(args.art_dir, smoke))
-            base = _load(os.path.join(args.art_dir, baseline))
-            failed |= not check(cur, base, args.tolerance)
+            cur = _load(cur_path)
+            base = _load(base_path)
+            failed |= not check(cur, base, tol, cur_path, base_path)
+        except GateInputError as e:
+            print(f"check_regression: {e}")
+            invalid = True
         except (OSError, KeyError, TypeError, ValueError,
                 json.JSONDecodeError) as e:
             # keep evaluating the remaining gates: a detected regression

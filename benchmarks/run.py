@@ -15,7 +15,7 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: ablation,schemes,channel,devices,"
                          "noniid,controller,kernels,roofline,population,"
-                         "scan,devicecontrol")
+                         "scan,devicecontrol,papertable")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     rounds = 24 if args.full else 10
@@ -28,6 +28,7 @@ def main() -> None:
         device_count,
         kernels_bench,
         non_iid,
+        paper_table,
         population_scale,
         roofline,
         scan_engine,
@@ -51,6 +52,15 @@ def main() -> None:
             client_counts=(8, 16, 32) if args.full else (16,),
             artifact=("device_control" if args.full
                       else "device_control_reduced"))
+    if only is None or "papertable" in only:
+        # only a --full run may rewrite the committed paper_table.json
+        # baseline that check_regression gates on; the reduced run uses
+        # the CI smoke grid under the anti-clobber artifact name
+        paper_table.run(
+            smoke=not args.full,
+            rounds=12 if args.full else 6,
+            artifact=("paper_table" if args.full
+                      else "paper_table_reduced"))
     if only is None or "controller" in only:
         controller_bench.run(
             device_counts=(16, 32, 64) if args.full else (16,))

@@ -72,14 +72,18 @@ def optimal_rho_dev(ltfl: LTFLConfig, ch: ChannelArrays,
     payload = jnp.asarray(payload, jnp.float32)
     power = jnp.asarray(power, jnp.float32)
     rate = jnp.maximum(expected_rate_dev(w, ch, power), 1e-30)
-    t_comp = ch.num_samples * jnp.float32(w.cycles_per_sample) / ch.cpu_hz
-    phi1 = jnp.float32(ltfl.t_max - ltfl.server_delay) \
-        / (t_comp + payload / rate)
-    e_comp = (w.k_eff * ch.cpu_hz ** jnp.float32(w.sigma_exp - 1.0)
-              * ch.num_samples * jnp.float32(w.cycles_per_sample))
-    phi2 = jnp.float32(ltfl.e_max) / (e_comp + power * payload / rate)
+    c0 = jnp.asarray(w.cycles_per_sample, jnp.float32)
+    t_budget = (jnp.asarray(ltfl.t_max, jnp.float32)
+                - jnp.asarray(ltfl.server_delay, jnp.float32))
+    t_comp = ch.num_samples * c0 / ch.cpu_hz
+    phi1 = t_budget / (t_comp + payload / rate)
+    e_comp = (jnp.asarray(w.k_eff, jnp.float32)
+              * ch.cpu_hz ** (jnp.asarray(w.sigma_exp, jnp.float32) - 1.0)
+              * ch.num_samples * c0)
+    phi2 = jnp.asarray(ltfl.e_max, jnp.float32) \
+        / (e_comp + power * payload / rate)
     return jnp.clip(1.0 - jnp.minimum(phi1, phi2), 0.0,
-                    jnp.float32(ltfl.rho_max))
+                    jnp.asarray(ltfl.rho_max, jnp.float32))
 
 
 def optimal_delta_dev(ltfl: LTFLConfig, ch: ChannelArrays,
@@ -93,20 +97,24 @@ def optimal_delta_dev(ltfl: LTFLConfig, ch: ChannelArrays,
     power = jnp.asarray(power, jnp.float32)
     rate = jnp.maximum(expected_rate_dev(w, ch, power), 1e-30)
     keep = jnp.maximum(1.0 - jnp.asarray(rho, jnp.float32), 1e-9)
-    t_comp = ch.num_samples * jnp.float32(w.cycles_per_sample) \
-        * keep / ch.cpu_hz
-    phi3 = (jnp.float32(ltfl.t_max - ltfl.server_delay) - t_comp) \
-        * rate / keep
-    e_comp = (w.k_eff * ch.cpu_hz ** jnp.float32(w.sigma_exp - 1.0)
-              * ch.num_samples * jnp.float32(w.cycles_per_sample) * keep)
-    phi4 = (jnp.float32(ltfl.e_max) - e_comp) * rate / (power * keep)
+    c0 = jnp.asarray(w.cycles_per_sample, jnp.float32)
+    t_budget = (jnp.asarray(ltfl.t_max, jnp.float32)
+                - jnp.asarray(ltfl.server_delay, jnp.float32))
+    xi = jnp.asarray(ltfl.xi_bits, jnp.float32)
+    delta_max = jnp.asarray(ltfl.delta_max, jnp.float32)
+    t_comp = ch.num_samples * c0 * keep / ch.cpu_hz
+    phi3 = (t_budget - t_comp) * rate / keep
+    e_comp = (jnp.asarray(w.k_eff, jnp.float32)
+              * ch.cpu_hz ** (jnp.asarray(w.sigma_exp, jnp.float32) - 1.0)
+              * ch.num_samples * c0 * keep)
+    phi4 = (jnp.asarray(ltfl.e_max, jnp.float32) - e_comp) * rate \
+        / (power * keep)
     v_eff = jnp.float32(num_params) * keep   # pruned grads not uploaded
     raw = jnp.minimum(
-        jnp.minimum((phi3 - jnp.float32(ltfl.xi_bits)) / v_eff,
-                    (phi4 - jnp.float32(ltfl.xi_bits)) / v_eff),
-        jnp.float32(ltfl.delta_max))
+        jnp.minimum((phi3 - xi) / v_eff, (phi4 - xi) / v_eff),
+        delta_max)
     raw = jnp.where(jnp.isnan(raw), 1.0, raw)
-    return jnp.clip(jnp.floor(raw), 1.0, jnp.float32(ltfl.delta_max))
+    return jnp.clip(jnp.floor(raw), 1.0, delta_max)
 
 
 def evaluate_dev(ltfl: LTFLConfig, ch: ChannelArrays,
@@ -129,7 +137,7 @@ def evaluate_dev(ltfl: LTFLConfig, ch: ChannelArrays,
     payload = payload_bits(num_params, deltas, ltfl.xi_bits)
     rate = expected_rate_dev(w, ch, p)
     t = device_round_delay_dev(w, ch, payload, rhos, p, rate=rate) \
-        + jnp.float32(ltfl.server_delay)
+        + jnp.asarray(ltfl.server_delay, jnp.float32)
     e = device_round_energy_dev(w, ch, payload, rhos, p, rate=rate)
     feasible = (jnp.all(t <= ltfl.t_max * (1 + 1e-9), axis=-1)
                 & jnp.all(e <= ltfl.e_max * (1 + 1e-9), axis=-1))
@@ -163,8 +171,10 @@ def solve_dev(ltfl: LTFLConfig, ch: ChannelArrays, num_params: int,
         range_sq = jnp.full((u,), jnp.float32(1e-2 * num_params))
     else:
         range_sq = jnp.asarray(range_sq_sums, jnp.float32)
-    bounds = jnp.tile(jnp.asarray([[w.p_min, w.p_max]], jnp.float32),
-                      (u, 1))
+    p_min = jnp.asarray(w.p_min, jnp.float32)
+    p_max = jnp.asarray(w.p_max, jnp.float32)
+    bounds = jnp.stack([jnp.full((u,), p_min), jnp.full((u,), p_max)],
+                       axis=1)
 
     def stage1(deltas, powers):
         """Theorems 2 + 3 for all devices at the current powers."""
@@ -205,8 +215,8 @@ def solve_dev(ltfl: LTFLConfig, ch: ChannelArrays, num_params: int,
         done = jnp.abs(prev_gamma - g) <= ltfl.alt_tol       # Eq. 57
         return k + 1, g, powers, deltas, key, done
 
-    powers0 = jnp.full((u,), jnp.float32(0.5 * (w.p_min + w.p_max)))
-    deltas0 = jnp.full((u,), jnp.float32(ltfl.delta_max))
+    powers0 = jnp.full((u,), 0.5 * (p_min + p_max))
+    deltas0 = jnp.full((u,), jnp.asarray(ltfl.delta_max, jnp.float32))
     carry = (jnp.int32(0), jnp.float32(jnp.inf), powers0, deltas0, key,
              jnp.bool_(False))
     _, _, powers, deltas, _, _ = jax.lax.while_loop(cond, body, carry)

@@ -13,9 +13,20 @@ absorbs the round's measured metrics — the traced twin of
 Purity contract: ``controls`` / ``feedback`` are traced once per segment
 length and re-used across ``run_sweep`` lanes — they must read ALL
 per-round / per-lane data from their arguments (state, cohort, channel
-view, key) and close only over static configuration (the LTFLConfig,
-arm grids, parameter counts). A closure over runner/scheme MUTABLE state
-would silently bake one lane's values into every lane's trace.
+view, key, and the traced ``ltfl`` config view) and close only over
+static configuration (arm grids, parameter counts, cohort sizes — the
+things a lane's trace bucket is keyed on). A closure over runner/scheme
+MUTABLE state would silently bake one lane's values into every lane's
+trace, and a closure over a float config value would bake one lane's
+channel regime into every lane — read those from the ``ltfl`` argument
+(the engine passes its per-lane laned-config view).
+
+Recontrol cadence: ``every`` declares how often the program actually
+DECIDES. The segment planner aligns scanned segments to that cadence and
+passes ``decide`` as a STATIC python bool — ``decide=False`` traces must
+return the carried decision without embedding the solve at all (no
+``lax.cond``: under ``run_sweep``'s vmap a cond lowers to a select that
+pays the solve every round in every lane).
 """
 from __future__ import annotations
 
@@ -43,12 +54,23 @@ class DeviceControls(NamedTuple):
 class ControlProgram(NamedTuple):
     """A scheme's device-resident control plane (see module docstring).
 
-    * ``init``: the initial carried control state (a jnp pytree; ``()``
-      for stateless control like LTFL's memoized decision);
-    * ``controls(state, r, cohort, ch, range_sq, key) ->
-      (DeviceControls, state)``: the round-``r`` decision for the cohort
-      view ``ch`` (a (U,) ``ChannelArrays``) given the cohort's carried
-      gradient-range estimates ``range_sq``;
+    * ``init``: the initial carried control state (a jnp pytree; for
+      LTFL the memoized last decision);
+    * ``controls(state, r, cohort, ch, range_sq, key, ltfl, *, decide)
+      -> (DeviceControls, state)``: the round-``r`` decision for the
+      cohort view ``ch`` (a (U,) ``ChannelArrays``) given the cohort's
+      carried gradient-range estimates ``range_sq``. ``ltfl`` is the
+      engine's traced config view (an ``LTFLConfig`` whose float leaves
+      may be per-lane tracers under ``run_sweep`` — use it instead of a
+      closed-over config for every regime-dependent value). ``decide``
+      is a STATIC bool: True means this round is on the recontrol
+      cadence (re-solve); False means hold — return the carried
+      decision WITHOUT tracing the solve (the planner compiles hold
+      rounds separately, so cadence-k segments never pay the solve);
+    * ``every``: the decide cadence in rounds (1 = re-decide every
+      round). The segment planner splits scanned segments at multiples
+      of ``every`` so each segment has at most one decide round (its
+      first), and only when that round is on-cadence;
     * ``feedback(state, cohort, loss, delay) -> state`` (optional): the
       post-step state update (traced ``post_round`` twin). When a scheme
       provides it, the engine SKIPS the host ``post_round`` for scanned
@@ -60,5 +82,6 @@ class ControlProgram(NamedTuple):
 
     init: PyTree
     controls: Callable[..., Any]
+    every: int = 1
     feedback: Optional[Callable[..., Any]] = None
     absorb: Optional[Callable[..., None]] = None

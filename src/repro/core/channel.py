@@ -304,7 +304,12 @@ def _mean_gain_dev(ch: ChannelArrays) -> jax.Array:
 
 
 def _noise_dev(cfg: WirelessConfig, ch: ChannelArrays) -> jax.Array:
-    return ch.interference + jnp.float32(cfg.bandwidth_ul * cfg.n0)
+    # f32-on-f32 product (not f32(f64 product)): cfg fields may be traced
+    # per-lane scalars under run_sweep's laned channel regimes, and the
+    # identical arithmetic on the concrete path keeps solo runs
+    # bit-matching their lanes
+    return ch.interference + (jnp.asarray(cfg.bandwidth_ul, jnp.float32)
+                              * jnp.asarray(cfg.n0, jnp.float32))
 
 
 def expected_rate_dev(cfg: WirelessConfig, ch: ChannelArrays,

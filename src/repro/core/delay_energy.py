@@ -103,7 +103,8 @@ def round_energy(ltfl: LTFLConfig, devices, payload_bits: Sequence[float],
 def local_train_delay_dev(cfg: WirelessConfig, ch: ChannelArrays,
                           rho: jax.Array) -> jax.Array:
     """Eq. 31, traced: T_lt = N_u c0 (1 - rho) / f_u."""
-    return (ch.num_samples * jnp.float32(cfg.cycles_per_sample)
+    return (ch.num_samples * jnp.asarray(cfg.cycles_per_sample,
+                                          jnp.float32)
             * (1.0 - rho) / ch.cpu_hz)
 
 
@@ -120,8 +121,10 @@ def upload_delay_dev(cfg: WirelessConfig, ch: ChannelArrays,
 def local_train_energy_dev(cfg: WirelessConfig, ch: ChannelArrays,
                            rho: jax.Array) -> jax.Array:
     """Eq. 35, traced: E_lt = k f^(sigma-1) N c0 (1 - rho)."""
-    return (cfg.k_eff * ch.cpu_hz ** jnp.float32(cfg.sigma_exp - 1.0)
-            * ch.num_samples * jnp.float32(cfg.cycles_per_sample)
+    return (jnp.asarray(cfg.k_eff, jnp.float32)
+            * ch.cpu_hz ** (jnp.asarray(cfg.sigma_exp, jnp.float32) - 1.0)
+            * ch.num_samples
+            * jnp.asarray(cfg.cycles_per_sample, jnp.float32)
             * (1.0 - rho))
 
 

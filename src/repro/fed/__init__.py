@@ -8,7 +8,13 @@ from repro.fed.population import (
     device_population,
 )
 from repro.fed.rounds import FedRunner, RoundRecord
-from repro.fed.scan_engine import RoundLog, ScanRunner, make_scanned_step
+from repro.fed.scan_engine import (
+    LaneSpec,
+    RoundLog,
+    ScanRunner,
+    SweepSpec,
+    make_scanned_step,
+)
 from repro.fed.schemes import (
     BaseScheme,
     Controls,
@@ -32,6 +38,8 @@ __all__ = [
     "RoundRecord",
     "RoundLog",
     "ScanRunner",
+    "SweepSpec",
+    "LaneSpec",
     "make_scanned_step",
     "Population",
     "PopulationArrays",

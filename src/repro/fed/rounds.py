@@ -232,6 +232,7 @@ class FedRunner:
 
         # the unified engine: every scheme's round is ONE compiled call,
         # shaped (U,) — cohort sampling swaps values, never shapes
+        self._use_kernels = bool(use_kernels)
         step_fn = make_fl_train_step(
             model, self.opt, self.num_devices,
             prune=scheme.uses_prune, prune_kind="magnitude",
@@ -246,6 +247,23 @@ class FedRunner:
         self._cum_energy = 0.0
 
     # ------------------------------------------------------------------ #
+    def _scan_shape_signature(self) -> tuple:
+        """The static half of a scanned trace: every runner-level value
+        that a compiled segment bakes in as a python constant — array
+        shapes (cohort width, population, batch, parameter count),
+        static loop bounds (Algorithm 1's BO draw count and alternation
+        cap), and the hyperparameters closed over by the step function
+        (learning rate, kernel routing). ``ScanRunner.run_sweep`` groups
+        heterogeneous lanes into one compiled program per distinct
+        signature; config values NOT listed here are laned — stacked per
+        lane and read in-trace (``scan_engine._LANED_WIRELESS`` /
+        ``_LANED_LTFL``)."""
+        return (self.num_devices, self.population_size, self.batch_size,
+                self.num_params, self.eval_every, self.participation,
+                self.block_fading, self._use_kernels,
+                float(self.ltfl.learning_rate), int(self.ltfl.bo_iters),
+                int(self.ltfl.alt_max_iters))
+
     @property
     def devices(self):
         """Legacy tuple-of-DeviceChannel view of the cohort channel."""

@@ -66,12 +66,43 @@ every segment to length 1 — correct, but no faster than ``FedRunner``.
 Pass ``eval_every=0`` (or a cadence of k rounds) to actually amortize,
 or ``control="device"`` to evaluate in-scan; ``run`` warns once
 otherwise.
+
+Sweep lanes
+-----------
+``run_sweep`` batches whole experiments as vmapped LANES of one compiled
+segment — originally seeded replicas, now heterogeneous configs: a
+``SweepSpec`` stacks scheme ablations, channel regimes and U/N cohort
+grids as lanes. Two mechanisms make one trace serve many configs:
+
+* **laned config**: the lane-varying half of the LTFL/wireless config
+  (power bounds, bandwidth, noise, budgets — ``_LANED_WIRELESS`` /
+  ``_LANED_LTFL``) rides the segment constants as f32 scalar leaves and
+  is rehydrated in-trace into a per-lane config VIEW (``_laned_ltfl``),
+  so every regime-dependent expression reads traced values. Solo ``run``
+  uses the identical laned trace, which is what makes a lane bitwise
+  equal to its solo run;
+* **shape buckets**: everything NOT laned — array shapes (U, N, batch),
+  static loop bounds (BO iterations), step-function hyperparameters
+  (learning rate, compressor constants) — is baked into the trace and
+  therefore part of the lane's bucket signature
+  (``_lane_signature``). ``run_sweep`` groups lanes by signature and
+  compiles ONE program per bucket, not one per config: an 8-config
+  scheme x regime grid over two cohort widths costs a handful of traces.
+
+Recontrol cadence: a ``ControlProgram`` with ``every=k > 1`` declares
+that it only re-decides every k rounds. The planner aligns segment
+boundaries to that cadence and passes a STATIC ``decide_first`` flag, so
+hold rounds scan through a trace that never embeds the Algorithm-1
+solve — a ``lax.cond`` would lower to a select under the sweep vmap and
+pay the solve every round in every lane.
 """
 from __future__ import annotations
 
 import copy
+import dataclasses
 import warnings
-from typing import Any, Callable, Dict, List, NamedTuple, Optional, Sequence
+from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
+                    Sequence, Tuple, Union)
 
 import jax
 import jax.numpy as jnp
@@ -87,6 +118,7 @@ from repro.core.convergence import gamma_dev
 from repro.core.delay_energy import round_accounting_dev
 from repro.fed.population import (
     PopulationArrays,
+    UniformSampler,
     device_population,
     gather_cohort_dev,
     host_sync,
@@ -96,6 +128,43 @@ from repro.fed.rounds import FedRunner, RoundRecord
 from repro.launch.sharding import population_mesh, population_pad
 
 PyTree = Any
+
+# The lane-varying ("laned") config fields: stacked per lane as f32
+# scalars in the segment constants and read in-trace, so one compiled
+# program serves every channel regime / budget in a shape bucket.
+# Everything else on the configs is STATIC — baked into the trace from
+# the bucket representative (shapes, BO/alternation loop bounds, the
+# learning rate inside the step function) or consumed on the host
+# (population draws, partitions) — and therefore part of the bucket
+# signature (``_lane_signature``), never laned.
+_LANED_WIRELESS = (
+    "p_max", "p_min", "bandwidth_ul", "n0", "waterfall", "fading_scale",
+    "interference_min", "interference_max", "cycles_per_sample", "k_eff",
+    "sigma_exp")
+_LANED_LTFL = (
+    "rho_max", "delta_max", "xi_bits", "t_max", "e_max", "server_delay",
+    "bo_xi", "alt_tol", "lipschitz", "d_sq", "v1", "v2")
+
+
+def _rebuild_config(cfg, overrides):
+    """Dataclass copy with field overrides that BYPASSES __post_init__:
+    its validation (range checks, ``v2 < 1/12``) calls ``bool()`` on
+    values that are vmap tracers here."""
+    out = object.__new__(type(cfg))
+    for f in dataclasses.fields(cfg):
+        object.__setattr__(out, f.name,
+                           overrides.get(f.name, getattr(cfg, f.name)))
+    return out
+
+
+def _laned_ltfl(ltfl, cfg):
+    """The traced per-lane config view: ``ltfl`` with every laned field
+    replaced by its (possibly per-lane-traced) f32 leaf from ``cfg``."""
+    wireless = _rebuild_config(
+        ltfl.wireless, {k: cfg["w_" + k] for k in _LANED_WIRELESS})
+    over: Dict[str, Any] = {k: cfg[k] for k in _LANED_LTFL}
+    over["wireless"] = wireless
+    return _rebuild_config(ltfl, over)
 
 
 class RoundLog(NamedTuple):
@@ -143,6 +212,71 @@ def make_scanned_step(step_fn: Callable) -> Callable:
         return params, opt_state, comp_state, metrics
 
     return scanned
+
+
+@dataclasses.dataclass(frozen=True)
+class LaneSpec:
+    """One vmapped lane of a heterogeneous ``run_sweep``.
+
+    * ``seed``: the lane's np_rng / population / key-stream seed;
+    * ``scheme_factory``: builds the lane's scheme (None deep-copies the
+      parent runner's scheme as constructed — the seeded-replica case);
+    * ``ltfl``: the lane's ``LTFLConfig`` (None inherits the parent's).
+      Laned float fields (channel regime, budgets — see
+      ``_LANED_WIRELESS`` / ``_LANED_LTFL``) vary freely WITHIN a
+      compiled bucket; static fields (``num_devices``, learning rate, BO
+      iteration counts) are part of the bucket signature and lanes that
+      differ in them land in separate buckets;
+    * ``kwargs``: per-lane overrides of the parent's construction kwargs
+      (``population_size``, ``cohort_size``, ``batch_size``, ... — the
+      U/N grid axis). Shape-changing overrides open a new bucket;
+    * ``label``: free-form tag carried through to results tables.
+    """
+
+    seed: int = 0
+    scheme_factory: Optional[Callable[[], Any]] = None
+    ltfl: Optional[Any] = None
+    kwargs: Optional[Dict[str, Any]] = None
+    label: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """A heterogeneous experiment grid for ``ScanRunner.run_sweep``: the
+    lanes run vmapped, one compiled program per static-shape bucket.
+    ``grid`` builds the usual cross product (the paper-table shape)."""
+
+    lanes: Tuple[LaneSpec, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "lanes", tuple(self.lanes))
+        if not self.lanes:
+            raise ValueError("SweepSpec needs at least one lane")
+
+    @classmethod
+    def grid(cls, *, schemes: Optional[Dict[str, Any]] = None,
+             ltfls: Optional[Dict[str, Any]] = None,
+             kwargs: Optional[Dict[str, Dict[str, Any]]] = None,
+             seeds: Sequence[int] = (0,)) -> "SweepSpec":
+        """Cross product of named scheme factories x named configs x
+        named kwargs overrides x seeds; lane labels join the axis names
+        (``"ltfl/highband/s0"``). Omitted axes contribute one unnamed
+        inherit-from-parent point."""
+        s_ax = dict(schemes) if schemes else {"": None}
+        c_ax = dict(ltfls) if ltfls else {"": None}
+        k_ax = dict(kwargs) if kwargs else {"": None}
+        lanes = []
+        for sname, factory in s_ax.items():
+            for cname, cfg in c_ax.items():
+                for kname, kw in k_ax.items():
+                    for seed in seeds:
+                        label = "/".join(
+                            x for x in (sname, cname, kname, f"s{seed}")
+                            if x)
+                        lanes.append(LaneSpec(
+                            seed=int(seed), scheme_factory=factory,
+                            ltfl=cfg, kwargs=kw, label=label))
+        return cls(lanes=tuple(lanes))
 
 
 class ScanRunner(FedRunner):
@@ -273,11 +407,16 @@ class ScanRunner(FedRunner):
         self._range_sq_dev: Optional[jax.Array] = None
         self._host_pop_stale = False
         self._n_pop_uploads = 0   # (N,)-state host->device upload events
-        self._n_traces = 0   # one per (segment length, single|sweep) trace
-        self._seg_jit = jax.jit(self._segment, static_argnums=(3,))
+        # one per (segment length, decide_first, single|sweep) trace
+        self._n_traces = 0
+        self._seg_jit = jax.jit(self._segment, static_argnums=(3, 4))
         self._sweep_jit = jax.jit(
-            jax.vmap(self._segment, in_axes=(0, 0, 0, None)),
-            static_argnums=(3,))
+            jax.vmap(self._segment, in_axes=(0, 0, 0, None, None)),
+            static_argnums=(3, 4))
+        # populated by run_sweep: bucket metadata of the last sweep
+        # (signature, representative runner, lane indices) — the
+        # compile-counter tests and benchmarks read trace counts off it
+        self._last_sweep_buckets: List[Dict[str, Any]] = []
 
     # ------------------------------------------------------------------ #
     # device-resident world
@@ -341,9 +480,20 @@ class ScanRunner(FedRunner):
         exceeds ``max_segment`` rounds. Under ``control="device"`` the
         recontrol AND eval boundaries vanish (both run in-scan), so the
         spans that would have degenerated to length 1 coalesce into one
-        scanned range — no stray retraces (compile-counter-tested)."""
+        scanned range — no stray retraces (compile-counter-tested).
+
+        A device control program with cadence ``every=k > 1`` re-splits
+        at multiples of k: ``decide`` is a STATIC per-segment bool (at
+        most the segment's FIRST round decides), so a segment crossing a
+        decide round would skip that solve. The split costs nothing over
+        host recontrol (same boundaries) and buys hold segments whose
+        traces never embed the solve."""
         if self.control == "device":
-            rc = ev = 0          # in-scan recontrol + in-scan eval head
+            # in-scan recontrol + in-scan eval head; only a cadence-k
+            # program keeps (cheaper, aligned) boundaries
+            p = self._ctl_program
+            rc = p.every if p is not None and p.every > 1 else 0
+            ev = 0
         else:
             rc = self.scheme.scan_recontrol_every(self)
             ev = self.eval_every
@@ -363,11 +513,35 @@ class ScanRunner(FedRunner):
             a = b
         return spans
 
+    def _decide_first(self, a: int) -> bool:
+        """Whether the segment starting at round ``a`` opens with a
+        decide round (static: it picks which compiled program runs).
+        Cadence-1 programs decide every round; cadence-k programs decide
+        iff the segment start is on-cadence (``_segment_spans`` aligns
+        boundaries so no LATER round of the segment ever is)."""
+        if self._ctl_program is None:
+            return False
+        if self._ctl_program.every <= 1:
+            return True
+        return a % self._ctl_program.every == 0
+
     # ------------------------------------------------------------------ #
     # per-segment host preparation
     # ------------------------------------------------------------------ #
+    def _laned_cfg(self) -> Dict[str, jax.Array]:
+        """This runner's laned config leaves (f32 scalars). Rides the
+        segment constants of EVERY segment — solo runs too, so a solo
+        trace is structurally identical to a sweep lane's and the two
+        produce bitwise-equal histories."""
+        w, l = self.ltfl.wireless, self.ltfl
+        cfg = {"w_" + k: jnp.float32(getattr(w, k))
+               for k in _LANED_WIRELESS}
+        cfg.update({k: jnp.float32(getattr(l, k)) for k in _LANED_LTFL})
+        return cfg
+
     def _segment_consts(self, ctl, agg_denom) -> Dict[str, jax.Array]:
         consts = {
+            "cfg": self._laned_cfg(),
             "rho": jnp.asarray(ctl.rho, jnp.float32),
             "delta": jnp.asarray(ctl.delta, jnp.float32),
             "power": jnp.asarray(ctl.power, jnp.float32),
@@ -440,7 +614,7 @@ class ScanRunner(FedRunner):
             consts = self._segment_consts(ctl, agg_denom)
         else:
             ctl = None                   # controls live in the scan carry
-            consts = {}
+            consts = {"cfg": self._laned_cfg()}
             if agg_denom is not None:
                 consts["agg_denom"] = jnp.float32(agg_denom)
         consts.update(
@@ -491,12 +665,21 @@ class ScanRunner(FedRunner):
     # ------------------------------------------------------------------ #
     # the compiled segment
     # ------------------------------------------------------------------ #
-    def _segment(self, carry, xs, consts, length: int):
-        """One scanned segment. Traced once per distinct ``length`` (and
-        once more inside the run_sweep vmap); ``self._n_traces`` counts
-        traces for the compile-cadence tests."""
+    def _segment(self, carry, xs, consts, length: int,
+                 decide_first: bool = False):
+        """One scanned segment. Traced once per distinct ``(length,
+        decide_first)`` (and once more inside the run_sweep vmap);
+        ``self._n_traces`` counts traces for the compile-cadence tests.
+
+        ``ltfl`` here is the LANED config view rehydrated from
+        ``consts["cfg"]`` — under the sweep vmap its float leaves are
+        per-lane tracers, so every channel/budget expression below is
+        per-lane even though the trace is shared. ``decide_first`` is
+        static: under a cadence-k control program only the segment's
+        first round may decide, and it runs OUTSIDE the scan so the
+        scanned hold body never embeds the solve."""
         self._n_traces += 1
-        ltfl = self.ltfl
+        ltfl = _laned_ltfl(self.ltfl, consts["cfg"])
         w = ltfl.wireless
         step_fn = self._step_fn
         data = self._data_dev
@@ -567,8 +750,10 @@ class ScanRunner(FedRunner):
 
             return jax.lax.scan(body, carry, xs)
 
-        # device rng: carried key stream, everything drawn in-scan
-        def body_dev(carry, r):
+        # device rng: carried key stream, everything drawn in-scan.
+        # ``decide`` is a python bool: the round body is traced once per
+        # decide value actually used, and hold bodies contain no solve
+        def body_dev(carry, r, decide=True):
             if program is not None:
                 (params, opt_state, comp_state, range_sq,
                  fading, interference, key, ctl_state) = carry
@@ -600,7 +785,7 @@ class ScanRunner(FedRunner):
             if program is not None:
                 dctl, ctl_state = program.controls(
                     ctl_state, r, cohort, ch, jnp.take(range_sq, cohort),
-                    k_ctl)
+                    k_ctl, ltfl, decide=decide)
                 rho, delta, power, payload = dctl
             else:
                 rho, delta, power, payload = (
@@ -631,7 +816,7 @@ class ScanRunner(FedRunner):
         # a host round trip (repro.fed.population module docstring)
         mesh = self._pop_mesh
 
-        def body_dev_sharded(carry, r):
+        def body_dev_sharded(carry, r, decide=True):
             if program is not None:
                 (params, opt_state, comp_state, range_sq, fading,
                  interference, fading_epoch, epoch, key, ctl_state) = carry
@@ -668,7 +853,7 @@ class ScanRunner(FedRunner):
             if program is not None:
                 dctl, ctl_state = program.controls(
                     ctl_state, r, cohort, ch, jnp.take(range_sq, cohort),
-                    k_ctl)
+                    k_ctl, ltfl, decide=decide)
                 rho, delta, power, payload = dctl
             else:
                 rho, delta, power, payload = (
@@ -694,7 +879,21 @@ class ScanRunner(FedRunner):
 
         rounds = consts["r0"] + jnp.arange(length, dtype=jnp.int32)
         body = body_dev if mesh is None else body_dev_sharded
-        return jax.lax.scan(body, carry, rounds)
+        if program is None or program.every <= 1:
+            # nothing to hold: every round decides (or no program at all)
+            return jax.lax.scan(body, carry, rounds)
+        # cadence k > 1: the planner aligned segment starts to the
+        # cadence, so at most the FIRST round decides. It runs outside
+        # the scan (its trace embeds the solve only when decide_first);
+        # the remaining rounds scan through a pure hold body
+        carry, log0 = body(carry, rounds[0], decide=decide_first)
+        if length == 1:
+            return carry, jax.tree_util.tree_map(lambda h: h[None], log0)
+        carry, logs = jax.lax.scan(
+            lambda c, r: body(c, r, decide=False), carry, rounds[1:])
+        log = jax.tree_util.tree_map(
+            lambda h, t: jnp.concatenate([h[None], t]), log0, logs)
+        return carry, log
 
     # ------------------------------------------------------------------ #
     # post-segment host absorption
@@ -836,13 +1035,15 @@ class ScanRunner(FedRunner):
     # the public loop
     # ------------------------------------------------------------------ #
     def _run_segment(self, a: int, b: int) -> None:
+        decide_first = self._decide_first(a)
         if self.rng == "host":
             xs, consts, ctl = self._prepare_host_segment(a, b)
-            carry, log = self._seg_jit(self._host_carry(), xs, consts, b - a)
+            carry, log = self._seg_jit(self._host_carry(), xs, consts,
+                                       b - a, decide_first)
         else:
             consts, ctl = self._prepare_device_segment(a, b)
             carry, log = self._seg_jit(self._device_carry(), None, consts,
-                                       b - a)
+                                       b - a, decide_first)
         self._absorb_segment(a, b, ctl, carry, log)
 
     def run(self, num_rounds: int, log_every: int = 0) -> List[RoundRecord]:
@@ -874,26 +1075,76 @@ class ScanRunner(FedRunner):
         return self.history
 
     # ------------------------------------------------------------------ #
-    # vmap over seeds
+    # vmap over lanes (seeds, schemes, regimes, cohort grids)
     # ------------------------------------------------------------------ #
-    def run_sweep(self, seeds: Sequence[int], num_rounds: int,
+    def _build_lane(self, spec: LaneSpec) -> "ScanRunner":
+        """A lane runner: the parent's construction inputs with the
+        spec's seed / scheme / config / kwargs overrides applied."""
+        c = self._ctor
+        kw = dict(c["kwargs"])
+        if spec.kwargs:
+            kw.update(spec.kwargs)
+        kw["seed"] = int(spec.seed)
+        scheme = (spec.scheme_factory() if spec.scheme_factory is not None
+                  else copy.deepcopy(self._scheme_proto))
+        lane = ScanRunner(c["model"], c["params"],
+                          spec.ltfl if spec.ltfl is not None else c["ltfl"],
+                          c["train"], c["test"], scheme, rng=self.rng,
+                          control=self.control,
+                          max_segment=self.max_segment, **kw)
+        lane._eval_fn = self._eval_fn          # share the jitted eval
+        return lane
+
+    def _lane_signature(self, lane: "ScanRunner") -> tuple:
+        """The shape-bucket key: everything a compiled segment BAKES in
+        as a python constant. Lanes share one vmapped trace iff their
+        signatures match — a static value missing here would let one
+        lane silently run under another lane's constants."""
+        sig = (lane._scan_shape_signature(), lane.rng, lane.control,
+               lane.max_segment, type(lane.sampler).__name__,
+               lane.scheme.scan_lane_signature(lane))
+        if lane.rng == "device" and \
+                not isinstance(lane.sampler, UniformSampler):
+            # channel-/energy-aware sampler twins close over host config
+            # floats (reference power, energy budget, CPU energy model):
+            # lanes may only share a trace when those baked values match
+            w, l = lane.ltfl.wireless, lane.ltfl
+            sig += ((float(w.p_min), float(w.p_max), float(l.e_max),
+                     float(w.k_eff), float(w.sigma_exp),
+                     float(w.cycles_per_sample)),)
+        return sig
+
+    def run_sweep(self, sweep: Union[SweepSpec, Sequence[int]],
+                  num_rounds: int,
                   scheme_factory: Optional[Callable[[], Any]] = None
                   ) -> List[List[RoundRecord]]:
-        """Run S seeded replicas of the experiment with ALL device work
-        batched: each segment executes as one jitted
-        ``vmap``-over-replicas scan, so an S-seed scheme-comparison curve
-        costs one compile per segment length. Host work between segments
-        (Algorithm 1 under host control, eval) runs per replica.
+        """Run a batch of experiment lanes with ALL device work vmapped.
 
-        ``seeds`` seed each replica's np_rng / device population /
-        partitions / key stream (this runner's own state is untouched).
-        ``scheme_factory`` builds each replica's scheme; the default
-        deep-copies this runner's scheme as constructed (pre-setup).
-        Returns one ``RoundRecord`` history per seed.
+        ``sweep`` is either a sequence of seeds (homogeneous replicas of
+        THIS runner's config — the original API) or a ``SweepSpec``
+        whose lanes vary scheme, channel regime, budgets, seed and
+        cohort shape heterogeneously. Lanes are grouped into
+        static-shape BUCKETS (``_lane_signature``): each bucket runs as
+        one jitted ``vmap``-over-lanes scan per segment plan, so the
+        whole grid costs one compile per bucket x (segment length,
+        decide phase) — not one per config. Host work between segments
+        (Algorithm 1 under host control, eval) runs per lane.
 
-        NOTE under ``control="device"`` a cadence-k control program's
-        ``lax.cond`` lowers to a select inside this vmap, so every lane
-        pays the Algorithm-1 solve every round regardless of k.
+        Static vs laned: a lane's channel regime and budget floats are
+        LANED (stacked per lane, read in-trace — see ``_LANED_WIRELESS``
+        / ``_LANED_LTFL``), so they vary freely within a bucket; shapes
+        (U, N, batch), static loop bounds (``bo_iters``,
+        ``alt_max_iters``), the learning rate and scheme constants
+        (compressor parameters, arm grids, cadences) are STATIC — lanes
+        that differ in them open a new bucket, which is correct but
+        costs a separate compile. Each lane's history is bitwise equal
+        to a solo ``ScanRunner`` run of the same config (solo traces run
+        the identical laned arithmetic).
+
+        ``scheme_factory`` applies only to the seed-list form; SweepSpec
+        lanes carry their own factories. Returns one ``RoundRecord``
+        history per lane, in lane order; bucket metadata lands on
+        ``self._last_sweep_buckets``.
         """
         if self._pop_mesh is not None:
             raise NotImplementedError(
@@ -902,31 +1153,17 @@ class ScanRunner(FedRunner):
                 "devices; run sharded experiments as separate run() "
                 "calls (the registry, not the seed lane, is the scale "
                 "axis)")
-        if scheme_factory is None:
-            proto = self._scheme_proto
-
-            def scheme_factory():
-                return copy.deepcopy(proto)
-
-        c = self._ctor
-        lanes: List[ScanRunner] = []
-        for s in seeds:
-            kw = dict(c["kwargs"])
-            kw["seed"] = int(s)
-            lane = ScanRunner(c["model"], c["params"], c["ltfl"], c["train"],
-                              c["test"], scheme_factory(), rng=self.rng,
-                              control=self.control,
-                              max_segment=self.max_segment, **kw)
-            lane._eval_fn = self._eval_fn      # share the jitted eval
-            lanes.append(lane)
+        if isinstance(sweep, SweepSpec):
+            if scheme_factory is not None:
+                raise ValueError(
+                    "scheme_factory is the legacy seed-list argument; "
+                    "SweepSpec lanes carry per-lane scheme factories")
+            specs = list(sweep.lanes)
+        else:
+            specs = [LaneSpec(seed=int(s), scheme_factory=scheme_factory)
+                     for s in sweep]
+        lanes = [self._build_lane(spec) for spec in specs]
         self._ensure_device_world()
-        pad = None
-        if self.rng == "device":
-            pad = max(max(p.size for p in lane.batcher.parts)
-                      for lane in lanes)
-        for lane in lanes:
-            lane._data_dev = self._data_dev    # one shared backing pool
-            lane._ensure_device_world(pad_to=pad)
 
         def stack(trees):
             return jax.tree_util.tree_map(lambda *x: jnp.stack(x), *trees)
@@ -934,26 +1171,53 @@ class ScanRunner(FedRunner):
         def unstack(tree, i):
             return jax.tree_util.tree_map(lambda x: x[i], tree)
 
-        for a, b in self._segment_spans(0, num_rounds):
-            if self.rng == "host":
-                preps = [lane._prepare_host_segment(a, b) for lane in lanes]
-                xss = stack([p[0] for p in preps])
-                constss = stack([p[1] for p in preps])
-                carries = stack([lane._host_carry() for lane in lanes])
-                carries, logs = self._sweep_jit(carries, xss, constss, b - a)
-                ctls = [p[2] for p in preps]
-            else:
-                preps = [lane._prepare_device_segment(a, b)
-                         for lane in lanes]
-                constss = stack([p[0] for p in preps])
-                carries = stack([lane._device_carry() for lane in lanes])
-                carries, logs = self._sweep_jit(carries, None, constss,
-                                                b - a)
-                ctls = [p[1] for p in preps]
-            for i, lane in enumerate(lanes):
-                lane._absorb_segment(a, b, ctls[i], unstack(carries, i),
-                                     unstack(logs, i))
-        if self.rng == "device":
-            for lane in lanes:
-                lane._sync_host_population()
+        # static-shape bucketing: one compiled program per distinct
+        # signature. The parent runner fronts for its own bucket (its
+        # cached _sweep_jit + closures keep serving repeat sweeps);
+        # other buckets elect their first lane as trace representative.
+        self_sig = self._lane_signature(self)
+        buckets: Dict[tuple, List[int]] = {}
+        for i, lane in enumerate(lanes):
+            buckets.setdefault(self._lane_signature(lane), []).append(i)
+        self._last_sweep_buckets = []
+        for sig, idxs in buckets.items():
+            glanes = [lanes[i] for i in idxs]
+            rep = self if sig == self_sig else glanes[0]
+            self._last_sweep_buckets.append(
+                {"signature": sig, "rep": rep, "lane_indices": list(idxs)})
+            pad = None
+            if self.rng == "device":
+                pad = max(max(p.size for p in lane.batcher.parts)
+                          for lane in glanes)
+            for lane in glanes:
+                lane._data_dev = self._data_dev   # one shared backing pool
+                lane._ensure_device_world(pad_to=pad)
+            for a, b in rep._segment_spans(0, num_rounds):
+                decide_first = rep._decide_first(a)
+                if self.rng == "host":
+                    preps = [lane._prepare_host_segment(a, b)
+                             for lane in glanes]
+                    xss = stack([p[0] for p in preps])
+                    constss = stack([p[1] for p in preps])
+                    carries = stack([lane._host_carry()
+                                     for lane in glanes])
+                    carries, logs = rep._sweep_jit(
+                        carries, xss, constss, b - a, decide_first)
+                    ctls = [p[2] for p in preps]
+                else:
+                    preps = [lane._prepare_device_segment(a, b)
+                             for lane in glanes]
+                    constss = stack([p[0] for p in preps])
+                    carries = stack([lane._device_carry()
+                                     for lane in glanes])
+                    carries, logs = rep._sweep_jit(
+                        carries, None, constss, b - a, decide_first)
+                    ctls = [p[1] for p in preps]
+                for i, lane in enumerate(glanes):
+                    lane._absorb_segment(a, b, ctls[i],
+                                         unstack(carries, i),
+                                         unstack(logs, i))
+            if self.rng == "device":
+                for lane in glanes:
+                    lane._sync_host_population()
         return [lane.history for lane in lanes]

@@ -24,7 +24,6 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -89,6 +88,17 @@ class BaseScheme:
         controls are segment constants either way."""
         return None
 
+    def scan_lane_signature(self, runner) -> tuple:
+        """Hashable identity of everything this scheme BAKES into a
+        scanned trace (compressor parameters, ablation switches, arm
+        grids, cadences). ``ScanRunner.run_sweep`` groups heterogeneous
+        lanes into one compiled program per distinct signature —
+        anything a lane varies that is NOT captured here (and not read
+        from traced per-lane data) would silently reuse another lane's
+        trace. Stateless schemes close only over shapes, so the type
+        name suffices."""
+        return (type(self).__name__,)
+
     def compressor(self, *, use_kernels: bool = False) -> Compressor:
         """The scheme's jit-able compression stage (default: identity)."""
         return identity_compressor()
@@ -128,6 +138,10 @@ class LTFLScheme(BaseScheme):
         self._decision: Optional[controller_mod.ControlDecision] = None
         self._solved_epoch: int = -1
         self._solved_cohort: int = -1
+        # how many TRACES embedded the Algorithm-1 solve (not how many
+        # rounds ran it) — the cadence tests pin that hold-round traces
+        # stay solve-free
+        self._n_decide_traces: int = 0
 
     def compressor(self, *, use_kernels: bool = False) -> Compressor:
         if not self.use_quant:
@@ -194,6 +208,14 @@ class LTFLScheme(BaseScheme):
         xi = self.runner.ltfl.xi_bits
         return (v * ctl.delta + xi) * (1.0 - ctl.rho)        # Eq. 18/32
 
+    def scan_lane_signature(self, runner) -> tuple:
+        # the trace bakes the ablation switches (they gate which solve
+        # runs) and the recontrol cadence (it shapes the segment plan);
+        # the channel regime itself is NOT baked — decide() reads it
+        # from the traced ltfl argument
+        return (type(self).__name__, self.scan_recontrol_every(runner),
+                self.uses_prune, self.use_quant, self.use_power)
+
     def scan_control_program(self, runner) -> ControlProgram:
         """The device-resident Algorithm 1: ``solve_dev`` (closed-form
         Theorems 2/3 + traced BO power control) re-solves in-scan against
@@ -204,29 +226,38 @@ class LTFLScheme(BaseScheme):
         Ablation switches mirror ``controls``: the decision is always the
         full Algorithm-1 solve (or, with ``use_power=False``, the
         closed-form pass at fixed mid power) and prune/quant are zeroed
-        afterward. The carried state is simply the last decision, so a
-        cadence k > 1 keeps controls fixed between recontrol rounds
-        (``lax.cond`` — note ``run_sweep``'s vmap turns that cond into a
-        select, i.e. sweeps pay the solve every round)."""
-        ltfl = runner.ltfl
-        w = ltfl.wireless
+        afterward. The carried state is simply the last decision; a
+        cadence k > 1 declares ``every=k`` and the segment planner
+        aligns segments to the cadence, so hold rounds run in traces
+        that never contain the solve (``decide=False``) — cadence-k is
+        actually ~k-times cheaper than per-round recontrol, in solo runs
+        AND in every ``run_sweep`` lane. Regime-dependent values are
+        read from the traced ``ltfl`` argument so heterogeneous channel
+        regimes can share this one trace as vmapped lanes."""
         v = runner.num_params
         u = runner.num_devices
         rc = self.scan_recontrol_every(runner)
         use_prune = self.uses_prune
         use_quant = self.use_quant
         use_power = self.use_power
+        scheme = self
 
-        def decide(ch, range_sq, key) -> DeviceControls:
+        def solve_controls(ltfl, ch, range_sq, key) -> DeviceControls:
+            # host-side trace counter: the cadence tests assert the
+            # solve is traced ONLY into on-cadence (decide=True) traces
+            scheme._n_decide_traces += 1
+            w = ltfl.wireless
             if use_power:
                 d = solve_dev(ltfl, ch, v, range_sq, key)
                 rho_full, delta_full, power = d.rho, d.delta, d.power
             else:
                 # fixed mid power, closed-form rho/delta only (the host
                 # _solve's no-power path, traced)
-                power = jnp.full((u,), jnp.float32(0.5 * w.p_max))
-                payload0 = payload_bits(v, jnp.float32(ltfl.delta_max),
-                                        ltfl.xi_bits)
+                power = jnp.full(
+                    (u,), 0.5 * jnp.asarray(w.p_max, jnp.float32))
+                payload0 = payload_bits(
+                    v, jnp.asarray(ltfl.delta_max, jnp.float32),
+                    ltfl.xi_bits)
                 rho_full = optimal_rho_dev(ltfl, ch, payload0, power)
                 delta_full = optimal_delta_dev(ltfl, ch, rho_full, power,
                                                v)
@@ -240,22 +271,22 @@ class LTFLScheme(BaseScheme):
             return DeviceControls(rho=rho, delta=delta, power=power,
                                   payload=payload)
 
+        w0 = runner.ltfl.wireless
         zeros = jnp.zeros((u,), jnp.float32)
         init = DeviceControls(
             rho=zeros, delta=zeros,
-            power=jnp.full((u,), jnp.float32(0.5 * (w.p_min + w.p_max))),
+            power=jnp.full((u,), jnp.float32(0.5 * (w0.p_min + w0.p_max))),
             payload=zeros)   # overwritten at the first recontrol round
 
-        def controls(state, r, cohort, ch, range_sq, key):
-            if rc <= 1:          # per-round recontrol: no cond needed
-                ctl = decide(ch, range_sq, key)
-            else:
-                ctl = jax.lax.cond(r % rc == 0,
-                                   lambda: decide(ch, range_sq, key),
-                                   lambda: state)
+        def controls(state, r, cohort, ch, range_sq, key, ltfl, *,
+                     decide):
+            if not decide:       # hold: the solve is NOT in this trace
+                return state, state
+            ctl = solve_controls(ltfl, ch, range_sq, key)
             return ctl, ctl
 
-        return ControlProgram(init=init, controls=controls)
+        return ControlProgram(init=init, controls=controls,
+                              every=max(rc, 1))
 
 
 class FedSGDScheme(BaseScheme):
@@ -281,6 +312,9 @@ class SignSGDScheme(BaseScheme):
 
     def __init__(self, lr_scale: float = 0.02):
         self.lr_scale = lr_scale   # signSGD needs a much smaller step
+
+    def scan_lane_signature(self, runner) -> tuple:
+        return (type(self).__name__, self.lr_scale)   # baked into the step
 
     def compressor(self, *, use_kernels: bool = False) -> Compressor:
         return sign_compressor(self.lr_scale)
@@ -350,6 +384,12 @@ class FedMPScheme(BaseScheme):
     def scan_recontrol_every(self, runner) -> int:
         return 1          # the bandit re-decides (and learns) every round
 
+    def scan_lane_signature(self, runner) -> tuple:
+        # the arm grid and exploration constant are closed over (static
+        # scheme config), so lanes varying them cannot share a trace
+        return (type(self).__name__, tuple(float(a) for a in self.arms),
+                float(self.ucb_c))
+
     def scan_control_program(self, runner) -> ControlProgram:
         """The UCB bandit as a carried jnp pytree: (N, A) counts/values
         plus the running prev-loss, updated in-scan by ``feedback`` (the
@@ -363,7 +403,6 @@ class FedMPScheme(BaseScheme):
         ucb_c = jnp.float32(self.ucb_c)
         u = runner.num_devices
         v = runner.num_params
-        p_mid = jnp.full((u,), jnp.float32(0.5 * runner.ltfl.wireless.p_max))
         zeros = jnp.zeros((u,), jnp.float32)
 
         init = {
@@ -375,7 +414,10 @@ class FedMPScheme(BaseScheme):
                                     else 1.0),
         }
 
-        def controls(state, r, cohort, ch, range_sq, key):
+        def controls(state, r, cohort, ch, range_sq, key, ltfl, *,
+                     decide):
+            # every=1: each round is a decide round (decide is always
+            # True here; the bandit has no hold path)
             c = state["counts"][cohort]                       # (U, A)
             rw = state["rewards"][cohort]
             t = jnp.float32(r) + 1.0
@@ -387,6 +429,8 @@ class FedMPScheme(BaseScheme):
                                jnp.argmin(c, axis=1),
                                jnp.argmax(ucb, axis=1)).astype(jnp.int32)
             rho = arms[choice]
+            p_mid = jnp.full(
+                (u,), 0.5 * jnp.asarray(ltfl.wireless.p_max, jnp.float32))
             ctl = DeviceControls(
                 rho=rho, delta=zeros, power=p_mid,
                 payload=32.0 * jnp.float32(v) * (1.0 - rho))
@@ -443,6 +487,9 @@ class STCScheme(BaseScheme):
 
     def __init__(self, sparsity: float = 0.01):
         self.sparsity = sparsity
+
+    def scan_lane_signature(self, runner) -> tuple:
+        return (type(self).__name__, self.sparsity)   # baked into the step
 
     def compressor(self, *, use_kernels: bool = False) -> Compressor:
         return stc_compressor(self.sparsity)

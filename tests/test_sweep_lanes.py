@@ -1,0 +1,210 @@
+"""Heterogeneous sweep lanes: SweepSpec grids, static-shape bucketing
+(one compiled program per bucket), per-lane bit parity with solo runs,
+and the recontrol-cadence segment split under control="device"."""
+import dataclasses
+import math
+
+import jax
+import pytest
+
+from repro.configs.base import LTFLConfig
+from repro.data import ArrayDataset, synthetic_cifar
+from repro.fed import (
+    FedSGDScheme,
+    LTFLScheme,
+    LaneSpec,
+    ScanRunner,
+    STCScheme,
+    SweepSpec,
+)
+from repro.models import MLP
+
+LTFL = LTFLConfig(num_devices=4, samples_min=40, samples_max=60,
+                  bo_iters=3, alt_max_iters=2)
+
+# a second channel/budget regime differing ONLY in laned floats: same
+# shapes, same static constants -> same compile bucket as LTFL
+TIGHT = dataclasses.replace(
+    LTFL, t_max=1000.0, e_max=5.0,
+    wireless=dataclasses.replace(LTFL.wireless, p_max=0.05, n0=8e-21))
+
+
+@pytest.fixture(scope="module")
+def world():
+    imgs, labels = synthetic_cifar(600, seed=0)
+    timgs, tlabels = synthetic_cifar(128, seed=1)
+    train = ArrayDataset({"images": imgs, "labels": labels})
+    test = ArrayDataset({"images": timgs, "labels": tlabels})
+    model = MLP()
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params, train, test
+
+
+def assert_bit_equal(h_lane, h_solo):
+    """A sweep lane must replay its solo run EXACTLY: solo segments run
+    the identical laned-constant trace, so even f32 accounting is
+    bitwise reproducible, not merely close."""
+    assert len(h_lane) == len(h_solo)
+    for a, b in zip(h_lane, h_solo):
+        assert a.round == b.round
+        assert a.received == b.received
+        assert a.cohort == b.cohort
+        for f in ("train_loss", "delay", "energy", "cum_delay",
+                  "cum_energy", "gamma", "rho_mean", "delta_mean",
+                  "power_mean", "test_acc"):
+            va, vb = getattr(a, f), getattr(b, f)
+            if isinstance(va, float) and math.isnan(va):
+                assert math.isnan(vb), f
+            else:
+                assert va == vb, f
+
+
+# --------------------------------------------------------------------------- #
+# SweepSpec construction
+# --------------------------------------------------------------------------- #
+def test_grid_is_labelled_cross_product():
+    spec = SweepSpec.grid(
+        schemes={"fedsgd": FedSGDScheme, "stc": STCScheme},
+        ltfls={"narrow": LTFL}, seeds=(0, 1))
+    assert len(spec.lanes) == 4
+    assert [lane.label for lane in spec.lanes] == [
+        "fedsgd/narrow/s0", "fedsgd/narrow/s1",
+        "stc/narrow/s0", "stc/narrow/s1"]
+    assert {lane.seed for lane in spec.lanes} == {0, 1}
+    # omitted axes contribute one inherit-from-parent point
+    solo = SweepSpec.grid(seeds=(3,))
+    assert len(solo.lanes) == 1
+    assert solo.lanes[0] == LaneSpec(seed=3, label="s3")
+
+
+def test_empty_spec_and_legacy_factory_conflict(world):
+    with pytest.raises(ValueError, match="at least one lane"):
+        SweepSpec(lanes=())
+    model, params, train, test = world
+    runner = ScanRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                        batch_size=8, seed=0, eval_every=0)
+    with pytest.raises(ValueError, match="scheme_factory"):
+        runner.run_sweep(SweepSpec.grid(seeds=(0,)), 2,
+                         scheme_factory=FedSGDScheme)
+
+
+def test_seed_list_is_degenerate_sweepspec(world):
+    """The legacy seeds-list API is exactly a one-axis SweepSpec."""
+    model, params, train, test = world
+    runner = ScanRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                        batch_size=8, seed=0, eval_every=0)
+    h_list = runner.run_sweep([0, 1], 3)
+    assert runner._n_traces == 1
+    h_spec = runner.run_sweep(SweepSpec.grid(seeds=(0, 1)), 3)
+    assert runner._n_traces == 1          # cached bucket trace reused
+    for hl, hs in zip(h_list, h_spec):
+        assert_bit_equal(hl, hs)
+
+
+# --------------------------------------------------------------------------- #
+# heterogeneous lanes: bucketing + per-lane solo parity (host rng)
+# --------------------------------------------------------------------------- #
+def test_heterogeneous_lanes_bit_match_solo_runs(world):
+    """scheme x regime x seed grid: regimes are LANED (share a bucket),
+    schemes are static (one bucket each), and every lane bit-matches a
+    solo ScanRunner of the same config."""
+    model, params, train, test = world
+    spec = SweepSpec.grid(
+        schemes={"fedsgd": FedSGDScheme, "stc": STCScheme},
+        ltfls={"narrow": LTFL, "tight": TIGHT}, seeds=(0, 1))
+    parent = ScanRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                        batch_size=8, seed=0, eval_every=0)
+    hists = parent.run_sweep(spec, 4)
+    assert len(hists) == 8
+
+    # one compiled program per scheme bucket; the regime axis rides the
+    # laned constants and opens NO new bucket
+    assert len(parent._last_sweep_buckets) == 2
+    assert [len(b["lane_indices"]) for b in parent._last_sweep_buckets] \
+        == [4, 4]
+    for b in parent._last_sweep_buckets:
+        assert b["rep"]._n_traces == 1
+    # the parent fronts for its own (fedsgd) bucket
+    assert parent._last_sweep_buckets[0]["rep"] is parent
+
+    for lane, hist in zip(spec.lanes, hists):
+        scheme = (FedSGDScheme if lane.label.startswith("fedsgd")
+                  else STCScheme)()
+        solo = ScanRunner(model, params, lane.ltfl, train, test, scheme,
+                          batch_size=8, seed=lane.seed, eval_every=0)
+        assert_bit_equal(hist, solo.run(4))
+
+    # the laned regime must actually reach the accounting: tighter power
+    # cap + budgets change delay/energy for the same scheme and seed
+    by_label = dict(zip([lane.label for lane in spec.lanes], hists))
+    assert by_label["fedsgd/narrow/s0"][-1].energy \
+        != by_label["fedsgd/tight/s0"][-1].energy
+
+
+# --------------------------------------------------------------------------- #
+# control="device": recontrol cadence splits segments, holds skip the solve
+# --------------------------------------------------------------------------- #
+def test_device_cadence_splits_segments_without_per_round_solve(world):
+    """recontrol_every=k under control='device' used to embed the
+    Algorithm-1 solve in EVERY round body behind a lax.cond that vmap
+    lowers to a select (both branches pay). Now segments split at the
+    cadence: decide rounds trace the solve once, hold rounds are
+    solve-free."""
+    model, params, train, test = world
+    scheme = LTFLScheme(recontrol_every=4)
+    runner = ScanRunner(model, params, LTFL, train, test, scheme,
+                        batch_size=8, seed=0, eval_every=0,
+                        rng="device", control="device")
+    assert runner._segment_spans(0, 8) == [(0, 4), (4, 8)]
+    assert [runner._decide_first(a) for a, _ in ((0, 4), (4, 8))] \
+        == [True, True]
+    hist = runner.run(8)
+    assert len(hist) == 8
+    # equal-length equal-phase segments share ONE trace, and that trace
+    # embeds the Theorem-2/3 solve exactly once
+    assert runner._n_traces == 1
+    assert scheme._n_decide_traces == 1
+
+    # max_segment caps the spans; capped holds get decide_first=False
+    scheme2 = LTFLScheme(recontrol_every=4)
+    capped = ScanRunner(model, params, LTFL, train, test, scheme2,
+                        batch_size=8, seed=0, eval_every=0,
+                        rng="device", control="device", max_segment=2)
+    assert capped._segment_spans(0, 8) == [(0, 2), (2, 4), (4, 6), (6, 8)]
+    assert [capped._decide_first(a) for a, _ in capped._segment_spans(0, 8)] \
+        == [True, False, True, False]
+    capped.run(8)
+    # one trace per decide phase (decide-first vs hold), solve in one
+    assert capped._n_traces == 2
+    assert scheme2._n_decide_traces == 1
+
+
+def test_device_control_lanes_bit_match_solo_runs(world):
+    """LTFL device-control lanes across channel regimes: one bucket, one
+    solve trace, per-lane bit parity with solo device-control runs, and
+    per-lane regimes reaching the in-scan Algorithm 1."""
+    model, params, train, test = world
+
+    def ltfl_scheme():
+        return LTFLScheme(recontrol_every=2)
+
+    parent = ScanRunner(model, params, LTFL, train, test, ltfl_scheme(),
+                        batch_size=8, seed=0, eval_every=0,
+                        rng="device", control="device")
+    spec = SweepSpec.grid(schemes={"ltfl": ltfl_scheme},
+                          ltfls={"narrow": LTFL, "tight": TIGHT},
+                          seeds=(0,))
+    hists = parent.run_sweep(spec, 6)
+    assert len(parent._last_sweep_buckets) == 1
+    assert parent._last_sweep_buckets[0]["rep"] is parent
+
+    for lane, hist in zip(spec.lanes, hists):
+        solo = ScanRunner(model, params, lane.ltfl, train, test,
+                          ltfl_scheme(), batch_size=8, seed=0,
+                          eval_every=0, rng="device", control="device")
+        assert_bit_equal(hist, solo.run(6))
+
+    # the tight lane's p_max=0.05 cap must bind inside the traced solve
+    narrow, tight = hists
+    assert narrow[-1].power_mean != tight[-1].power_mean
+    assert tight[-1].power_mean <= 0.05 + 1e-6
