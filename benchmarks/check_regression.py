@@ -15,7 +15,10 @@ against its COMMITTED baseline artifact:
   device-resident registry (``ScanRunner`` + ``population_sharding``,
   in-scan two-stage cohort draws): per-round cost must stay flat from
   the smallest to the largest shared N, three orders of magnitude past
-  the host path's ceiling.
+  the host path's ceiling. Also gates the COLD-START setup rows: the
+  vectorized partition + parts-table build must keep its measured
+  speedup over the committed per-shard loop chain (speedup-floor rule,
+  rows shared by smoke and baseline).
 * **scan_engine** — scanned-segment speedup over the per-round FedRunner
   loop (rows matched by (clients, rounds)).
 * **device_control** — in-scan Algorithm-1 recontrol
@@ -194,13 +197,41 @@ def check_population(cur, base, tol, cur_path, base_path) -> bool:
                                   cur_path, base_path)
 
 
+def _setup_speedups(payload: dict, *, gate: str, path: str) -> dict:
+    """{`N=...`: vectorized-over-loop setup speedup} from the sharded
+    sweep's cold-start rows (only rows where the loop baseline ran —
+    ``loop_cap`` bounds the slow side)."""
+    setup = payload.get("setup")
+    if not isinstance(setup, dict) or not setup.get("rows"):
+        raise GateInputError(
+            f"gate {gate}: {path} has no 'setup' section — regenerate "
+            f"the artifact with the current population_scale benchmark")
+    rows = {f"setup N={int(r['population'])}": float(r["speedup"])
+            for r in setup["rows"] if "speedup" in r}
+    if not rows:
+        raise GateInputError(
+            f"gate {gate}: {path} setup rows carry no loop-baseline "
+            f"speedup (loop_cap below every measured N?)")
+    return rows
+
+
 def check_population_sharded(cur, base, tol, cur_path,
                              base_path) -> bool:
     # the committed baseline sweeps to 10^6 while the smoke stops at
     # 10^5 for CI speed — the gate runs on the shared-N ratio, and the
     # two sweeps are kept overlapping at N=10^4 and 10^5 (pop_sizes)
-    return _check_population_flat("population_sharded", cur, base, tol,
-                                  cur_path, base_path)
+    ok = _check_population_flat("population_sharded", cur, base, tol,
+                                cur_path, base_path)
+    # cold-start setup: the vectorized partition + parts-table build
+    # must hold its measured edge over the committed loop chain (rows
+    # shared by smoke and baseline; same relative-floor rule as the
+    # speedup gates)
+    ok &= _check_speedup_floor(
+        "population_sharded/setup",
+        _setup_speedups(cur, gate="population_sharded", path=cur_path),
+        _setup_speedups(base, gate="population_sharded", path=base_path),
+        tol)
+    return ok
 
 
 def check_scan(cur, base, tol, cur_path, base_path) -> bool:

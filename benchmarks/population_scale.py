@@ -15,7 +15,11 @@ a ("pop",) mesh of virtual host devices, cohorts drawn in-scan by the
 two-stage sharded channel-aware twin under lazy block fading. Per-round
 cost there is O(N/S) elementwise + O(S*U) merge + the (U,) compiled
 round, so the same flat-in-N bar (<= 1.3x from min N to max N) holds
-three orders of magnitude past the host path's ceiling.
+three orders of magnitude past the host path's ceiling. The sharded
+sweep also measures the one-time COLD-START setup per N (vectorized
+partition + parts-table build vs the committed per-shard loop chain,
+loop side capped at ``loop_cap``) — the gated ``setup`` rows in the
+artifact.
 
 Run:  PYTHONPATH=src python -m benchmarks.population_scale [--smoke]
       PYTHONPATH=src python -m benchmarks.population_scale --sharded [--smoke]
@@ -42,7 +46,12 @@ import numpy as np
 from benchmarks.common import emit, save_artifact
 from repro.configs.base import LTFLConfig
 from repro.configs.ltfl_paper import ResNetConfig
-from repro.data import ArrayDataset, synthetic_cifar
+from repro.data import (
+    ArrayDataset,
+    population_partition,
+    population_partition_reference,
+    synthetic_cifar,
+)
 from repro.fed import (
     ChannelAwareSampler,
     FedRunner,
@@ -123,6 +132,68 @@ def run(pop_sizes=(64, 256, 1024, 4096), cohort_sizes=(16, 32),
     return payload
 
 
+def _loop_setup_baseline(pool: int, sizes: np.ndarray, seed: int):
+    """Faithful replay of the COMMITTED cold-start path: the per-shard
+    ``while``-loop partition (kept in-tree as
+    ``population_partition_reference``), the old ClientBatcher's
+    per-client list conversion + empty-shard guard, and the old
+    ``_ensure_device_world`` per-row padded-table fill. This is the
+    baseline the setup gate measures the vectorized path against."""
+    ref = population_partition_reference(
+        pool, sizes.tolist(), np.random.default_rng(seed))
+    parts = [np.asarray(p, dtype=np.int64) for p in ref]
+    for u, p in enumerate(parts):
+        if p.size == 0:
+            raise ValueError(f"client {u} has an empty partition")
+    sz = np.asarray([p.size for p in parts], np.int32)
+    width = int(sz.max())
+    padded = np.empty((len(sz), width), np.int32)
+    for i, p in enumerate(parts):
+        padded[i, :p.size] = p
+        padded[i, p.size:] = p[0]
+    return padded, sz
+
+
+def _vec_setup(pool: int, sizes: np.ndarray, seed: int):
+    """The shipped cold-start path: one vectorized partition pass into a
+    ``PackedParts`` and the sliced/padded table the registry uploads."""
+    parts = population_partition(pool, sizes, np.random.default_rng(seed))
+    return parts.padded(), parts.client_sizes().astype(np.int32)
+
+
+def _setup_rows(pop_sizes, pool: int, loop_cap: int, trials: int,
+                samples=(40, 61), seed: int = 0) -> list:
+    """Cold-start setup time per population size: the vectorized O(N)
+    partition + parts-table build vs the committed loop chain. The loop
+    baseline only runs at N <= ``loop_cap`` (it is the slow side being
+    replaced); larger N report the vectorized time alone."""
+    rows = []
+    for n in pop_sizes:
+        sizes = np.random.default_rng(seed).integers(*samples, n)
+        vec_s = min(_timed(_vec_setup, pool, sizes, seed, trials=trials))
+        row = {"population": int(n), "vec_s": vec_s}
+        detail = f"vectorized partition+parts table, min of {trials}"
+        if n <= loop_cap:
+            loop_s = min(_timed(_loop_setup_baseline, pool, sizes, seed,
+                                trials=trials))
+            row.update(loop_s=loop_s,
+                       speedup=loop_s / max(vec_s, 1e-9))
+            detail += (f"; loop baseline {loop_s:.2f}s -> "
+                       f"{row['speedup']:.1f}x")
+        emit(f"population_sharded/setup_N{n}", vec_s * 1e6, detail)
+        rows.append(row)
+    return rows
+
+
+def _timed(fn, *args, trials: int) -> list:
+    out = []
+    for _ in range(trials):
+        t0 = time.time()
+        fn(*args)
+        out.append(time.time() - t0)
+    return out
+
+
 def _time_scan(runner, rounds: int, trials: int) -> list:
     runner.run(rounds)     # warmup: upload the registry + compile the scan
     per_round = []
@@ -136,7 +207,7 @@ def _time_scan(runner, rounds: int, trials: int) -> list:
 def run_sharded(pop_sizes=(10_000, 100_000, 1_000_000),
                 cohort_sizes=(16, 32), rounds: int = 2, trials: int = 2,
                 batch: int = 16, pool: int = 2048, width: int = 8,
-                shards: int = None,
+                shards: int = None, loop_cap: int = 100_000,
                 artifact: str = "population_sharded") -> dict:
     """Min-of-trials per-round wall clock of the SHARDED registry across
     the (N, U) grid: ScanRunner in device-rng mode, the (N_pad,) channel
@@ -144,8 +215,15 @@ def run_sharded(pop_sizes=(10_000, 100_000, 1_000_000),
     cohort draws on lazily-refreshed block fading. Timings are whole
     ``run(rounds)`` calls per round, so they include the in-scan draw,
     the O(U) refresh and the once-per-run host sync; registry upload and
-    data partition are one-time setup outside the timer."""
+    data partition are one-time setup outside the timer.
+
+    The one-time setup gets its own measured column (``setup`` in the
+    artifact): per N, the vectorized partition + parts-table build vs the
+    committed per-shard loop chain (``_loop_setup_baseline``), loop side
+    capped at ``loop_cap`` — both paths are linear in sum(sizes), the
+    vectorized one just sheds the per-shard Python constant."""
     shards = jax.device_count() if shards is None else shards
+    setup_rows = _setup_rows(pop_sizes, pool, loop_cap, trials)
     model, params, train, test = _world(pool=pool, width=width)
     ltfl_proto = dict(samples_min=40, samples_max=60, learning_rate=0.15)
     groups = []
@@ -165,8 +243,14 @@ def run_sharded(pop_sizes=(10_000, 100_000, 1_000_000),
             emit(f"population_sharded/N{n}_U{u}", t * 1e6,
                  f"population {n} over {shards} shards, cohort {u}, "
                  f"min of {trials}")
+            # the parts table rides the ("pop",) mesh: per-device bytes
+            # must be ~N/S of the table, not a full replica
+            tbl = runner._parts_padded
+            per_dev = max(s.data.nbytes for s in tbl.addressable_shards)
             rows.append({"population": n, "cohort": u, "s_per_round": t,
-                         "trials_s": trials_s})
+                         "trials_s": trials_s,
+                         "parts_bytes_total": int(tbl.nbytes),
+                         "parts_bytes_per_device": int(per_dev)})
         ratio = rows[-1]["s_per_round"] / rows[0]["s_per_round"]
         emit(f"population_sharded/ratio_U{u}",
              rows[-1]["s_per_round"] * 1e6,
@@ -176,7 +260,9 @@ def run_sharded(pop_sizes=(10_000, 100_000, 1_000_000),
                        "ratio_maxN_over_minN": ratio})
     payload = {"rounds": rounds, "trials": trials, "batch": batch,
                "pool": pool, "width": width, "shards": shards,
-               "pop_sizes": list(pop_sizes), "groups": groups}
+               "pop_sizes": list(pop_sizes), "groups": groups,
+               "setup": {"pool": pool, "loop_cap": loop_cap,
+                         "trials": trials, "rows": setup_rows}}
     save_artifact(artifact, payload)
     return payload
 

@@ -25,10 +25,14 @@ charges the gap for client-sampling noise. With pi = 1 everywhere both
 reduce exactly to the full-participation Eq. 29.
 
 ``gamma_dev`` is the jnp-native twin of ``gamma`` — the identical Eq. 29
-arithmetic (including the partial-participation HT terms), but traceable,
-so the scanned round engine evaluates each round's Gamma from the
-*measured* in-jit gradient ranges without a host round trip (f32;
-tolerance-pinned to the float64 host path by tests/test_scan_engine).
+arithmetic (including the partial-participation HT terms), but traceable
+(f32; tolerance-pinned to the float64 host path by
+tests/test_scan_engine). The in-scan controller scores its candidate
+controls with it (repro.control.device_controller). The scan engine's
+per-round REPORTED gamma, by contrast, is reduced on host in float64
+from logged input vectors (repro.fed.scan_engine ``RoundLog``): an
+in-jit reduction lowers differently under the ``run_sweep`` vmap than in
+a solo trace and drifts a ulp, breaking the lane==solo bitwise contract.
 """
 from __future__ import annotations
 

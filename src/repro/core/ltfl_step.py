@@ -21,6 +21,10 @@ one-compiled-call-per-round semantics.
     drop_prob  (C,) packet error rates q_u(p_u)  (in-jit Bernoulli), OR
     alpha      (C,) host-sampled transmission outcomes (edge engine: the
                channel stays on host, Eq. 4, only tensor work is jitted)
+    lr         () optional laned learning rate; when present it is routed
+               to ``optimizer.update_with_lr`` so lr-only sweep grids
+               share one compiled program (bitwise-identical to the baked
+               ``optimizer.update`` path — see repro.optim.Optimizer)
 
 With ``use_kernels=True`` the 2-D-tileable leaves route through the Pallas
 kernels in repro.kernels.ops (block-prune norms/masking and the dynamic-
@@ -172,7 +176,16 @@ def make_fl_train_step(model, optimizer: Optimizer, n_clients: int,
         g = aggregate(grads, controls["weights"], alpha,
                       denom=controls.get("agg_denom"))
         g = comp.server_transform(g)
-        updates, opt_state = optimizer.update(g, opt_state, params)
+        lr = controls.get("lr")
+        if lr is None:
+            updates, opt_state = optimizer.update(g, opt_state, params)
+        elif optimizer.update_with_lr is None:
+            raise ValueError(
+                "controls['lr'] lanes the learning rate through the step, "
+                "but this optimizer does not provide update_with_lr")
+        else:
+            updates, opt_state = optimizer.update_with_lr(
+                g, opt_state, params, lr)
         params = apply_updates(params, updates)                      # Eq. 20
         metrics = {
             "loss": jnp.mean(losses),

@@ -1,8 +1,10 @@
 from repro.data.partition import (
+    PackedParts,
     class_histogram,
     dirichlet_partition,
     iid_partition,
     population_partition,
+    population_partition_reference,
 )
 from repro.data.pipeline import ArrayDataset, ClientBatcher
 from repro.data.synthetic import synthetic_cifar, synthetic_lm
@@ -10,10 +12,12 @@ from repro.data.synthetic import synthetic_cifar, synthetic_lm
 __all__ = [
     "ArrayDataset",
     "ClientBatcher",
+    "PackedParts",
     "synthetic_cifar",
     "synthetic_lm",
     "iid_partition",
     "dirichlet_partition",
     "population_partition",
+    "population_partition_reference",
     "class_histogram",
 ]

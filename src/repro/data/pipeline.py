@@ -12,6 +12,8 @@ from typing import Dict, Iterator, Optional, Sequence
 
 import numpy as np
 
+from repro.data.partition import PackedParts
+
 
 class ArrayDataset:
     """Dict-of-arrays dataset with shuffled minibatch iteration."""
@@ -46,21 +48,34 @@ class ClientBatcher:
     """Stacked client-batch construction over a shared backing dataset.
 
     ``parts[u]`` holds client u's global indices into ``base`` (from
-    ``iid_partition`` / ``dirichlet_partition``). ``batch`` samples B
-    local indices per client (with replacement only when a client holds
-    fewer than B samples, matching ``ArrayDataset.batch``), maps them to a
-    (C, B) global index matrix, and gathers each leaf once — the input the
+    ``iid_partition`` / ``dirichlet_partition``, or a ``PackedParts``
+    from ``population_partition``). ``batch`` samples B local indices per
+    client (with replacement only when a client holds fewer than B
+    samples, matching ``ArrayDataset.batch``), maps them to a (C, B)
+    global index matrix, and gathers each leaf once — the input the
     unified round engine's vmapped step expects.
+
+    A ``PackedParts`` is adopted as-is — no per-client copies, no O(N)
+    Python loop, and empty shards are allowed (``population_partition``
+    explicitly emits them for zero-sample devices; the device engine
+    never draws from them, and a host-side ``batch_indices`` on an empty
+    client raises). The legacy list form keeps its eager per-client
+    validation: an empty partition there is a partitioning bug, not a
+    registered zero-sample device.
     """
 
-    def __init__(self, base: ArrayDataset, parts: Sequence[np.ndarray]):
-        if not parts:
+    def __init__(self, base: ArrayDataset,
+                 parts: Sequence[np.ndarray]):
+        if not len(parts):
             raise ValueError("need at least one client partition")
         self.base = base
-        self.parts = [np.asarray(p, dtype=np.int64) for p in parts]
-        for u, p in enumerate(self.parts):
-            if p.size == 0:
-                raise ValueError(f"client {u} has an empty partition")
+        if isinstance(parts, PackedParts):
+            self.parts = parts
+        else:
+            self.parts = [np.asarray(p, dtype=np.int64) for p in parts]
+            for u, p in enumerate(self.parts):
+                if p.size == 0:
+                    raise ValueError(f"client {u} has an empty partition")
         self.num_clients = len(self.parts)
 
     def batch_indices(self, batch_size: int, rng: np.random.Generator,
@@ -75,6 +90,12 @@ class ClientBatcher:
         """
         parts = self.parts if clients is None \
             else [self.parts[int(c)] for c in clients]
+        for p in parts:
+            if p.size == 0:
+                raise ValueError(
+                    "cannot draw a host batch from a zero-sample client; "
+                    "only the device engine tolerates scheduling one "
+                    "(its draws are clamped and zero-weighted)")
         return np.stack([
             p[rng.choice(p.size, size=batch_size,
                          replace=batch_size > p.size)]
@@ -95,4 +116,26 @@ class ClientBatcher:
         return {k: v[idx] for k, v in self.base.arrays.items()}
 
     def client_sizes(self) -> np.ndarray:
+        if isinstance(self.parts, PackedParts):
+            return self.parts.client_sizes()
         return np.asarray([p.size for p in self.parts], dtype=np.int64)
+
+    def padded_parts(self, width: Optional[int] = None,
+                     dtype=np.int32) -> np.ndarray:
+        """The (N, W) zero-padded per-client index table the device
+        engine gathers batches from (``repro.fed.scan_engine``); row u's
+        first ``client_sizes()[u]`` entries are client u's global
+        indices, the rest zeros. One vectorized build either way —
+        ``PackedParts`` slices its own table; the legacy list form fills
+        a mask in one pass (empty rows stay all-zero instead of the old
+        per-row ``p[0]`` broadcast, which crashed on empty shards)."""
+        if isinstance(self.parts, PackedParts):
+            return self.parts.padded(width, dtype=dtype)
+        sizes = self.client_sizes()
+        w = int(max(int(sizes.max(initial=0)), width or 0))
+        table = np.zeros((self.num_clients, w), dtype)
+        mask = np.arange(w) < sizes[:, None]
+        if self.parts:
+            table[mask] = np.concatenate(
+                [p for p in self.parts if p.size])
+        return table

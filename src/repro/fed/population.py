@@ -53,7 +53,14 @@ population work runs under ``shard_map``:
   fading/interference values and drop-scatters them into each shard's
   block for the scheduled-and-stale members only — host ``Population``
   semantics (schedule on stale CSI, then refresh the cohort), never an
-  O(N) redraw.
+  O(N) redraw;
+* the per-device DATA-INDEX table rides the same layout: the scan
+  engine's (N_pad, W) int32 ``parts_padded`` (built vectorized from
+  ``PackedParts`` — the setup complexity contract in
+  repro.data.partition: no O(N) Python loops on the cold-start path)
+  shards row-wise over 'pop', and ``gather_parts_dev`` psum-gathers just
+  the cohort's (U, W) rows each round — per-device residency and setup
+  both scale at N/S, never N.
 
 The host ``Population`` stays the small-N reference: a single-shard mesh
 degenerates to the host cohort sequence (seeded-parity-tested in
@@ -264,6 +271,33 @@ def gather_cohort_dev(mesh: Mesh, channel: ChannelArrays,
     stacked = gather(jnp.stack(tuple(channel)),
                      cohort.astype(jnp.int32))
     return ChannelArrays(*stacked)
+
+
+def gather_parts_dev(mesh: Mesh, table: jax.Array, sizes: jax.Array,
+                     cohort: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Assemble the cohort's partition rows out of the SHARDED parts
+    table: ``table`` is the (N_pad, W) int32 per-device data-index table
+    laid out over 'pop' (rows), ``sizes`` the matching (N_pad,) shard
+    sizes. Returns the replicated ((U, W) rows, (U,) sizes) pair the
+    in-scan batch draw consumes — same psum-gather as
+    ``gather_cohort_dev`` (each shard contributes the members in its
+    block, zeros elsewhere; integer psum is exact), so the gathered rows
+    match a replicated-table ``jnp.take`` bit for bit while per-device
+    residency stays at N_pad/S rows. Per-shard work is O(U * W);
+    the (N_pad, W) table never materializes on one device."""
+
+    @partial(shard_map, mesh=mesh, in_specs=(P("pop", None), P("pop"), P()),
+             out_specs=(P(), P()), check_rep=False)
+    def gather(tbl, sz, coh):
+        blk = tbl.shape[0]
+        loc = coh - jax.lax.axis_index("pop").astype(jnp.int32) * blk
+        in_blk = (loc >= 0) & (loc < blk)
+        locc = jnp.clip(loc, 0, blk - 1)
+        rows = jnp.where(in_blk[:, None], jnp.take(tbl, locc, axis=0), 0)
+        s = jnp.where(in_blk, jnp.take(sz, locc), 0)
+        return jax.lax.psum(rows, "pop"), jax.lax.psum(s, "pop")
+
+    return gather(table, sizes, cohort.astype(jnp.int32))
 
 
 def host_sync(population: Population, pop: PopulationArrays) -> None:

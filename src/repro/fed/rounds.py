@@ -201,7 +201,10 @@ class FedRunner:
         self._per_cache: "OrderedDict[bytes, np.ndarray]" = OrderedDict()
         self._per_cache_epoch = (-1, -1)
 
-        sizes = self.population.channel.num_samples.tolist()
+        # the (N,) shard-size vector stays an ndarray end to end: at
+        # population scale a .tolist() here is an O(N) Python
+        # materialization before the vectorized partition even starts
+        sizes = self.population.channel.num_samples
         if non_iid_alpha > 0:
             parts = dirichlet_partition(train.arrays[label_key], sizes,
                                         non_iid_alpha, self.np_rng)
@@ -253,16 +256,16 @@ class FedRunner:
         shapes (cohort width, population, batch, parameter count),
         static loop bounds (Algorithm 1's BO draw count and alternation
         cap), and the hyperparameters closed over by the step function
-        (learning rate, kernel routing). ``ScanRunner.run_sweep`` groups
-        heterogeneous lanes into one compiled program per distinct
-        signature; config values NOT listed here are laned — stacked per
-        lane and read in-trace (``scan_engine._LANED_WIRELESS`` /
-        ``_LANED_LTFL``)."""
+        (kernel routing). ``ScanRunner.run_sweep`` groups heterogeneous
+        lanes into one compiled program per distinct signature; config
+        values NOT listed here are laned — stacked per lane and read
+        in-trace (``scan_engine._LANED_WIRELESS`` / ``_LANED_LTFL``; the
+        learning rate rides those laned consts into the step's
+        ``controls["lr"]``, so lr-only grids share one bucket)."""
         return (self.num_devices, self.population_size, self.batch_size,
                 self.num_params, self.eval_every, self.participation,
                 self.block_fading, self._use_kernels,
-                float(self.ltfl.learning_rate), int(self.ltfl.bo_iters),
-                int(self.ltfl.alt_max_iters))
+                int(self.ltfl.bo_iters), int(self.ltfl.alt_max_iters))
 
     @property
     def devices(self):

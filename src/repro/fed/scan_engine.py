@@ -9,9 +9,15 @@ sweeps over small edge models — that dispatch overhead IS the cost.
 ``ScanRunner`` folds whole *segments* of rounds into ONE compiled
 ``lax.scan`` whose body is the unified train step (repro.core.ltfl_step)
 plus the jnp-native accounting twins (``packet_error_rate_dev``,
-``device_round_delay_dev`` / ``_energy_dev``, ``gamma_dev``), and
-``run_sweep`` batches S seeded replicas of the whole experiment through
-``vmap`` so a scheme-comparison curve costs one compile.
+``device_round_delay_dev`` / ``_energy_dev``), and ``run_sweep`` batches
+S seeded replicas of the whole experiment through ``vmap`` so a
+scheme-comparison curve costs one compile. Gamma (Eq. 29) is the one
+diagnostic NOT reduced in-scan: its per-device input vectors ride
+``RoundLog`` and the host reduces them in float64 afterwards
+(``_absorb_segment``), so every ``run_sweep`` lane and its solo run
+share one numpy code path and report bit-identical gamma — in-jit
+reductions lower differently under the sweep ``vmap`` (reduce strategy,
+FMA fusion) and drift by a ulp.
 
 Segmentation
 ------------
@@ -83,7 +89,8 @@ grids as lanes. Two mechanisms make one trace serve many configs:
   equal to its solo run;
 * **shape buckets**: everything NOT laned — array shapes (U, N, batch),
   static loop bounds (BO iterations), step-function hyperparameters
-  (learning rate, compressor constants) — is baked into the trace and
+  (compressor constants; the learning rate itself is LANED, riding the
+  segment consts into ``controls["lr"]``) — is baked into the trace and
   therefore part of the lane's bucket signature
   (``_lane_signature``). ``run_sweep`` groups lanes by signature and
   compiles ONE program per bucket, not one per config: an 8-config
@@ -107,6 +114,7 @@ from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core.channel import (
     ChannelArrays,
@@ -114,18 +122,24 @@ from repro.core.channel import (
     packet_error_rate_dev,
     sample_transmissions_dev,
 )
-from repro.core.convergence import gamma_dev
+from repro.core.convergence import gamma
 from repro.core.delay_energy import round_accounting_dev
 from repro.fed.population import (
     PopulationArrays,
     UniformSampler,
     device_population,
     gather_cohort_dev,
+    gather_parts_dev,
     host_sync,
     refresh_cohort_dev,
 )
 from repro.fed.rounds import FedRunner, RoundRecord
-from repro.launch.sharding import population_mesh, population_pad
+from repro.launch.sharding import (
+    base_rules,
+    make_pspec,
+    population_mesh,
+    population_pad,
+)
 
 PyTree = Any
 
@@ -133,17 +147,18 @@ PyTree = Any
 # scalars in the segment constants and read in-trace, so one compiled
 # program serves every channel regime / budget in a shape bucket.
 # Everything else on the configs is STATIC — baked into the trace from
-# the bucket representative (shapes, BO/alternation loop bounds, the
-# learning rate inside the step function) or consumed on the host
-# (population draws, partitions) — and therefore part of the bucket
-# signature (``_lane_signature``), never laned.
+# the bucket representative (shapes, BO/alternation loop bounds) or
+# consumed on the host (population draws, partitions) — and therefore
+# part of the bucket signature (``_lane_signature``), never laned.
+# ``learning_rate`` lanes through ``controls["lr"]`` into the step's
+# ``Optimizer.update_with_lr`` — lr-only grids share one bucket.
 _LANED_WIRELESS = (
     "p_max", "p_min", "bandwidth_ul", "n0", "waterfall", "fading_scale",
     "interference_min", "interference_max", "cycles_per_sample", "k_eff",
     "sigma_exp")
 _LANED_LTFL = (
     "rho_max", "delta_max", "xi_bits", "t_max", "e_max", "server_delay",
-    "bo_xi", "alt_tol", "lipschitz", "d_sq", "v1", "v2")
+    "bo_xi", "alt_tol", "lipschitz", "d_sq", "v1", "v2", "learning_rate")
 
 
 def _rebuild_config(cfg, overrides):
@@ -174,13 +189,25 @@ class RoundLog(NamedTuple):
     afterwards. ``test_acc`` and the control means are live only under
     ``control="device"`` (in-scan eval / in-scan recontrol); host-control
     segments fill them from the segment constants (means) and NaN
-    (test_acc, which the host evaluates between segments instead)."""
+    (test_acc, which the host evaluates between segments instead).
+
+    Gamma (Eq. 29) is deliberately NOT reduced in-scan: the ``range_sq``
+    .. ``agg_denom`` fields carry its measured per-device inputs out of
+    the scan and ``_absorb_segment`` reduces them on host in float64 —
+    one shared numpy code path, so run_sweep lanes and solo runs report
+    bit-identical gamma (see the module docstring)."""
 
     train_loss: jax.Array   # (R,)
     delay: jax.Array        # (R,)  Eq. 34 incl. server delay
     energy: jax.Array       # (R,)  Eq. 37 summed
     received: jax.Array     # (R,)  sum alpha
-    gamma: jax.Array        # (R,)  Eq. 29 at the measured ranges
+    range_sq: jax.Array     # (R, U) measured per-device range^2 sums
+    gap_delta: jax.Array    # (R, U) applied delta (32 where delta == 0)
+    rho_u: jax.Array        # (R, U) applied pruning ratios
+    pers: jax.Array         # (R, U) packet error rates at applied power
+    ns_u: jax.Array         # (R, U) cohort sample counts
+    inclusion: Optional[jax.Array]  # (R, U) HT pi_i; None unless unbiased
+    agg_denom: Optional[jax.Array]  # (R,) HT denominator; None likewise
     cohort: jax.Array       # (R, U) scheduled population indices
     test_acc: jax.Array     # (R,)  in-scan eval head (NaN when not due)
     rho_mean: jax.Array     # (R,)  mean of the round's applied controls
@@ -427,7 +454,16 @@ class ScanRunner(FedRunner):
         widens the table to a common width (run_sweep stacks lanes).
         Under ``control="device"`` the in-scan eval head's fixed seeded
         batches (the exact arrays ``evaluate`` scores) go device-resident
-        here too."""
+        here too.
+
+        Setup complexity contract: the (N, W) table comes out of
+        ``ClientBatcher.padded_parts`` in one vectorized pass — no O(N)
+        Python loop anywhere on the cold-start path. Under
+        ``population_sharding`` the table and the (N,) size vector are
+        zero-padded to ``N_pad`` rows and laid out over the ('pop',)
+        mesh via the "population" sharding rule, so per-device
+        residency is N_pad/S rows, not N — the in-scan batch gather
+        assembles the cohort's rows with ``gather_parts_dev``."""
         if self._data_dev is None:
             self._data_dev = {k: jnp.asarray(v)
                               for k, v in self.batcher.base.arrays.items()}
@@ -459,17 +495,34 @@ class ScanRunner(FedRunner):
                     cpu=jnp.asarray(ch.cpu_hz, jnp.float32),
                     ns=jnp.asarray(ch.num_samples, jnp.float32))
                 self._n_pop_uploads += 1
-        sizes = np.asarray([p.size for p in self.batcher.parts], np.int32)
-        width = int(sizes.max()) if pad_to is None else int(pad_to)
+        sizes = self.batcher.client_sizes().astype(np.int32)
+        width = int(sizes.max(initial=0)) if pad_to is None else int(pad_to)
+        width = max(width, 1)            # keep the gather well-formed even
         if self._parts_padded is not None and \
-                self._parts_padded.shape[1] >= width:
+                self._parts_padded.shape[1] >= width:     # if all-empty
             return
-        padded = np.empty((len(sizes), width), np.int32)
-        for i, p in enumerate(self.batcher.parts):
-            padded[i, :p.size] = p
-            padded[i, p.size:] = p[0]    # never drawn: randint < size
-        self._parts_padded = jnp.asarray(padded)
-        self._part_sizes = jnp.asarray(sizes)
+        table = self.batcher.padded_parts(width=width)
+        if self._pop_mesh is None:
+            self._parts_padded = jnp.asarray(table)
+            self._part_sizes = jnp.asarray(sizes)
+            return
+        # sharded registry: zero rows pad N up to equal shard blocks
+        # (size-0 devices the samplers mask out of every draw), then the
+        # table/sizes lay out over 'pop' — resident at N_pad/S per device
+        mesh = self._pop_mesh
+        n, n_pad = table.shape[0], self._pop_pad
+        if n_pad > n:
+            table = np.concatenate(
+                [table, np.zeros((n_pad - n, width), np.int32)])
+            sizes = np.concatenate(
+                [sizes, np.zeros(n_pad - n, np.int32)])
+        rules = base_rules(mesh)
+        self._parts_padded = jax.device_put(
+            table, NamedSharding(mesh, make_pspec(
+                (n_pad, width), ("population", None), rules, mesh)))
+        self._part_sizes = jax.device_put(
+            sizes, NamedSharding(mesh, make_pspec(
+                (n_pad,), ("population",), rules, mesh)))
 
     # ------------------------------------------------------------------ #
     # segmentation
@@ -702,8 +755,12 @@ class ScanRunner(FedRunner):
         def finish(params, opt_state, comp_state, range_sq, batch, ch,
                    cohort, weights, alpha, inclusion, key,
                    rho, delta, power, payload, r):
+            # the learning rate is a LANED leaf (per-lane traced under the
+            # sweep vmap); the step routes it to update_with_lr — bitwise
+            # equal to the baked-lr solo path (repro.optim.Optimizer)
             controls = {"rho": rho, "delta": delta,
-                        "weights": weights, "alpha": alpha}
+                        "weights": weights, "alpha": alpha,
+                        "lr": ltfl.learning_rate}
             if "agg_denom" in consts:
                 controls["agg_denom"] = consts["agg_denom"]
             params, opt_state, comp_state, m = step_fn(
@@ -712,23 +769,27 @@ class ScanRunner(FedRunner):
             delay, energy = round_accounting_dev(
                 ltfl, ch, payload, rho, power)
             pers = packet_error_rate_dev(w, ch, power)
-            # unbiased: the fixed HT denominator IS the population sample
-            # total — read it from consts (per-lane under run_sweep, where
-            # every replica's population draws a different total), never
-            # from a closure over this runner's own population
-            gkw = ({"inclusion": inclusion,
-                    "population_samples": consts["agg_denom"]}
-                   if unbiased else {})
+            # gamma's inputs only — the Eq. 29 reduction happens on host
+            # in f64 (_absorb_segment), NOT here: one numpy code path for
+            # solo runs and every run_sweep lane keeps lane==solo gamma
+            # bitwise. unbiased: the fixed HT denominator IS the
+            # population sample total — read it from consts (per-lane
+            # under run_sweep, where every replica's population draws a
+            # different total), never from a closure over this runner's
+            # own population
             gap_delta = jnp.where(delta > 0, delta, 32.0)
-            gm = gamma_dev(ltfl, m["range_sq"], gap_delta,
-                           rho, pers, ch.num_samples, **gkw)
+            denom = consts["agg_denom"] if unbiased else None
             if in_scan_eval:
                 acc = jax.lax.cond(r % eval_every == 0, eval_acc,
                                    lambda p: jnp.float32(jnp.nan), params)
             else:
                 acc = jnp.float32(jnp.nan)
             log = RoundLog(train_loss=m["loss"], delay=delay, energy=energy,
-                           received=jnp.sum(alpha), gamma=gm, cohort=cohort,
+                           received=jnp.sum(alpha),
+                           range_sq=m["range_sq"], gap_delta=gap_delta,
+                           rho_u=rho, pers=pers, ns_u=ch.num_samples,
+                           inclusion=inclusion if unbiased else None,
+                           agg_denom=denom, cohort=cohort,
                            test_acc=acc, rho_mean=jnp.mean(rho),
                            delta_mean=jnp.mean(delta),
                            power_mean=jnp.mean(power))
@@ -777,7 +838,11 @@ class ScanRunner(FedRunner):
             cohort, pi = twin.select(ch_pop, k_cohort)
             ch = ch_pop.take(cohort)
             sizes = jnp.take(consts["part_sizes"], cohort)
-            draws = jax.random.randint(k_batch, (U, B), 0, sizes[:, None])
+            # maximum(sizes, 1): a zero-sample device's clamped draw reads
+            # its all-zero pad row — harmless, its aggregation weight
+            # (num_samples) is 0; sizes >= 1 draws are untouched
+            draws = jax.random.randint(k_batch, (U, B), 0,
+                                       jnp.maximum(sizes, 1)[:, None])
             gidx = jnp.take_along_axis(
                 jnp.take(consts["parts_padded"], cohort, axis=0),
                 draws, axis=1)
@@ -844,11 +909,14 @@ class ScanRunner(FedRunner):
                 interference = pop.channel.interference
                 fading_epoch = pop.fading_epoch
             ch = gather_cohort_dev(mesh, pop.channel, cohort)
-            sizes = jnp.take(consts["part_sizes"], cohort)
-            draws = jax.random.randint(k_batch, (U, B), 0, sizes[:, None])
-            gidx = jnp.take_along_axis(
-                jnp.take(consts["parts_padded"], cohort, axis=0),
-                draws, axis=1)
+            # the (N_pad, W) table stays sharded over 'pop'; only the
+            # cohort's (U, W) rows are assembled (psum-gather), exactly
+            # matching a replicated-table take — same draws, same indices
+            rows, sizes = gather_parts_dev(
+                mesh, consts["parts_padded"], consts["part_sizes"], cohort)
+            draws = jax.random.randint(k_batch, (U, B), 0,
+                                       jnp.maximum(sizes, 1)[:, None])
+            gidx = jnp.take_along_axis(rows, draws, axis=1)
             batch = {k: arr[gidx] for k, arr in data.items()}
             if program is not None:
                 dctl, ctl_state = program.controls(
@@ -958,7 +1026,26 @@ class ScanRunner(FedRunner):
         delays = np.asarray(log.delay, np.float64)
         energies = np.asarray(log.energy, np.float64)
         received = np.asarray(log.received, np.float64)
-        gammas = np.asarray(log.gamma, np.float64)
+        # Eq. 29 from the logged per-round input vectors, reduced HERE in
+        # float64: solo runs and run_sweep lanes share this exact numpy
+        # path, so lane==solo gamma is bitwise by construction (in-jit
+        # reductions drift a ulp between the solo and sweep-vmapped
+        # traces — see the module docstring)
+        rsqs = np.asarray(log.range_sq, np.float64)
+        gds = np.asarray(log.gap_delta, np.float64)
+        rhos_u = np.asarray(log.rho_u, np.float64)
+        perss = np.asarray(log.pers, np.float64)
+        nss = np.asarray(log.ns_u, np.float64)
+        incl = (np.asarray(log.inclusion, np.float64)
+                if log.inclusion is not None else None)
+        denoms = (np.asarray(log.agg_denom, np.float64)
+                  if log.agg_denom is not None else None)
+        gammas = np.asarray([
+            gamma(self.ltfl, rsqs[i], gds[i], rhos_u[i], perss[i], nss[i],
+                  **({"inclusion": incl[i],
+                      "population_samples": float(denoms[i])}
+                     if incl is not None else {}))
+            for i in range(b - a)], np.float64)
         accs = np.asarray(log.test_acc, np.float64)
         rho_means = np.asarray(log.rho_mean, np.float64)
         delta_means = np.asarray(log.delta_mean, np.float64)
@@ -1091,7 +1178,8 @@ class ScanRunner(FedRunner):
                           spec.ltfl if spec.ltfl is not None else c["ltfl"],
                           c["train"], c["test"], scheme, rng=self.rng,
                           control=self.control,
-                          max_segment=self.max_segment, **kw)
+                          max_segment=self.max_segment,
+                          population_sharding=self._pop_mesh, **kw)
         lane._eval_fn = self._eval_fn          # share the jitted eval
         return lane
 
@@ -1130,29 +1218,30 @@ class ScanRunner(FedRunner):
         decide phase) — not one per config. Host work between segments
         (Algorithm 1 under host control, eval) runs per lane.
 
-        Static vs laned: a lane's channel regime and budget floats are
-        LANED (stacked per lane, read in-trace — see ``_LANED_WIRELESS``
-        / ``_LANED_LTFL``), so they vary freely within a bucket; shapes
-        (U, N, batch), static loop bounds (``bo_iters``,
-        ``alt_max_iters``), the learning rate and scheme constants
+        Static vs laned: a lane's channel regime, budget floats and
+        learning rate are LANED (stacked per lane, read in-trace — see
+        ``_LANED_WIRELESS`` / ``_LANED_LTFL``), so they vary freely
+        within a bucket; shapes (U, N, batch), static loop bounds
+        (``bo_iters``, ``alt_max_iters``) and scheme constants
         (compressor parameters, arm grids, cadences) are STATIC — lanes
         that differ in them open a new bucket, which is correct but
         costs a separate compile. Each lane's history is bitwise equal
         to a solo ``ScanRunner`` run of the same config (solo traces run
         the identical laned arithmetic).
 
+        A ``population_sharding`` runner sweeps too: per-lane registries
+        and parts tables stack lane-major over the SAME ('pop',) mesh
+        (the lane axis rides replicated, each lane's (N_pad,) block
+        structure intact), so U-grid / regime / seed lanes vmap over the
+        sharded scan bodies. The one unsupported combination is
+        heterogeneous N across lanes (incompatible block structures) —
+        rejected up front with the lane's label.
+
         ``scheme_factory`` applies only to the seed-list form; SweepSpec
         lanes carry their own factories. Returns one ``RoundRecord``
         history per lane, in lane order; bucket metadata lands on
         ``self._last_sweep_buckets``.
         """
-        if self._pop_mesh is not None:
-            raise NotImplementedError(
-                "run_sweep vmaps replicas over one device set, which "
-                "conflicts with a population sharded over the same "
-                "devices; run sharded experiments as separate run() "
-                "calls (the registry, not the seed lane, is the scale "
-                "axis)")
         if isinstance(sweep, SweepSpec):
             if scheme_factory is not None:
                 raise ValueError(
@@ -1162,11 +1251,41 @@ class ScanRunner(FedRunner):
         else:
             specs = [LaneSpec(seed=int(s), scheme_factory=scheme_factory)
                      for s in sweep]
+        if self._pop_mesh is not None:
+            # sharded lanes stack lane-major OVER the same ('pop',)
+            # layout; a lane with a different N would need its own
+            # (N_pad,) block structure and cannot share the registry
+            for spec in specs:
+                n_lane = (spec.kwargs or {}).get(
+                    "population_size", self.population_size)
+                if n_lane is not None and \
+                        int(n_lane) != self.population_size:
+                    raise ValueError(
+                        f"run_sweep lane {spec.label!r} sets "
+                        f"population_size={int(n_lane)} but the sharded "
+                        f"parent registers {self.population_size} devices; "
+                        "lanes over one population_sharding mesh must "
+                        "share N (cohort-size/regime/seed grids are fine) "
+                        "— run heterogeneous-N points as separate sweeps")
         lanes = [self._build_lane(spec) for spec in specs]
         self._ensure_device_world()
 
         def stack(trees):
-            return jax.tree_util.tree_map(lambda *x: jnp.stack(x), *trees)
+            # lane-major stack that KEEPS the ('pop',) layout: a leaf
+            # sharded over the mesh (registry channel state, the parts
+            # table, carried fading) comes back as (L, ...) with the
+            # lane axis replicated and the original spec intact, so the
+            # sweep vmap's shard_map bodies see per-lane sharded blocks
+            # instead of an L-times-replicated (N_pad,) gather
+            def s(*x):
+                out = jnp.stack(x)
+                sh = getattr(x[0], "sharding", None)
+                if isinstance(sh, NamedSharding) and \
+                        any(a is not None for a in sh.spec):
+                    out = jax.device_put(out, NamedSharding(
+                        sh.mesh, PartitionSpec(None, *sh.spec)))
+                return out
+            return jax.tree_util.tree_map(s, *trees)
 
         def unstack(tree, i):
             return jax.tree_util.tree_map(lambda x: x[i], tree)
@@ -1187,7 +1306,7 @@ class ScanRunner(FedRunner):
                 {"signature": sig, "rep": rep, "lane_indices": list(idxs)})
             pad = None
             if self.rng == "device":
-                pad = max(max(p.size for p in lane.batcher.parts)
+                pad = max(int(lane.batcher.client_sizes().max(initial=0))
                           for lane in glanes)
             for lane in glanes:
                 lane._data_dev = self._data_dev   # one shared backing pool

@@ -9,7 +9,7 @@ to params by ``apply_updates``.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,8 +19,20 @@ PyTree = Any
 
 @dataclass(frozen=True)
 class Optimizer:
+    """``update`` applies the constructor-baked learning rate;
+    ``update_with_lr(grads, state, params, lr)``, when provided, takes
+    the rate as a (possibly traced) argument instead — the scanned sweep
+    engine lanes the learning rate through it so lr-only grids share one
+    compiled program (``controls["lr"]`` in repro.core.ltfl_step). The
+    two paths run the identical arithmetic: ``update`` is ``f(lr0)``
+    with the baked python float, which weak-types to the same f32 scalar
+    a laned leaf carries, so histories agree bitwise."""
+
     init: Callable[[PyTree], PyTree]
     update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+    update_with_lr: Optional[
+        Callable[[PyTree, PyTree, PyTree, jax.Array],
+                 Tuple[PyTree, PyTree]]] = None
 
 
 def _tree_zeros_f32(params: PyTree) -> PyTree:
@@ -34,29 +46,35 @@ def sgd(lr: float) -> Optimizer:
     def init(params):
         return ()
 
-    def update(grads, state, params):
+    def update_with_lr(grads, state, params, eta):
         updates = jax.tree_util.tree_map(
-            lambda g: (-lr * g.astype(jnp.float32)), grads)
+            lambda g: (-eta * g.astype(jnp.float32)), grads)
         updates = jax.tree_util.tree_map(
             lambda u, p: u.astype(p.dtype), updates, params)
         return updates, state
 
-    return Optimizer(init, update)
+    def update(grads, state, params):
+        return update_with_lr(grads, state, params, lr)
+
+    return Optimizer(init, update, update_with_lr)
 
 
 def momentum(lr: float, beta: float = 0.9) -> Optimizer:
     def init(params):
         return {"m": _tree_zeros_f32(params)}
 
-    def update(grads, state, params):
+    def update_with_lr(grads, state, params, eta):
         m = jax.tree_util.tree_map(
             lambda mo, g: beta * mo + g.astype(jnp.float32),
             state["m"], grads)
         updates = jax.tree_util.tree_map(
-            lambda mo, p: (-lr * mo).astype(p.dtype), m, params)
+            lambda mo, p: (-eta * mo).astype(p.dtype), m, params)
         return updates, {"m": m}
 
-    return Optimizer(init, update)
+    def update(grads, state, params):
+        return update_with_lr(grads, state, params, lr)
+
+    return Optimizer(init, update, update_with_lr)
 
 
 def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
@@ -65,7 +83,7 @@ def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
         return {"m": _tree_zeros_f32(params), "v": _tree_zeros_f32(params),
                 "t": jnp.zeros((), jnp.int32)}
 
-    def update(grads, state, params):
+    def update_with_lr(grads, state, params, eta):
         t = state["t"] + 1
         m = jax.tree_util.tree_map(
             lambda mo, g: b1 * mo + (1 - b1) * g.astype(jnp.float32),
@@ -81,12 +99,15 @@ def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
             step = mo / bc1 / (jnp.sqrt(vo / bc2) + eps)
             if weight_decay:
                 step = step + weight_decay * p.astype(jnp.float32)
-            return (-lr * step).astype(p.dtype)
+            return (-eta * step).astype(p.dtype)
 
         updates = jax.tree_util.tree_map(upd, m, v, params)
         return updates, {"m": m, "v": v, "t": t}
 
-    return Optimizer(init, update)
+    def update(grads, state, params):
+        return update_with_lr(grads, state, params, lr)
+
+    return Optimizer(init, update, update_with_lr)
 
 
 def apply_updates(params: PyTree, updates: PyTree) -> PyTree:

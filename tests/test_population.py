@@ -21,8 +21,11 @@ from repro.core.channel import expected_rate
 from repro.core.convergence import gap_terms
 from repro.data import (
     ArrayDataset,
+    ClientBatcher,
+    PackedParts,
     iid_partition,
     population_partition,
+    population_partition_reference,
     synthetic_cifar,
 )
 from repro.fed import (
@@ -154,6 +157,75 @@ def test_population_partition_zero_size_shard():
     assert a[1].size == 0
     for x, y in zip(a, b):
         assert np.array_equal(x, y)
+
+
+def test_population_partition_bitwise_matches_loop_reference_no_wrap():
+    """Setup-parity pin: in the no-wrap regime (sum(sizes) <= pool) the
+    vectorized assignment reproduces the per-shard loop reference bit
+    for bit — shard by shard AND in the rng stream state left behind
+    (both consume exactly one permutation) — across zero-size shards and
+    the total == pool edge."""
+    for sizes in ([7, 5, 9], [5, 0, 7, 0], [30, 20, 50], [0, 0, 3], [100]):
+        ra, rb = np.random.default_rng(11), np.random.default_rng(11)
+        a = population_partition(100, sizes, ra)
+        b = population_partition_reference(100, sizes, rb)
+        assert isinstance(a, PackedParts) and len(a) == len(b)
+        for x, y in zip(a, b):
+            assert np.array_equal(x, y), sizes
+        assert ra.bit_generator.state == rb.bit_generator.state, sizes
+
+
+def test_population_partition_wrap_regime_is_distribution_equivalent():
+    """Past one pool's worth the vectorized path draws its permutation
+    rows batched (documented-equivalent, not bitwise): shards keep the
+    reference's invariants — exact sizes, within-shard uniqueness, full
+    pool coverage before any reuse."""
+    sizes = [8, 0, 9, 6]                    # 23 needed from a pool of 10
+    parts = population_partition(10, sizes, np.random.default_rng(5))
+    for p, s in zip(parts, sizes):
+        assert p.size == s and np.unique(p).size == s
+        assert np.all((p >= 0) & (p < 10))
+
+
+def test_packed_parts_table_accessors():
+    parts = population_partition(50, [3, 0, 5], np.random.default_rng(0))
+    np.testing.assert_array_equal(parts.client_sizes(), [3, 0, 5])
+    t = parts.padded()
+    assert t.shape == (3, 5) and t.dtype == np.int32
+    np.testing.assert_array_equal(t[1], 0)       # empty row zero-padded
+    np.testing.assert_array_equal(t[0, 3:], 0)
+    np.testing.assert_array_equal(t[0, :3], parts[0])
+    wide = parts.padded(width=9)                 # run_sweep's common width
+    assert wide.shape == (3, 9)
+    np.testing.assert_array_equal(wide[:, :5], t)
+    np.testing.assert_array_equal(wide[:, 5:], 0)
+
+
+def test_client_batcher_packed_parts_and_zero_sample_guard():
+    imgs, labels = synthetic_cifar(60, seed=0)
+    ds = ArrayDataset({"images": imgs, "labels": labels})
+    packed = population_partition(60, [4, 0, 6], np.random.default_rng(1))
+    cb = ClientBatcher(ds, packed)               # empty shard adopted as-is
+    assert cb.num_clients == 3
+    np.testing.assert_array_equal(cb.client_sizes(), [4, 0, 6])
+    t = cb.padded_parts()
+    assert t.shape == (3, 6) and np.all(t[1] == 0)
+    with pytest.raises(ValueError, match="zero-sample"):
+        cb.batch_indices(2, np.random.default_rng(0))
+    # non-empty clients still batch fine
+    idx = cb.batch_indices(3, np.random.default_rng(0), clients=[0, 2])
+    assert idx.shape == (2, 3)
+
+    # legacy list form: one-pass vectorized fill, empty rows a hard error
+    lst = [np.sort(np.random.default_rng(2).choice(60, 5, replace=False)),
+           np.arange(3)]
+    t2 = ClientBatcher(ds, lst).padded_parts(width=7)
+    assert t2.shape == (2, 7)
+    np.testing.assert_array_equal(t2[0, :5], lst[0])
+    np.testing.assert_array_equal(t2[1, :3], lst[1])
+    assert np.all(t2[0, 5:] == 0) and np.all(t2[1, 3:] == 0)
+    with pytest.raises(ValueError, match="empty partition"):
+        ClientBatcher(ds, [np.arange(3), np.array([], np.int64)])
 
 
 # --------------------------------------------------------------------------- #

@@ -236,6 +236,29 @@ def test_device_mode_runs_and_mixes_fading(world):
     assert scan.channel_epoch == 6
 
 
+def test_device_mode_tolerates_zero_sample_device(world):
+    """Regression for the padded-parts empty-shard crash: a registered
+    zero-sample device used to IndexError the table build (`p[0]` on an
+    empty row). Now its row is zero-padded and the device engine clamps
+    its draws — the round stays finite because its aggregation weight
+    (num_samples = 0) zeroes the drawn sample's contribution."""
+    model, params, train, test = world
+    cfg = LTFLConfig(num_devices=4, samples_min=0, samples_max=3,
+                     bo_iters=3, alt_max_iters=2)
+    scan = ScanRunner(model, params, cfg, train, test, FedSGDScheme(),
+                      batch_size=4, seed=0, eval_every=0,
+                      population_size=16, cohort_size=4, rng="device")
+    sizes = scan.batcher.client_sizes()
+    assert (sizes == 0).any()            # the regression needs one present
+    for rec in scan.run(3):
+        assert np.isfinite(rec.train_loss)
+    # host batching a zero-sample client stays a clear error
+    zero = int(np.flatnonzero(sizes == 0)[0])
+    with pytest.raises(ValueError, match="zero-sample"):
+        scan.batcher.batch_indices(2, np.random.default_rng(0),
+                                   clients=[zero])
+
+
 def test_repeated_run_restarts_rounds_like_fedrunner(world):
     """run() numbering restarts at round 0 on every call, exactly like
     FedRunner.run — history appends, cum sums keep accumulating."""

@@ -142,6 +142,34 @@ def test_heterogeneous_lanes_bit_match_solo_runs(world):
 
 
 # --------------------------------------------------------------------------- #
+# the learning rate is laned: lr-only grids share one compiled bucket
+# --------------------------------------------------------------------------- #
+def test_learning_rate_grid_shares_one_bucket_and_bit_matches_solo(world):
+    """The learning rate was the last paper-swept float that opened a
+    bucket per value; it now rides the laned consts into controls['lr'].
+    An lr-only grid must compile ONCE, each lane must bit-match its solo
+    run (f32 weak-typing makes the laned update identical to the baked
+    one), and the lanes must actually diverge."""
+    model, params, train, test = world
+    fast = dataclasses.replace(LTFL, learning_rate=0.1)
+    parent = ScanRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                        batch_size=8, seed=0, eval_every=0)
+    spec = SweepSpec.grid(ltfls={"base": LTFL, "fast": fast}, seeds=(0,))
+    hists = parent.run_sweep(spec, 4)
+
+    assert len(parent._last_sweep_buckets) == 1      # lr is laned, not static
+    assert parent._last_sweep_buckets[0]["rep"] is parent
+    assert parent._n_traces == 1
+
+    for lane, hist in zip(spec.lanes, hists):
+        solo = ScanRunner(model, params, lane.ltfl, train, test,
+                          FedSGDScheme(), batch_size=8, seed=0,
+                          eval_every=0)
+        assert_bit_equal(hist, solo.run(4))
+    assert hists[0][-1].train_loss != hists[1][-1].train_loss
+
+
+# --------------------------------------------------------------------------- #
 # control="device": recontrol cadence splits segments, holds skip the solve
 # --------------------------------------------------------------------------- #
 def test_device_cadence_splits_segments_without_per_round_solve(world):
