@@ -4,9 +4,10 @@
 #                      handled (same command the PR driver runs).
 #   make bench-smoke — one tiny run of each gated benchmark (unified round
 #                      engine, population scaling — host and sharded,
-#                      scanned engine, device control plane, lane-batched
-#                      paper table); writes artifacts/bench/*_smoke.json
-#                      (never the committed baselines).
+#                      scanned engine, buffered-async engine, device
+#                      control plane, lane-batched paper table); writes
+#                      artifacts/bench/*_smoke.json (never the committed
+#                      baselines).
 #   make bench-check — bench-smoke + the regression gates: fails when the
 #                      unified-engine, scanned-engine, device-control or
 #                      lane-batched paper-table speedup regressed past its
@@ -21,6 +22,9 @@
 #                      artifacts/bench/population_sharded.json).
 #   make bench-scan  — the full scanned-vs-loop engine sweep
 #                      (U x R grid; writes artifacts/bench/scan_engine.json).
+#   make bench-async — the full buffered-async vs sync simulated
+#                      time-to-accuracy sweep in the straggler-heavy
+#                      regime (writes artifacts/bench/async_engine.json).
 #   make bench-device-control — the full in-scan-vs-host-recontrol sweep
 #                      (writes artifacts/bench/device_control.json).
 #   make bench-paper-table — the full lane-batched scheme x regime grid
@@ -32,8 +36,8 @@
 PY ?= python
 
 .PHONY: test bench-smoke bench-check bench-population \
-	bench-population-sharded bench-scan bench-device-control \
-	bench-paper-table lint
+	bench-population-sharded bench-scan bench-async \
+	bench-device-control bench-paper-table lint
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -43,6 +47,7 @@ bench-smoke:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.population_scale --smoke
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.population_scale --sharded --smoke
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.scan_engine --smoke
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.async_engine --smoke
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.device_control --smoke
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.paper_table --smoke
 
@@ -57,6 +62,9 @@ bench-population-sharded:
 
 bench-scan:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.scan_engine
+
+bench-async:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.async_engine
 
 bench-device-control:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.device_control

@@ -1,6 +1,6 @@
 """CI bench-regression gates for the round engines.
 
-Six gates, each comparing a fresh ``make bench-smoke`` measurement
+Seven gates, each comparing a fresh ``make bench-smoke`` measurement
 against its COMMITTED baseline artifact:
 
 * **round_engine** — unified-step speedup over the legacy per-device
@@ -21,6 +21,12 @@ against its COMMITTED baseline artifact:
   rows shared by smoke and baseline).
 * **scan_engine** — scanned-segment speedup over the per-round FedRunner
   loop (rows matched by (clients, rounds)).
+* **async_engine** — buffered-async simulated time-to-target-accuracy
+  speedup over the synchronous engine in the straggler-heavy regime
+  (rows matched by client count). On top of the relative floor, the
+  fresh speedup must clear the ABSOLUTE 1.5x acceptance floor — the
+  metric is simulated delay, deterministic given the seed, so this gate
+  has no wall-clock noise at all.
 * **device_control** — in-scan Algorithm-1 recontrol
   (``ScanRunner(control="device")``) speedup over host recontrol between
   length-1 segments at recontrol_every=1 (rows matched by client count).
@@ -63,6 +69,7 @@ TOLERANCES = {
     "population_scale": 0.30,
     "population_sharded": 0.30,
     "scan_engine": 0.30,
+    "async_engine": 0.30,
     "device_control": 0.30,
     "paper_table": 0.40,
 }
@@ -244,6 +251,29 @@ def check_scan(cur, base, tol, cur_path, base_path) -> bool:
         tol)
 
 
+ASYNC_ABS_FLOOR = 1.5     # the PR's acceptance bar, enforced forever
+
+
+def check_async_engine(cur, base, tol, cur_path, base_path) -> bool:
+    def label(r):
+        return f"U={int(r['clients'])}"
+    cur_rows = _speedup_rows(cur, label, gate="async_engine",
+                             path=cur_path)
+    ok = _check_speedup_floor(
+        "async_engine", cur_rows,
+        _speedup_rows(base, label, gate="async_engine", path=base_path),
+        tol)
+    # the absolute acceptance floor: whatever the baseline drifted to,
+    # buffered-async must beat sync by 1.5x simulated time-to-accuracy
+    for lbl, c in sorted(cur_rows.items()):
+        good = c >= ASYNC_ABS_FLOOR
+        ok &= good
+        print(f"check_regression: async_engine {lbl}: speedup {c:.2f}x "
+              f"vs ABSOLUTE floor {ASYNC_ABS_FLOOR:.1f}x -> "
+              f"{'PASS' if good else 'FAIL'}")
+    return ok
+
+
 def check_device_control(cur, base, tol, cur_path, base_path) -> bool:
     # rows matched by client count only: the smoke and full sweeps share
     # the per-round-recontrol protocol (rounds differ, speedup is
@@ -279,6 +309,8 @@ GATES = {
                            check_population_sharded),
     "scan_engine": ("scan_engine_smoke.json", "scan_engine.json",
                     check_scan),
+    "async_engine": ("async_engine_smoke.json", "async_engine.json",
+                     check_async_engine),
     "device_control": ("device_control_smoke.json", "device_control.json",
                        check_device_control),
     "paper_table": ("paper_table_smoke.json", "paper_table.json",

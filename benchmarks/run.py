@@ -15,13 +15,14 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: ablation,schemes,channel,devices,"
                          "noniid,controller,kernels,roofline,population,"
-                         "scan,devicecontrol,papertable")
+                         "scan,asyncengine,devicecontrol,papertable")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     rounds = 24 if args.full else 10
 
     from benchmarks import (
         ablation,
+        async_engine,
         channel_sweep,
         controller_bench,
         device_control,
@@ -45,6 +46,15 @@ def main() -> None:
             client_counts=(8, 16, 32) if args.full else (16,),
             round_counts=(16, 64),
             artifact=("scan_engine" if args.full else "scan_engine_reduced"))
+    if only is None or "asyncengine" in only:
+        # only a --full run may rewrite the committed async_engine.json
+        # baseline that check_regression gates on; the metric (simulated
+        # time-to-accuracy) is deterministic, so the reduced run keeps
+        # the full round budgets and just drops the U=32 row
+        async_engine.run(
+            client_counts=(16, 32) if args.full else (16,),
+            artifact=("async_engine" if args.full
+                      else "async_engine_reduced"))
     if only is None or "devicecontrol" in only:
         # only a --full run may rewrite the committed device_control.json
         # baseline that check_regression gates on

@@ -48,18 +48,21 @@ def main():
 
     cache = jax.tree_util.tree_map(splice, cache, prompt_cache)
     decode = jax.jit(model.decode_step)
+    # time ALL generated tokens: the first comes from the prefill logits
+    # (previously neither it nor the timer start covered it, so tok/s
+    # under-counted by one token per sequence)
+    t0 = time.time()
     tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
     out = [tok]
-    t0 = time.time()
     for i in range(args.gen - 1):
         pos = jnp.full((args.batch,), args.prompt_len + i, jnp.int32)
         logits_t, cache = decode(params, tok, pos, cache)
         tok = jnp.argmax(logits_t, axis=-1).astype(jnp.int32)
         out.append(tok)
+    seqs = jax.block_until_ready(jnp.stack(out, axis=1))
     dt = time.time() - t0
-    seqs = jnp.stack(out, axis=1)
-    print(f"decoded {args.gen-1} steps in {dt:.2f}s "
-          f"({(args.gen-1)*args.batch/max(dt,1e-9):.1f} tok/s)")
+    print(f"generated {args.gen} tokens/seq in {dt:.2f}s "
+          f"({args.gen*args.batch/max(dt,1e-9):.1f} tok/s)")
     for b in range(min(args.batch, 2)):
         print(f"request {b}: {seqs[b].tolist()}")
 

@@ -15,9 +15,12 @@ keys is distributed EXACTLY as sequential weighted sampling without
 replacement (probability proportional to the remaining weights at every
 draw) — numpy's ``rng.choice(replace=False, p=w)`` procedure. Inclusion
 probabilities keep the host samplers' convention: exact U/N for uniform,
-the standard first-order approximation pi_i ~ min(1, U w_i) for the
-energy-aware weights (tests/test_device_control.py checks the empirical
-Gumbel-top-k inclusion against it).
+and for the energy-aware weights the EXACT without-replacement pi_i via
+the traced quadrature twin of ``repro.fed.population.
+gumbel_topk_inclusion`` (tests/test_device_control.py pins the empirical
+Gumbel-top-k inclusion against it; the old first-order min(1, U w_i) is
+biased exactly where HT aggregation — and the async engine's
+staleness-HT Gamma — is most sensitive, at heavy/light weight extremes).
 
 Sharded twins (the million-device registry)
 -------------------------------------------
@@ -37,12 +40,14 @@ by definition among the top-U of its own block, so it survives stage 1
 
 * uniform keys    -> exactly uniform without replacement over N
   (a key-draw replaces ``jax.random.choice``'s O(N log N) permutation);
-* Gumbel keys     -> exactly the Gumbel-top-k weighted draw, so the
-  HT inclusion convention pi_i ~ min(1, U w_i) carries over UNCHANGED —
-  sharding redistributes the computation, not the distribution
-  (normalizing the weights only shifts every key by a constant, so the
-  per-shard keys skip the global normalizer entirely; it enters once,
-  via one ``psum``, in the reported pi);
+* Gumbel keys     -> exactly the Gumbel-top-k weighted draw — sharding
+  redistributes the computation, not the distribution (normalizing the
+  weights only shifts every key by a constant, so the per-shard keys
+  skip the global normalizer entirely). Reported pi stays FIRST-ORDER
+  min(1, U w_i) here (one ``psum`` for the normalizer): the exact
+  leave-one-out quadrature needs the full (N,) weight vector, which the
+  registry layout deliberately never materializes on one shard — the
+  unsharded twin and the host sampler report exact pi;
 * the channel-aware score ranks by mean SNR p*E[h]/(I + B N0) instead
   of the Eq.-1 rate: the Gauss-Laguerre expectation is strictly
   increasing in SNR, so top-U by SNR IS top-U by rate, at O(N/S)
@@ -64,6 +69,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+import numpy as np
+
 from repro.core.channel import ChannelArrays, _mean_gain_dev, _noise_dev, \
     expected_rate_dev
 from repro.core.delay_energy import local_train_energy_dev
@@ -71,6 +78,49 @@ from repro.launch.sharding import population_pad
 
 SelectFn = Callable[[ChannelArrays, jax.Array],
                     Tuple[jax.Array, Optional[jax.Array]]]
+
+
+def _gumbel_topk_inclusion_dev(w: jax.Array, k: int,
+                               n_quad: int = 64) -> jax.Array:
+    """Traced twin of ``repro.fed.population.gumbel_topk_inclusion``:
+    exact weighted-without-replacement inclusion probabilities for ALL N
+    devices, f32, traceable inside jit/scan. Same exponential-race
+    quadrature: the per-device substitution v = s^{N w_i} absorbs the
+    race density (no endpoint singularity, so Gauss-Legendre converges
+    for every k — the baked-in constants are the host's nodes), and the
+    leave-one-out Poisson-binomial CDF forces device i's own arrival
+    probability to zero inside the truncated forward DP (a ``lax.map``
+    over devices of a ``lax.scan`` DP — no unstable deconvolution).
+    O(N^2 k n_quad), but loop-invariant in the round scan whenever the
+    weights are (XLA hoists it out of the ``lax.scan`` body, so the
+    per-round cost is the (U,) gather)."""
+    n = w.shape[0]
+    if k >= n:
+        return jnp.ones((n,), jnp.float32)
+    nodes, qwts = np.polynomial.legendre.leggauss(n_quad)
+    log_v = jnp.log(jnp.asarray(0.5 * (nodes + 1.0), jnp.float32))
+    qw = jnp.asarray(0.5 * qwts, jnp.float32)
+    nw = n * jnp.asarray(w, jnp.float32)
+
+    def per_device(args):
+        a_i, i = args
+        log_s = log_v / a_i                          # (Q,) nodes for i
+        p = 1.0 - jnp.exp(jnp.outer(log_s, nw))      # (Q, N)
+        p = p.at[:, i].set(0.0)                      # leave i out
+        q = 1.0 - p
+
+        def dp(F, pq):                               # truncated PB DP
+            pj, qj = pq
+            Fp = qj[:, None] * F
+            Fp = Fp.at[:, 1:].add(pj[:, None] * F[:, :-1])
+            return Fp, None
+
+        F0 = jnp.zeros((n_quad, k), jnp.float32).at[:, 0].set(1.0)
+        F, _ = jax.lax.scan(dp, F0, (p.T, q.T))
+        return qw @ jnp.sum(F, axis=1)               # ∫ P(cnt<=k-1) dv
+
+    pi = jax.lax.map(per_device, (nw, jnp.arange(n)))
+    return jnp.clip(pi, 0.0, 1.0)
 
 
 class DeviceSamplerTwin(NamedTuple):
@@ -147,10 +197,12 @@ def energy_aware_twin(ltfl, cohort_size: int,
     attributes (CPU frequency, shard size) that ride along in the struct,
     which keeps the twin correct per ``run_sweep`` lane (each replica's
     population draws different devices) with no host-side cache to
-    transfer. Inclusion probabilities use the host sampler's first-order
-    approximation pi_i ~ min(1, U w_i) (the Horvitz-Thompson weights the
-    unbiased aggregation divides by; checked against the empirical
-    Gumbel-top-k inclusion in tests/test_device_control.py)."""
+    transfer. Inclusion probabilities are the EXACT without-replacement
+    pi_i (``_gumbel_topk_inclusion_dev`` — the Horvitz-Thompson weights
+    the unbiased aggregation divides by; pinned against the empirical
+    Gumbel-top-k inclusion in tests/test_device_control.py). The exact-pi
+    quadrature depends only on the weights, so XLA hoists it out of the
+    round scan — per-round cost stays the top-k draw + a (U,) gather."""
     u = cohort_size
     w_cfg = ltfl.wireless
     e_max = float(ltfl.e_max)
@@ -165,7 +217,8 @@ def energy_aware_twin(ltfl, cohort_size: int,
             + jax.random.gumbel(key, w.shape, jnp.float32)
         _, idx = jax.lax.top_k(keys, u)
         cohort = jnp.sort(idx).astype(jnp.int32)
-        pi = jnp.clip(u * w[cohort], 1e-9, 1.0)
+        pi_all = _gumbel_topk_inclusion_dev(w, u)
+        pi = jnp.clip(pi_all[cohort], 1e-9, 1.0)
         return cohort, pi
 
     return DeviceSamplerTwin(select=select, provides_inclusion=True)
@@ -296,9 +349,11 @@ def sharded_energy_aware_twin(ltfl, num_devices: int, cohort_size: int,
     log-headroom, two-stage top-U — EXACTLY the Gumbel-top-k weighted
     draw without replacement (the global weight normalizer shifts every
     key by the same constant, so shards never need it to select). The
-    normalizer enters once, via ``psum``, in the reported HT inclusion
-    probabilities — the host convention pi_i ~ min(1, U w_i), unchanged
-    by sharding; the cohort's headroom values come back through a
+    normalizer enters once, via ``psum``, in the reported inclusion
+    probabilities, which here stay FIRST-ORDER pi_i ~ min(1, U w_i):
+    the exact leave-one-out quadrature (unsharded twin, host sampler)
+    needs the full (N,) weight vector on one shard, which the registry
+    layout forbids. The cohort's headroom values come back through a
     psum-gather so no shard ever materializes another's block."""
     n, u = num_devices, cohort_size
     blk = _check_mesh(n, u, mesh)

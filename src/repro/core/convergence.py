@@ -24,6 +24,17 @@ variance proxy 12 v1 / N^2 * sum_i N_i^2 (1 - pi_i) / pi_i^2 — that
 charges the gap for client-sampling noise. With pi = 1 everywhere both
 reduce exactly to the full-participation Eq. 29.
 
+Staleness (buffered-async rounds, repro.fed.async_engine)
+---------------------------------------------------------
+Buffered-async aggregation (FedBuff-style) applies stale updates with
+attenuation 1 / sqrt(1 + tau_i), where tau_i counts the rounds device i's
+update waited in flight. The attenuated contribution leaves a residual
+bias the synchronous Eq. 29 does not see; passing per-device ``staleness``
+adds the first-order proxy 12 v1 / N * sum_i N_i (1 - 1/sqrt(1+tau_i))
+/ pi_i — the HT-scaled mass each device's update LOST to attenuation —
+inside the same ``scale`` bracket. With tau = 0 everywhere the term is
+exactly +0.0, so synchronous Gammas are bit-identical with or without it.
+
 ``gamma_dev`` is the jnp-native twin of ``gamma`` — the identical Eq. 29
 arithmetic (including the partial-participation HT terms), but traceable
 (f32; tolerance-pinned to the float64 host path by
@@ -53,11 +64,13 @@ class GapTerms:
     transmission: float   # 12 v1 / N * sum_u N_u q_u
     scale: float          # 1 / (1 - 12 v2)
     participation: float = 0.0   # client-sampling variance proxy (HT)
+    staleness: float = 0.0       # buffered-async attenuation residual
 
     @property
     def total(self) -> float:
         return self.scale * (self.quantization + self.pruning
-                             + self.transmission + self.participation)
+                             + self.transmission + self.participation
+                             + self.staleness)
 
 
 def gap_terms(ltfl: LTFLConfig,
@@ -68,7 +81,8 @@ def gap_terms(ltfl: LTFLConfig,
               num_samples: Sequence[int],
               *,
               inclusion: Optional[Sequence[float]] = None,
-              population_samples: Optional[float] = None) -> GapTerms:
+              population_samples: Optional[float] = None,
+              staleness: Optional[Sequence[float]] = None) -> GapTerms:
     """Evaluate Eq. 29; the device axis is the LAST axis of each input.
 
     range_sq_sums[u] = sum_v (g_max - g_min)^2 for device u's gradient.
@@ -78,6 +92,8 @@ def gap_terms(ltfl: LTFLConfig,
     ``inclusion`` (pi_i per cohort member) and ``population_samples``
     (sum_j N_j over the whole population) switch on the partial-
     participation convention documented in the module docstring.
+    ``staleness`` (tau_i rounds-in-flight per cohort member) adds the
+    buffered-async attenuation residual; tau = 0 adds exactly +0.0.
     """
     deltas = np.asarray(deltas, dtype=np.float64)
     ns = np.asarray(num_samples, np.float64)
@@ -104,14 +120,21 @@ def gap_terms(ltfl: LTFLConfig,
             ns * ns * (np.asarray(inv) - 1.0) * inv, axis=-1)
     else:
         part = np.float64(0.0)
+    if staleness is not None:
+        atten = 1.0 - 1.0 / np.sqrt(
+            1.0 + np.asarray(staleness, np.float64))
+        stale = 12.0 * ltfl.v1 / n_total * np.sum(ns * atten * inv,
+                                                  axis=-1)
+    else:
+        stale = np.float64(0.0)
     scale = 1.0 / (1.0 - 12.0 * ltfl.v2)
     if quant.ndim == 0 and prune.ndim == 0 and trans.ndim == 0 \
-            and np.ndim(part) == 0:
+            and np.ndim(part) == 0 and np.ndim(stale) == 0:
         return GapTerms(float(quant), float(prune), float(trans), scale,
-                        float(part))
-    quant, prune, trans, part = np.broadcast_arrays(quant, prune, trans,
-                                                    part)
-    return GapTerms(quant, prune, trans, scale, part)
+                        float(part), float(stale))
+    quant, prune, trans, part, stale = np.broadcast_arrays(
+        quant, prune, trans, part, stale)
+    return GapTerms(quant, prune, trans, scale, part, stale)
 
 
 def gamma(ltfl: LTFLConfig, range_sq_sums, deltas, rhos, pers,
@@ -131,7 +154,8 @@ def gamma_dev(ltfl: LTFLConfig,
               num_samples: jax.Array,
               *,
               inclusion: Optional[jax.Array] = None,
-              population_samples: Optional[float] = None) -> jax.Array:
+              population_samples: Optional[float] = None,
+              staleness: Optional[jax.Array] = None) -> jax.Array:
     """Traced twin of ``gamma``: the scalar Gamma^n (Eq. 29) from (U,)
     inputs, f32, inside jit/scan. Inputs mirror ``gap_terms``; the
     partial-participation kwargs follow the same convention (both or
@@ -159,8 +183,15 @@ def gamma_dev(ltfl: LTFLConfig,
             ns * ns * (inv - 1.0) * inv, axis=-1)
     else:
         part = jnp.float32(0.0)
+    if staleness is not None:
+        atten = 1.0 - 1.0 / jnp.sqrt(
+            1.0 + jnp.asarray(staleness, jnp.float32))
+        stale = 12.0 * ltfl.v1 / n_total * jnp.sum(ns * atten * inv,
+                                                   axis=-1)
+    else:
+        stale = jnp.float32(0.0)
     scale = 1.0 / (1.0 - 12.0 * ltfl.v2)
-    return scale * (quant + prune + trans + part)
+    return scale * (quant + prune + trans + part + stale)
 
 
 def theorem1_bound(ltfl: LTFLConfig, f0_minus_fstar: float,

@@ -160,3 +160,37 @@ def round_accounting_dev(ltfl: LTFLConfig, ch: ChannelArrays,
     energy = jnp.sum(device_round_energy_dev(
         cfg, ch, payload_bits, rho, power, rate=rate))
     return delay, energy
+
+
+def buffered_round_accounting_dev(ltfl: LTFLConfig, ch: ChannelArrays,
+                                  payload_bits: jax.Array, rho: jax.Array,
+                                  power: jax.Array, admitted: jax.Array,
+                                  deadline: jax.Array, buffer_size: int
+                                  ) -> Tuple[jax.Array, jax.Array,
+                                             jax.Array]:
+    """Buffered-async round (delay, energy, per-device completion), traced.
+
+    The async engine (repro.fed.async_engine) closes a round when its
+    K-slot buffer FILLS — at the K-th arrival's completion time — and
+    otherwise at the straggler ``deadline`` (or, under an infinite
+    deadline where the server knows nothing more is coming, at the last
+    scheduled completion time). Energy is unchanged from Eq. 37:
+    stragglers and dropped uploads still burn their full round energy.
+
+    With ``admitted`` all-True, ``buffer_size`` = U and ``deadline`` =
+    +inf this reproduces ``round_accounting_dev`` bitwise: the same
+    shared-rate quadrature and op order, the buffer fills exactly at the
+    slowest device, and max(where(True, t, 0)) == max(t) exactly.
+    """
+    cfg = ltfl.wireless
+    rate = expected_rate_dev(cfg, ch, power)
+    t_u = device_round_delay_dev(cfg, ch, payload_bits, rho, power,
+                                 rate=rate)
+    filled = jnp.sum(admitted.astype(jnp.int32)) >= buffer_size
+    last = jnp.max(jnp.where(admitted, t_u, 0.0))
+    delay = jnp.where(filled, last,
+                      jnp.minimum(deadline, jnp.max(t_u))) \
+        + ltfl.server_delay
+    energy = jnp.sum(device_round_energy_dev(
+        cfg, ch, payload_bits, rho, power, rate=rate))
+    return delay, energy, t_u

@@ -1,5 +1,7 @@
+from repro.fed.async_engine import AsyncRunner
 from repro.fed.population import (
     ChannelAwareSampler,
+    ChurnSpec,
     CohortSampler,
     EnergyAwareSampler,
     Population,
@@ -38,6 +40,8 @@ __all__ = [
     "RoundRecord",
     "RoundLog",
     "ScanRunner",
+    "AsyncRunner",
+    "ChurnSpec",
     "SweepSpec",
     "LaneSpec",
     "make_scanned_step",

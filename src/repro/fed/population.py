@@ -24,7 +24,13 @@ client-scheduling literature). This module is that layer:
   exact pi = U/N), ``ChannelAwareSampler`` (top-U by expected uplink rate
   at a reference power — deterministic, so no inclusion probabilities) and
   ``EnergyAwareSampler`` (probability proportional to per-round energy
-  headroom, first-order pi ~ U * w_i).
+  headroom; inclusion probabilities are the EXACT weighted
+  without-replacement pi_i via ``gumbel_topk_inclusion``, not the
+  first-order U * w_i approximation).
+* ``ChurnSpec`` declares Bernoulli arrival/departure processes over the
+  registry plus drop-mid-upload faults — consumed by the buffered-async
+  engine (repro.fed.async_engine), which expresses them in-scan as
+  masked arrivals so the registry layout never changes.
 
 ``FedRunner`` gathers the cohort's (U,) ``ChannelState`` view each round
 (``ChannelState.take``); Algorithm 1, delay/energy and the Gamma gap run
@@ -314,6 +320,36 @@ def host_sync(population: Population, pop: PopulationArrays) -> None:
     population.epoch = int(pop.epoch)
 
 
+@dataclass(frozen=True)
+class ChurnSpec:
+    """Bernoulli device churn over the registry, for the async engine.
+
+    Each round, every alive device departs with probability ``p_depart``
+    and every departed device returns with probability ``p_return`` (a
+    two-state Markov chain over the (N,) registry — stationary alive
+    fraction p_return / (p_depart + p_return) when both are positive).
+    Independently, each scheduled upload is dropped mid-flight with
+    probability ``p_drop`` (the device trained and transmitted — its
+    energy is spent — but the update never completes).
+
+    The async engine consumes this as MASKED ARRIVALS inside the scan:
+    the registry, sampler and channel state never change shape or
+    layout; a dead or dropped device simply never arrives, so its
+    update is excluded from the buffer and its staleness keeps aging.
+    """
+
+    p_depart: float = 0.0
+    p_return: float = 0.0
+    p_drop: float = 0.0
+
+    def __post_init__(self):
+        for name in ("p_depart", "p_return", "p_drop"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be a probability in "
+                                 f"[0, 1], got {v}")
+
+
 # --------------------------------------------------------------------------- #
 # Cohort samplers (the scheduler protocol)
 # --------------------------------------------------------------------------- #
@@ -361,10 +397,12 @@ class CohortSampler:
         sharded registry and the draw is the two-stage per-shard-top-k +
         merge (module docstring; repro.control.device_samplers). None
         when this scheduler has no sharded twin — the runner raises at
-        construction. Sharded twins keep the host samplers' inclusion-
-        probability conventions (exact U/N uniform, first-order
-        pi ~ min(1, U w_i) energy-aware) — the merge is an exact draw
-        from the same distribution, so pi is unchanged by sharding."""
+        construction. The merge is an exact draw from the host sampler's
+        distribution; reported inclusion probabilities are exact U/N for
+        uniform, but the sharded energy-aware twin keeps the FIRST-ORDER
+        pi ~ min(1, U w_i) (the exact per-device pi needs the full (N,)
+        weight vector on one shard, which the registry layout forbids —
+        the unsharded twin and host sampler are exact)."""
         return None
 
 
@@ -440,6 +478,67 @@ class ChannelAwareSampler(CohortSampler):
             mesh, power=self.power, explore=self.explore)
 
 
+def gumbel_topk_inclusion(w, k: int, n_quad: int = 64) -> np.ndarray:
+    """Exact inclusion probabilities for weighted sampling w/o replacement.
+
+    Gumbel-top-k with log-weights log w_j is the exponential race: draw
+    X_j ~ Exp(w_j) and keep the k smallest — the same distribution as
+    numpy's sequential renormalized ``choice(replace=False, p=w)``
+    (Plackett-Luce). Conditioning on X_i = x, device j beats i with
+    probability p_j(x) = 1 - e^{-w_j x}, so
+
+        pi_i = ∫ w_i e^{-w_i x} P[PoisBin({p_j(x)}_{j≠i}) <= k-1] dx.
+
+    Substituting s = e^{-x} and then, PER DEVICE, v = s^{N w_i} (sum w =
+    1, so N w_i ~ 1) absorbs the race density exactly:
+
+        pi_i = ∫_0^1 Q_i(v^{1/(N w_i)}) dv,
+
+    a bounded monotone integrand with no endpoint singularity — the raw
+    s-integrand carries an s^{N w_i - 1} factor that is singular for
+    light devices and makes fixed-node quadrature converge hopelessly
+    slowly when k is close to N. ``n_quad``-node Gauss-Legendre on the
+    v-form is essentially exact for every k. Per (device, node),
+    Q_i is a truncated Poisson-binomial forward DP with device i's own
+    arrival probability forced to zero (the leave-one-out convolution
+    without the numerically-unstable deconvolution) — O(N^2 k n_quad)
+    total, chunked over i to bound memory, and cached per
+    (population, config, k) by the sampler.
+
+    Analytic pins (tested): k = 1 gives pi = w exactly; uniform weights
+    give k/N; k >= N gives all-ones; sum_i pi_i = k.
+    """
+    w = np.asarray(w, np.float64)
+    n = w.shape[0]
+    if k >= n:
+        return np.ones(n)
+    w = w / np.sum(w)
+    a = n * w                                   # race exponents, ~O(1)
+    nodes, qwts = np.polynomial.legendre.leggauss(n_quad)
+    v = 0.5 * (nodes + 1.0)                     # map [-1, 1] -> (0, 1)
+    qwts = 0.5 * qwts
+    log_v = np.log(v)                           # (Q,)
+    pi = np.empty(n)
+    blk = max(1, int(4e6) // (n * n_quad))      # ~32 MB f64 per chunk
+    for i0 in range(0, n, blk):
+        idx = np.arange(i0, min(i0 + blk, n))
+        # per-device nodes s_i(v) = v^(1/a_i); p_j = 1 - s^(a_j)
+        log_s = log_v[None, :] / a[idx, None]            # (B, Q)
+        p = 1.0 - np.exp(log_s[:, :, None] * a[None, None, :])
+        p[np.arange(idx.size), :, idx] = 0.0             # leave i out
+        q = 1.0 - p
+        # truncated Poisson-binomial DP: F[b, m, c] = P(count == c),
+        # counts beyond k-1 dropped (they can never rejoin the CDF)
+        F = np.zeros((idx.size, n_quad, k))
+        F[:, :, 0] = 1.0
+        for j in range(n):
+            Fp = q[:, :, j:j + 1] * F
+            Fp[:, :, 1:] += p[:, :, j:j + 1] * F[:, :, :-1]
+            F = Fp
+        pi[idx] = F.sum(axis=2) @ qwts          # ∫ P(count <= k-1) dv
+    return np.clip(pi, 0.0, 1.0)
+
+
 @dataclass
 class EnergyAwareSampler(CohortSampler):
     """Probability proportional to per-round energy headroom.
@@ -447,9 +546,11 @@ class EnergyAwareSampler(CohortSampler):
     A device's headroom is E^max minus its full (rho = 0) local-training
     energy (Eq. 35): devices whose compute alone (nearly) exhausts the
     budget are (nearly) never scheduled.  Sampling is weighted without
-    replacement; the reported inclusion probabilities use the standard
-    first-order approximation pi_i ~ min(1, U * w_i) for Horvitz-Thompson
-    style unbiased aggregation.
+    replacement; the reported inclusion probabilities are the EXACT
+    without-replacement pi_i (``gumbel_topk_inclusion``) — the old
+    first-order min(1, U * w_i) overstates pi for heavy devices and
+    understates it for light ones, a bias that Horvitz-Thompson
+    aggregation (and now the staleness-HT Gamma) inherits directly.
 
     Headroom depends only on static device attributes (CPU frequency,
     shard size), so the O(N) weight vector is computed once per
@@ -461,6 +562,8 @@ class EnergyAwareSampler(CohortSampler):
 
     min_headroom: float = 1e-6         # floor so every pi_i stays positive
     _cache: Optional[Tuple[Any, Any, np.ndarray]] = \
+        field(default=None, repr=False, compare=False)
+    _pi_cache: Optional[Tuple[Any, Any, int, np.ndarray]] = \
         field(default=None, repr=False, compare=False)
 
     def headroom(self, population: Population, ltfl: LTFLConfig
@@ -478,11 +581,23 @@ class EnergyAwareSampler(CohortSampler):
         self._cache = (weakref.ref(population), ltfl, w)
         return w
 
+    def _inclusion(self, population, ltfl, cohort_size) -> np.ndarray:
+        if self._pi_cache is not None:
+            pop_ref, cfg, k, pi = self._pi_cache
+            if pop_ref() is population and cfg is ltfl \
+                    and k == cohort_size:
+                return pi
+        pi = gumbel_topk_inclusion(self._norm_weights(population, ltfl),
+                                   cohort_size)
+        self._pi_cache = (weakref.ref(population), ltfl, cohort_size, pi)
+        return pi
+
     def select(self, population, cohort_size, rnd, rng, ltfl):
         w = self._norm_weights(population, ltfl)
         idx = np.sort(rng.choice(population.num_devices, size=cohort_size,
                                  replace=False, p=w))
-        pi = np.clip(cohort_size * w[idx], 1e-9, 1.0)
+        pi_all = self._inclusion(population, ltfl, cohort_size)
+        pi = np.clip(pi_all[idx], 1e-9, 1.0)
         return idx.astype(np.int64), pi
 
     def device_twin(self, runner) -> DeviceSamplerTwin:

@@ -121,6 +121,10 @@ class RoundRecord:
     # participation (the identity cohort is derivable from the record).
     cohort: List[int] = field(default_factory=list)
     participation: float = 1.0
+    # buffered-async engine (repro.fed.async_engine): mean staleness tau
+    # over the round's cohort. 0.0 on the synchronous engines and in the
+    # async engine's sync-degenerate configuration.
+    staleness: float = 0.0
 
 
 class FedRunner:

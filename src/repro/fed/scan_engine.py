@@ -213,6 +213,10 @@ class RoundLog(NamedTuple):
     rho_mean: jax.Array     # (R,)  mean of the round's applied controls
     delta_mean: jax.Array   # (R,)
     power_mean: jax.Array   # (R,)
+    # buffered-async fields (repro.fed.async_engine); None on the
+    # synchronous engine, where the pytree simply has no such leaves
+    tau: Optional[jax.Array] = None       # (R, U) staleness tau_i
+    admitted: Optional[jax.Array] = None  # (R, U) buffer admission mask
 
 
 def make_scanned_step(step_fn: Callable) -> Callable:
@@ -327,6 +331,13 @@ class ScanRunner(FedRunner):
     via ``scan_recontrol_every`` (``control="device"`` additionally needs
     ``scan_control_program`` whenever that cadence is nonzero).
     """
+
+    # Buffered-async spec — set by AsyncRunner (repro.fed.async_engine),
+    # which also provides the ``_admission`` hook the scan bodies call.
+    # None means the synchronous engine: every async branch in ``_segment``
+    # is a python-level conditional that folds away at trace time, so the
+    # sync traces are structurally unchanged.
+    _async: Optional[Any] = None
 
     def __init__(self, model, params, ltfl, train, test, scheme, *,
                  rng: str = "host", control: str = "host",
@@ -736,6 +747,7 @@ class ScanRunner(FedRunner):
         w = ltfl.wireless
         step_fn = self._step_fn
         data = self._data_dev
+        asy = self._async
         unbiased = self.participation == "unbiased"
         U, N, B = self.num_devices, self.population_size, self.batch_size
         block_fading = self.block_fading
@@ -754,7 +766,8 @@ class ScanRunner(FedRunner):
 
         def finish(params, opt_state, comp_state, range_sq, batch, ch,
                    cohort, weights, alpha, inclusion, key,
-                   rho, delta, power, payload, r):
+                   rho, delta, power, payload, r,
+                   tau=None, admitted=None, accounting=None):
             # the learning rate is a LANED leaf (per-lane traced under the
             # sweep vmap); the step routes it to update_with_lr — bitwise
             # equal to the baked-lr solo path (repro.optim.Optimizer)
@@ -766,8 +779,11 @@ class ScanRunner(FedRunner):
             params, opt_state, comp_state, m = step_fn(
                 params, opt_state, comp_state, batch, controls, key)
             range_sq = range_sq.at[cohort].set(m["range_sq"])
-            delay, energy = round_accounting_dev(
-                ltfl, ch, payload, rho, power)
+            if accounting is None:
+                delay, energy = round_accounting_dev(
+                    ltfl, ch, payload, rho, power)
+            else:                        # async: buffered-round accounting
+                delay, energy = accounting
             pers = packet_error_rate_dev(w, ch, power)
             # gamma's inputs only — the Eq. 29 reduction happens on host
             # in f64 (_absorb_segment), NOT here: one numpy code path for
@@ -792,22 +808,40 @@ class ScanRunner(FedRunner):
                            agg_denom=denom, cohort=cohort,
                            test_acc=acc, rho_mean=jnp.mean(rho),
                            delta_mean=jnp.mean(delta),
-                           power_mean=jnp.mean(power))
+                           power_mean=jnp.mean(power),
+                           tau=tau, admitted=admitted)
             return params, opt_state, comp_state, range_sq, log
 
         if xs is not None:               # host rng: stacked replay inputs
             def body(carry, x):
+                if asy is not None:      # async state rides as LAST leaf
+                    carry, astate = carry[:-1], carry[-1]
                 params, opt_state, comp_state, range_sq = carry
                 ch = ChannelArrays(x["distance"], x["fading"],
                                    x["interference"], x["cpu"], x["ns"])
                 batch = {k: arr[x["batch_idx"]] for k, arr in data.items()}
+                weights, alpha, inclusion = (x["weights"], x["alpha"],
+                                             x.get("inclusion"))
+                tau = admitted = accounting = None
+                if asy is not None:
+                    masks = ((x["alive_c"], x["drop"])
+                             if "alive_c" in x else None)
+                    (alpha, weights, inclusion, tau, admitted, accounting,
+                     astate) = self._admission(
+                        ltfl, ch, x["cohort"], alpha, weights, inclusion,
+                        consts["rho"], consts["power"], consts["payload"],
+                        astate, None, masks)
                 params, opt_state, comp_state, range_sq, log = finish(
                     params, opt_state, comp_state, range_sq, batch, ch,
-                    x["cohort"], x["weights"], x["alpha"],
-                    x.get("inclusion"), x["key"],
+                    x["cohort"], weights, alpha,
+                    inclusion, x["key"],
                     consts["rho"], consts["delta"], consts["power"],
-                    consts["payload"], jnp.int32(0))
-                return (params, opt_state, comp_state, range_sq), log
+                    consts["payload"], jnp.int32(0),
+                    tau=tau, admitted=admitted, accounting=accounting)
+                out = (params, opt_state, comp_state, range_sq)
+                if asy is not None:
+                    out = out + (astate,)
+                return out, log
 
             return jax.lax.scan(body, carry, xs)
 
@@ -815,6 +849,8 @@ class ScanRunner(FedRunner):
         # ``decide`` is a python bool: the round body is traced once per
         # decide value actually used, and hold bodies contain no solve
         def body_dev(carry, r, decide=True):
+            if asy is not None:          # async state rides as LAST leaf
+                carry, astate = carry[:-1], carry[-1]
             if program is not None:
                 (params, opt_state, comp_state, range_sq,
                  fading, interference, key, ctl_state) = carry
@@ -822,8 +858,16 @@ class ScanRunner(FedRunner):
                 (params, opt_state, comp_state, range_sq,
                  fading, interference, key) = carry
                 ctl_state = None
-            key, k_fade, k_cohort, k_batch, k_alpha, k_step, k_ctl = \
-                jax.random.split(key, 7)
+            if asy is not None and asy.churn is not None:
+                # one EXTRA split only when churn draws in-scan; the
+                # churn-free async key stream stays bitwise-identical to
+                # the synchronous engine's (the degenerate-case contract)
+                (key, k_fade, k_cohort, k_batch, k_alpha, k_step, k_ctl,
+                 k_churn) = jax.random.split(key, 8)
+            else:
+                key, k_fade, k_cohort, k_batch, k_alpha, k_step, k_ctl = \
+                    jax.random.split(key, 7)
+                k_churn = None
             if block_fading:
                 # eager full-population redraw: O(N) vectorized on device
                 # (the host loop's LAZY per-cohort refresh is a host-side
@@ -861,10 +905,17 @@ class ScanRunner(FedRunner):
                 weights, inclusion = ch.num_samples / pi, pi
             else:
                 weights, inclusion = ch.num_samples, None
+            tau = admitted = accounting = None
+            if asy is not None:
+                (alpha, weights, inclusion, tau, admitted, accounting,
+                 astate) = self._admission(
+                    ltfl, ch, cohort, alpha, weights, inclusion,
+                    rho, power, payload, astate, k_churn, None)
             params, opt_state, comp_state, range_sq, log = finish(
                 params, opt_state, comp_state, range_sq, batch, ch,
                 cohort, weights, alpha, inclusion, k_step,
-                rho, delta, power, payload, r)
+                rho, delta, power, payload, r,
+                tau=tau, admitted=admitted, accounting=accounting)
             if program is not None and program.feedback is not None:
                 ctl_state = program.feedback(ctl_state, cohort,
                                              log.train_loss, log.delay)
@@ -872,6 +923,8 @@ class ScanRunner(FedRunner):
                    fading, interference, key)
             if program is not None:
                 out = out + (ctl_state,)
+            if asy is not None:
+                out = out + (astate,)
             return out, log
 
         # sharded registry: the (N_pad,) population leaves stay laid out
@@ -882,6 +935,8 @@ class ScanRunner(FedRunner):
         mesh = self._pop_mesh
 
         def body_dev_sharded(carry, r, decide=True):
+            if asy is not None:          # async state rides as LAST leaf
+                carry, astate = carry[:-1], carry[-1]
             if program is not None:
                 (params, opt_state, comp_state, range_sq, fading,
                  interference, fading_epoch, epoch, key, ctl_state) = carry
@@ -889,8 +944,13 @@ class ScanRunner(FedRunner):
                 (params, opt_state, comp_state, range_sq, fading,
                  interference, fading_epoch, epoch, key) = carry
                 ctl_state = None
-            key, k_fade, k_cohort, k_batch, k_alpha, k_step, k_ctl = \
-                jax.random.split(key, 7)
+            if asy is not None and asy.churn is not None:
+                (key, k_fade, k_cohort, k_batch, k_alpha, k_step, k_ctl,
+                 k_churn) = jax.random.split(key, 8)
+            else:
+                key, k_fade, k_cohort, k_batch, k_alpha, k_step, k_ctl = \
+                    jax.random.split(key, 7)
+                k_churn = None
             if block_fading:
                 epoch = epoch + 1        # new epoch; realizations lazy
             pop = PopulationArrays(
@@ -932,10 +992,19 @@ class ScanRunner(FedRunner):
                 weights, inclusion = ch.num_samples / pi, pi
             else:
                 weights, inclusion = ch.num_samples, None
+            tau = admitted = accounting = None
+            if asy is not None:
+                # async state stays REPLICATED (N,) — ordinary ops on the
+                # gathered (replicated) cohort view, outside shard_map
+                (alpha, weights, inclusion, tau, admitted, accounting,
+                 astate) = self._admission(
+                    ltfl, ch, cohort, alpha, weights, inclusion,
+                    rho, power, payload, astate, k_churn, None)
             params, opt_state, comp_state, range_sq, log = finish(
                 params, opt_state, comp_state, range_sq, batch, ch,
                 cohort, weights, alpha, inclusion, k_step,
-                rho, delta, power, payload, r)
+                rho, delta, power, payload, r,
+                tau=tau, admitted=admitted, accounting=accounting)
             if program is not None and program.feedback is not None:
                 ctl_state = program.feedback(ctl_state, cohort,
                                              log.train_loss, log.delay)
@@ -943,6 +1012,8 @@ class ScanRunner(FedRunner):
                    fading, interference, fading_epoch, epoch, key)
             if program is not None:
                 out = out + (ctl_state,)
+            if asy is not None:
+                out = out + (astate,)
             return out, log
 
         rounds = consts["r0"] + jnp.arange(length, dtype=jnp.int32)
@@ -1040,11 +1111,18 @@ class ScanRunner(FedRunner):
                 if log.inclusion is not None else None)
         denoms = (np.asarray(log.agg_denom, np.float64)
                   if log.agg_denom is not None else None)
+        # async: per-device staleness rides the log and enters the same
+        # host float64 Eq. 29 reduction (the staleness-HT convention —
+        # repro.core.convergence module docstring). tau = 0 adds exactly
+        # +0.0, so the sync-degenerate gammas stay bitwise.
+        taus = (np.asarray(log.tau, np.float64)
+                if log.tau is not None else None)
         gammas = np.asarray([
             gamma(self.ltfl, rsqs[i], gds[i], rhos_u[i], perss[i], nss[i],
                   **({"inclusion": incl[i],
                       "population_samples": float(denoms[i])}
-                     if incl is not None else {}))
+                     if incl is not None else {}),
+                  **({"staleness": taus[i]} if taus is not None else {}))
             for i in range(b - a)], np.float64)
         accs = np.asarray(log.test_acc, np.float64)
         rho_means = np.asarray(log.rho_mean, np.float64)
@@ -1084,6 +1162,8 @@ class ScanRunner(FedRunner):
                             else float(np.mean(ctl.power))),
                 cohort=cohorts[i].tolist() if partial else [],
                 participation=self.cohort_size / self.population_size,
+                staleness=(float(np.mean(taus[i]))
+                           if taus is not None else 0.0),
             )
             self.history.append(rec)
             if not in_scan_feedback:
@@ -1164,17 +1244,32 @@ class ScanRunner(FedRunner):
     # ------------------------------------------------------------------ #
     # vmap over lanes (seeds, schemes, regimes, cohort grids)
     # ------------------------------------------------------------------ #
+    def _lane_extra_kwargs(self) -> Dict[str, Any]:
+        """Engine-specific constructor kwargs a lane must inherit from
+        the parent ({} here; AsyncRunner forwards its deadline / buffer /
+        churn spec so lanes run the same async scenario)."""
+        return {}
+
+    def _engine_signature(self) -> tuple:
+        """Engine statics baked into the compiled segment beyond the
+        base ScanRunner set (() here; AsyncRunner contributes its
+        deadline / buffer-size / churn constants)."""
+        return ()
+
     def _build_lane(self, spec: LaneSpec) -> "ScanRunner":
         """A lane runner: the parent's construction inputs with the
-        spec's seed / scheme / config / kwargs overrides applied."""
+        spec's seed / scheme / config / kwargs overrides applied.
+        ``type(self)`` keeps subclasses (AsyncRunner) laning as
+        themselves."""
         c = self._ctor
         kw = dict(c["kwargs"])
+        kw.update(self._lane_extra_kwargs())
         if spec.kwargs:
             kw.update(spec.kwargs)
         kw["seed"] = int(spec.seed)
         scheme = (spec.scheme_factory() if spec.scheme_factory is not None
                   else copy.deepcopy(self._scheme_proto))
-        lane = ScanRunner(c["model"], c["params"],
+        lane = type(self)(c["model"], c["params"],
                           spec.ltfl if spec.ltfl is not None else c["ltfl"],
                           c["train"], c["test"], scheme, rng=self.rng,
                           control=self.control,
@@ -1190,7 +1285,8 @@ class ScanRunner(FedRunner):
         lane silently run under another lane's constants."""
         sig = (lane._scan_shape_signature(), lane.rng, lane.control,
                lane.max_segment, type(lane.sampler).__name__,
-               lane.scheme.scan_lane_signature(lane))
+               lane.scheme.scan_lane_signature(lane),
+               lane._engine_signature())
         if lane.rng == "device" and \
                 not isinstance(lane.sampler, UniformSampler):
             # channel-/energy-aware sampler twins close over host config

@@ -21,6 +21,7 @@ re-control).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Dict, Optional
 
@@ -113,6 +114,16 @@ class BaseScheme:
     def post_round(self, rnd: int, metrics: Dict[str, float]) -> None:
         pass
 
+    def configure_async(self, runner) -> None:
+        """Hook called once by ``AsyncRunner`` (repro.fed.async_engine)
+        after ``setup``: adapt the scheme's control problem to the
+        buffered-async round shape. Default: nothing — stateless
+        schemes' controls don't depend on the round-closure rule, and
+        feedback-driven schemes (FedMP's bandit) already learn from the
+        logged per-round delay, which under the async engine IS the
+        buffered-round delay. ``LTFLScheme`` overrides this to clamp
+        Algorithm 1's delay budget to the straggler deadline."""
+
     # helpers ----------------------------------------------------------- #
     def _full_bits(self, rho=0.0) -> np.ndarray:
         u = self.runner.num_devices
@@ -138,6 +149,10 @@ class LTFLScheme(BaseScheme):
         self._decision: Optional[controller_mod.ControlDecision] = None
         self._solved_epoch: int = -1
         self._solved_cohort: int = -1
+        # async engine: Algorithm 1's effective T^max (None = the
+        # config's); set by configure_async when a straggler deadline
+        # tightens the per-round delay budget
+        self._async_t_max: Optional[float] = None
         # how many TRACES embedded the Algorithm-1 solve (not how many
         # rounds ran it) — the cadence tests pin that hold-round traces
         # stay solve-free
@@ -157,9 +172,24 @@ class LTFLScheme(BaseScheme):
             return 1
         return self.recontrol_every or 0
 
+    def configure_async(self, runner) -> None:
+        """Clamp Algorithm 1's per-round delay budget to the straggler
+        deadline: controls that let a device finish after the deadline
+        buy nothing (the update misses the buffer), so the solver should
+        treat min(T^max, deadline + server delay) as the binding Eq. 30b
+        constraint. Infinite deadlines (the sync-degenerate case) leave
+        the budget — and therefore every solve — untouched."""
+        deadline = runner._async.deadline
+        if np.isfinite(deadline):
+            budget = deadline + runner.ltfl.server_delay
+            if budget < runner.ltfl.t_max:
+                self._async_t_max = float(budget)
+
     def _solve(self):
         r = self.runner
         ltfl = r.ltfl
+        if self._async_t_max is not None:
+            ltfl = dataclasses.replace(ltfl, t_max=self._async_t_max)
         ch = r.channel
         if not self.use_power:
             # fixed mid power, closed-form rho/delta only (one batched

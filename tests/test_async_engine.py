@@ -1,0 +1,353 @@
+"""Buffered-async engine (repro.fed.async_engine): the sync-degenerate
+bitwise contract, buffered admission + staleness dynamics against a host
+replay, churn mask invariants, and the staleness-HT Gamma convention.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import LTFLConfig
+from repro.core.convergence import gamma_dev, gap_terms
+from repro.data import ArrayDataset, synthetic_cifar
+from repro.fed import (
+    AsyncRunner,
+    ChurnSpec,
+    FedSGDScheme,
+    LTFLScheme,
+    ScanRunner,
+    STCScheme,
+)
+from repro.models import MLP
+
+LTFL = LTFLConfig(num_devices=4, samples_min=40, samples_max=60,
+                  bo_iters=3, alt_max_iters=2)
+
+# round delay in this world is ~358 s (all four devices finish within a
+# few seconds of each other); this deadline admits some but not all
+DEADLINE = 350.0
+
+
+@pytest.fixture(scope="module")
+def world():
+    imgs, labels = synthetic_cifar(600, seed=0)
+    timgs, tlabels = synthetic_cifar(128, seed=1)
+    train = ArrayDataset({"images": imgs, "labels": labels})
+    test = ArrayDataset({"images": timgs, "labels": tlabels})
+    model = MLP()
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params, train, test
+
+
+def assert_history_bitwise(h_sync, h_async):
+    """The degenerate contract is BITWISE, not tolerance: identical key
+    streams, identical op order, masks that are arithmetic identities."""
+    assert len(h_sync) == len(h_async)
+    for a, b in zip(h_sync, h_async):
+        for f in ("round", "train_loss", "delay", "energy", "cum_delay",
+                  "cum_energy", "gamma", "rho_mean", "delta_mean",
+                  "power_mean", "received", "cohort", "participation",
+                  "staleness"):
+            va, vb = getattr(a, f), getattr(b, f)
+            if isinstance(va, float) and np.isnan(va):
+                assert np.isnan(vb), (f, a.round)
+            else:
+                assert va == vb, (f, a.round, va, vb)
+        if np.isnan(a.test_acc):
+            assert np.isnan(b.test_acc)
+        else:
+            assert a.test_acc == b.test_acc
+
+
+# --------------------------------------------------------------------------- #
+# the sync-degenerate contract
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("rng_mode", ["host", "device"])
+def test_degenerate_async_is_scanrunner_bitwise(world, rng_mode):
+    """deadline=inf, buffer=U, no churn: AsyncRunner IS ScanRunner,
+    bit for bit, on both rng modes — every mask is an identity and the
+    device key stream never shifts (churn=None keeps the 7-way split)."""
+    model, params, train, test = world
+    sync = ScanRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                      batch_size=8, seed=0, eval_every=2, rng=rng_mode)
+    asyn = AsyncRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                       batch_size=8, seed=0, eval_every=2, rng=rng_mode)
+    assert_history_bitwise(sync.run(6), asyn.run(6))
+    assert all(r["n_admitted"] == LTFL.num_devices
+               for r in asyn.async_history)
+    assert np.all(asyn.staleness == 0.0)
+
+
+def test_degenerate_stateful_compressor_bitwise(world):
+    """STC's error-feedback residual rides the same carry either way."""
+    model, params, train, test = world
+    sync = ScanRunner(model, params, LTFL, train, test, STCScheme(),
+                      batch_size=8, seed=0, eval_every=0)
+    asyn = AsyncRunner(model, params, LTFL, train, test, STCScheme(),
+                       batch_size=8, seed=0, eval_every=0)
+    assert_history_bitwise(sync.run(5), asyn.run(5))
+
+
+# --------------------------------------------------------------------------- #
+# buffered admission + staleness against a host replay
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("rng_mode", ["host", "device"])
+def test_staleness_dynamics_replay(world, rng_mode):
+    """tau evolves exactly as documented: admitted devices reset to 0,
+    scheduled-but-not-admitted devices age by 1, unscheduled devices
+    keep their counter — replayed on host from the per-round admission
+    masks the engine logs."""
+    model, params, train, test = world
+    r = AsyncRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                    batch_size=8, seed=0, eval_every=0, rng=rng_mode,
+                    deadline=DEADLINE, buffer_size=2)
+    h = r.run(8)
+    tau = np.zeros(LTFL.num_devices)
+    for rec, arec in zip(h, r.async_history):
+        cohort = (np.asarray(rec.cohort, int) if rec.cohort
+                  else np.arange(LTFL.num_devices))
+        np.testing.assert_array_equal(arec["tau"], tau[cohort])
+        assert rec.staleness == pytest.approx(
+            float(np.mean(tau[cohort])))
+        adm = arec["admitted"]
+        assert arec["n_admitted"] == int(adm.sum()) <= 2
+        tau[cohort] = np.where(adm, 0.0, tau[cohort] + 1.0)
+    np.testing.assert_array_equal(r.staleness, tau)
+
+
+def test_buffer_closes_round_early(world):
+    """A filled buffer closes the round at the K-th arrival: the logged
+    delay must be strictly below the synchronous straggler-gated delay,
+    and admitted counts never exceed K."""
+    model, params, train, test = world
+    sync = ScanRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                      batch_size=8, seed=0, eval_every=0)
+    h_sync = sync.run(4)
+    asyn = AsyncRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                       batch_size=8, seed=0, eval_every=0,
+                       buffer_size=1)          # deadline=inf: K closes it
+    h_async = asyn.run(4)
+    for a, b in zip(h_sync, h_async):
+        assert b.delay < a.delay
+    assert all(r["n_admitted"] == 1 for r in asyn.async_history)
+    # stragglers still burn their full energy (Eq. 37 unchanged)
+    for a, b in zip(h_sync, h_async):
+        assert b.energy == pytest.approx(a.energy, rel=1e-6)
+
+
+def test_deadline_excludes_stragglers(world):
+    """A deadline below every completion time admits nobody; received
+    drops to zero while the round still charges the deadline + server
+    delay and full energy."""
+    model, params, train, test = world
+    r = AsyncRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                    batch_size=8, seed=0, eval_every=0, deadline=10.0)
+    h = r.run(3)
+    assert all(rec["n_admitted"] == 0 for rec in r.async_history)
+    assert all(rec.received == 0 for rec in h)
+    for rec in h:
+        assert rec.delay == pytest.approx(10.0 + LTFL.server_delay)
+    # everyone scheduled-but-missed ages together
+    np.testing.assert_array_equal(r.staleness,
+                                  np.full(LTFL.num_devices, 3.0))
+
+
+def test_async_validation(world):
+    model, params, train, test = world
+    with pytest.raises(ValueError, match="deadline"):
+        AsyncRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                    deadline=0.0)
+    with pytest.raises(ValueError, match="buffer_size"):
+        AsyncRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                    buffer_size=5)
+    with pytest.raises(TypeError, match="ChurnSpec"):
+        AsyncRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                    churn=0.5)
+    with pytest.raises(ValueError):
+        ChurnSpec(p_depart=1.5)
+
+
+# --------------------------------------------------------------------------- #
+# churn mask invariants
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("rng_mode", ["host", "device"])
+def test_churn_all_departed_never_admits(world, rng_mode):
+    """p_depart=1, p_return=0: the whole fleet is gone from round one —
+    nothing is ever admitted on either rng path, yet shapes, schedules
+    and the registry are untouched (the masked-arrival contract)."""
+    model, params, train, test = world
+    r = AsyncRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                    batch_size=8, seed=0, eval_every=0, rng=rng_mode,
+                    churn=ChurnSpec(p_depart=1.0, p_return=0.0))
+    h = r.run(4)
+    assert all(rec["n_admitted"] == 0 for rec in r.async_history)
+    assert all(rec.received == 0 for rec in h)
+    assert all(len(rec.cohort) in (0, LTFL.num_devices) for rec in h)
+
+
+@pytest.mark.parametrize("rng_mode", ["host", "device"])
+def test_churn_drop_mid_upload(world, rng_mode):
+    """p_drop=1 with everyone alive: every upload faults in flight —
+    admissions zero, but (unlike a departed device) the energy is still
+    burned and the round closes at the deadline."""
+    model, params, train, test = world
+    r = AsyncRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                    batch_size=8, seed=0, eval_every=0, rng=rng_mode,
+                    deadline=DEADLINE,
+                    churn=ChurnSpec(p_drop=1.0))
+    h = r.run(3)
+    assert all(rec["n_admitted"] == 0 for rec in r.async_history)
+    for rec in h:
+        assert rec.delay == pytest.approx(DEADLINE + LTFL.server_delay)
+        assert rec.energy > 0.0
+
+
+def test_churn_zero_probabilities_degenerate(world):
+    """ChurnSpec(0, 0, 0) must reproduce the no-churn trajectory on the
+    HOST rng path (masks are computed but all-alive/no-drop, and the
+    replay stream is separate from the churn stream). The device path is
+    excluded by design: churn != None switches to the 8-way key split."""
+    model, params, train, test = world
+    base = AsyncRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                       batch_size=8, seed=0, eval_every=0, rng="host",
+                       deadline=DEADLINE, buffer_size=2)
+    churned = AsyncRunner(model, params, LTFL, train, test,
+                          FedSGDScheme(), batch_size=8, seed=0,
+                          eval_every=0, rng="host", deadline=DEADLINE,
+                          buffer_size=2,
+                          churn=ChurnSpec(0.0, 0.0, 0.0))
+    assert_history_bitwise(base.run(5), churned.run(5))
+
+
+def test_churn_stationary_fraction(world):
+    """Over many rounds the alive fraction concentrates near the chain's
+    stationary point p_return / (p_depart + p_return)."""
+    model, params, train, test = world
+    spec = ChurnSpec(p_depart=0.3, p_return=0.3)
+    r = AsyncRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                    batch_size=8, seed=0, eval_every=0, rng="device",
+                    buffer_size=4, churn=spec)   # deadline=inf: only
+    # churn gates admission, so n_admitted counts the alive cohort
+    r.run(40)
+    # admitted <= alive: the time-average admission count under a
+    # generous deadline tracks the stationary alive fraction
+    frac = np.mean([rec["n_admitted"] for rec in r.async_history]) / 4
+    assert 0.25 <= frac <= 0.75          # stationary point is 0.5
+
+
+# --------------------------------------------------------------------------- #
+# staleness-HT Gamma
+# --------------------------------------------------------------------------- #
+def test_gamma_staleness_zero_is_exact_noop():
+    """tau = 0 adds EXACTLY +0.0 to both the host f64 and device f32
+    Gamma paths — the degenerate-bitwise contract depends on it."""
+    ltfl = LTFLConfig(num_devices=3, samples_min=40, samples_max=60)
+    ns = np.array([40.0, 50.0, 60.0])
+    args = (ltfl, np.full(3, 4.0), np.full(3, 0.05), np.full(3, 0.3),
+            np.full(3, 0.01), ns)
+    base = gap_terms(*args)
+    stale0 = gap_terms(*args, staleness=np.zeros(3))
+    assert stale0.staleness == 0.0
+    assert stale0.total == base.total
+    import jax.numpy as jnp
+    dev_args = tuple([ltfl] + [jnp.asarray(a, jnp.float32)
+                               for a in args[1:]])
+    g0 = gamma_dev(*dev_args)
+    g1 = gamma_dev(*dev_args, staleness=jnp.zeros(3))
+    assert float(g0) == float(g1)
+
+
+def test_gamma_staleness_monotone_and_ht_scaled():
+    """The staleness term grows monotonically with tau and is
+    Horvitz-Thompson scaled: halving a device's inclusion probability
+    doubles that device's contribution."""
+    ltfl = LTFLConfig(num_devices=3, samples_min=40, samples_max=60)
+    ns = np.array([50.0, 50.0, 50.0])
+    args = (ltfl, np.full(3, 4.0), np.full(3, 0.05), np.full(3, 0.3),
+            np.full(3, 0.01), ns)
+    prev = 0.0
+    for tau in (0.0, 1.0, 4.0, 16.0):
+        g = gap_terms(*args, staleness=np.full(3, tau))
+        assert g.staleness >= prev
+        prev = g.staleness
+    kw = dict(population_samples=float(np.sum(ns)))
+    pi_full = gap_terms(*args, staleness=np.ones(3),
+                        inclusion=np.ones(3), **kw)
+    pi_half = gap_terms(*args, staleness=np.ones(3),
+                        inclusion=np.full(3, 0.5), **kw)
+    # participation term also scales; isolate the staleness column
+    assert pi_half.staleness == pytest.approx(2.0 * pi_full.staleness)
+
+
+def test_ht_plugin_unbiased_under_exchangeable_admission():
+    """The engine's plug-in effective inclusion pi * (n_adm / U): when
+    admission within the cohort is exchangeable (iid completion times),
+    the HT estimator sum_{admitted} x_i / pi_eff_i is unbiased for the
+    population total — the convention the staleness-HT Gamma divides
+    by. A direct Monte-Carlo check of the documented estimator."""
+    rng = np.random.default_rng(7)
+    n_pop, u, k = 10, 4, 2
+    x = rng.uniform(1.0, 2.0, n_pop)
+    pi = u / n_pop                      # uniform cohorts: exact pi
+    draws = 20000
+    est = np.empty(draws)
+    for d in range(draws):
+        cohort = rng.choice(n_pop, size=u, replace=False)
+        t = rng.exponential(size=u)     # exchangeable completion times
+        admitted = cohort[np.argsort(t)[:k]]
+        pi_eff = pi * (k / u)
+        est[d] = np.sum(x[admitted] / pi_eff)
+    total = float(np.sum(x))
+    assert float(np.mean(est)) == pytest.approx(total, rel=0.03)
+
+
+def test_engine_gamma_uses_staleness(world):
+    """A buffered run's reported gamma exceeds what the same round would
+    report with the staleness term removed (pinned via gap_terms on the
+    logged tau), and staleness shows up in RoundRecord."""
+    model, params, train, test = world
+    r = AsyncRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                    batch_size=8, seed=0, eval_every=0,
+                    deadline=DEADLINE, buffer_size=1)
+    h = r.run(6)
+    assert any(rec.staleness > 0.0 for rec in h)
+    later = [rec for rec in h if rec.staleness > 0.0]
+    assert all(np.isfinite(rec.gamma) and rec.gamma > 0.0
+               for rec in later)
+
+
+# --------------------------------------------------------------------------- #
+# scheme integration + lanes
+# --------------------------------------------------------------------------- #
+def test_ltfl_scheme_deadline_budget(world):
+    """LTFLScheme.configure_async clamps Algorithm 1's per-round delay
+    budget to the deadline + server delay when that is tighter than
+    t_max, so the controller stops optimizing for delay it can't use."""
+    model, params, train, test = world
+    r = AsyncRunner(model, params, LTFL, train, test, LTFLScheme(),
+                    batch_size=8, seed=0, eval_every=0,
+                    deadline=100.0, buffer_size=3)
+    assert r.scheme._async_t_max == pytest.approx(
+        100.0 + LTFL.server_delay)
+    r.run(2)
+    loose = AsyncRunner(model, params, LTFL, train, test, LTFLScheme(),
+                        batch_size=8, seed=0, eval_every=0,
+                        deadline=float(LTFL.t_max) * 2)
+    assert loose.scheme._async_t_max is None
+
+
+def test_async_run_sweep_lanes(world):
+    """Lanes inherit the async kwargs (deadline/buffer/churn ride
+    ``_lane_extra_kwargs``) and bucket separately from sync lanes via
+    ``_engine_signature``; seeded lanes reproduce solo runs."""
+    model, params, train, test = world
+    proto = AsyncRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                        batch_size=8, seed=0, eval_every=0,
+                        deadline=DEADLINE, buffer_size=2)
+    swept = proto.run_sweep([1, 2], 4)
+    solo = AsyncRunner(model, params, LTFL, train, test, FedSGDScheme(),
+                       batch_size=8, seed=1, eval_every=0,
+                       deadline=DEADLINE, buffer_size=2).run(4)
+    assert len(swept) == 2 and all(len(hh) == 4 for hh in swept)
+    for a, b in zip(solo, swept[0]):
+        assert a.train_loss == pytest.approx(b.train_loss, rel=1e-6)
+        assert a.delay == pytest.approx(b.delay, rel=1e-6)

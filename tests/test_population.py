@@ -287,6 +287,62 @@ def test_energy_aware_sampler_avoids_exhausted_devices(rng):
         assert np.all((probs > 0) & (probs <= 1))
 
 
+def test_gumbel_topk_inclusion_analytic_pins(rng):
+    """Exact Gumbel-top-k inclusion probabilities against the cases with
+    closed forms: k=1 is the normalized weights themselves, uniform
+    weights give k/N for any k, and k >= N includes everyone. Always a
+    valid probability vector summing to k."""
+    from repro.fed.population import gumbel_topk_inclusion
+    w = rng.uniform(0.2, 3.0, 12)
+    np.testing.assert_allclose(gumbel_topk_inclusion(w, 1),
+                               w / w.sum(), rtol=1e-10)
+    np.testing.assert_allclose(gumbel_topk_inclusion(np.ones(9), 4),
+                               np.full(9, 4 / 9), rtol=1e-9)
+    np.testing.assert_array_equal(gumbel_topk_inclusion(w, 12),
+                                  np.ones(12))
+    np.testing.assert_array_equal(gumbel_topk_inclusion(w, 20),
+                                  np.ones(12))
+    for k in (2, 5, 11):
+        pi = gumbel_topk_inclusion(w, k)
+        assert np.all((pi >= 0.0) & (pi <= 1.0))
+        assert np.sum(pi) == pytest.approx(k, rel=1e-4)
+
+
+def test_gumbel_topk_inclusion_matches_empirical(rng):
+    """The quadrature against brute force: numpy's without-replacement
+    ``choice(p=w)`` is successive-sampling (Plackett-Luce), which is
+    distributionally identical to Gumbel-top-k — so empirical inclusion
+    frequencies must match the exact pi far better than the first-order
+    min(1, k w_i) proxy ever could."""
+    from repro.fed.population import gumbel_topk_inclusion
+    w = rng.uniform(0.1, 1.0, 8)
+    w[0] = 5.0                       # a dominant device: first-order
+    w /= w.sum()                     # saturates, exact must not
+    k, draws = 3, 40000
+    pi = gumbel_topk_inclusion(w, k)
+    counts = np.zeros(8)
+    for _ in range(draws):
+        counts[rng.choice(8, size=k, replace=False, p=w)] += 1
+    empirical = counts / draws
+    np.testing.assert_allclose(empirical, pi, atol=0.02)
+    err_exact = np.max(np.abs(empirical - pi))
+    err_first = np.max(np.abs(empirical - np.clip(k * w, None, 1.0)))
+    assert err_exact < err_first
+
+
+def test_energy_aware_sampler_reports_exact_inclusion(rng):
+    """The host sampler's reported pi is the exact race quadrature over
+    its cached headroom weights (clipped away from 0), gathered at the
+    cohort — pinned directly against ``gumbel_topk_inclusion``."""
+    from repro.fed.population import gumbel_topk_inclusion
+    pop = Population.sample(LTFL.wireless, 10, 100, 150, rng)
+    sampler = EnergyAwareSampler()
+    w = sampler._norm_weights(pop, LTFL)
+    pi_exact = np.clip(gumbel_topk_inclusion(w, 4), 1e-9, 1.0)
+    idx, probs = sampler.select(pop, 4, 0, rng, LTFL)
+    np.testing.assert_allclose(probs, pi_exact[idx], rtol=1e-12)
+
+
 def test_energy_aware_sampler_cache_follows_population(rng):
     """A sampler instance reused across populations (the sweep pattern)
     must recompute its cached headroom weights for each population — a
